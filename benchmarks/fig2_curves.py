@@ -1,0 +1,48 @@
+"""Paper Figure 2: server test accuracy vs cumulative communication bytes.
+
+Methods: FP32 FedAvg, FP8 QAT + biased comm (BQ = det CQ), FP8FedAvg-UQ,
+FP8FedAvg-UQ+ (server optimize). Emits a CSV curve per method.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import TASKS, run_method
+
+METHODS = [("fp32", "fp32"), ("bq", "det-cq"), ("uq", "uq"), ("uq+", "uq+")]
+
+
+def run(full: bool = False, task_name: str = "cifar100-mlp", out_rows=None):
+    if full:
+        scale = dict(rounds=200, k=100, c=0.1, local_steps=50, batch=50,
+                     n_train=20000, n_test=4000, eval_every=5)
+    else:
+        scale = dict(rounds=24, k=10, c=0.3, local_steps=10, batch=32,
+                     n_train=3000, n_test=800, eval_every=4)
+    task = TASKS[task_name]
+    rows = out_rows if out_rows is not None else []
+    for label, method in METHODS:
+        h, _ = run_method(task, method, noniid=False, **scale)
+        for r, acc, byt in zip(h.rounds, h.accuracy, h.cumulative_bytes):
+            rows.append({
+                "bench": "fig2", "task": task_name, "method": label,
+                "round": r, "acc": round(acc, 4), "mbytes": round(byt / 1e6, 3),
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--task", default="cifar100-mlp")
+    args = ap.parse_args()
+    rows = run(args.full, args.task)
+    print("bench,task,method,round,acc,mbytes")
+    for r in rows:
+        print(f"{r['bench']},{r['task']},{r['method']},{r['round']},"
+              f"{r['acc']},{r['mbytes']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""FP8 kernel microbenchmarks (CPU wall-clock; TPU perf is structural —
+see the roofline). Compares the fused Pallas path (interpret mode on CPU)
+against the unfused jnp chain, plus wire codec throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fp8
+from repro.kernels import fp8_quant, ops
+
+
+def _time(fn, *args, n=20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run(out_rows=None):
+    rows = out_rows if out_rows is not None else []
+    shape = (1024, 1024)
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    alpha = jnp.max(jnp.abs(x))
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape=shape, dtype=jnp.uint32)
+
+    jnp_det = jax.jit(lambda x, a: fp8.quantize_det(x, a))
+    t_jnp = _time(jnp_det, x, alpha)
+    t_kernel = _time(
+        lambda x, a: fp8_quant.quant_det(x, a, interpret=True), x, alpha
+    )
+    rows.append({"bench": "kernel", "name": "quant_det_jnp_1Melem",
+                 "us_per_call": round(t_jnp, 1), "derived": "baseline"})
+    rows.append({"bench": "kernel", "name": "quant_det_pallas_interp",
+                 "us_per_call": round(t_kernel, 1),
+                 "derived": "interpret-mode (structural only on CPU)"})
+
+    t_rand = _time(
+        lambda x, a, b: fp8_quant.quant_rand(x, a, b, interpret=True),
+        x, alpha, bits,
+    )
+    rows.append({"bench": "kernel", "name": "quant_rand_pallas_interp",
+                 "us_per_call": round(t_rand, 1), "derived": ""})
+
+    pack = jax.jit(lambda q, a: fp8.pack_fp8(q, a))
+    q = fp8.quantize_det(x, alpha)
+    t_pack = _time(pack, q, alpha)
+    mbps = (q.size / (t_pack / 1e6)) / 1e6
+    rows.append({"bench": "kernel", "name": "wire_pack_uint8",
+                 "us_per_call": round(t_pack, 1),
+                 "derived": f"{mbps:.0f} Melem/s"})
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench,name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['bench']},{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

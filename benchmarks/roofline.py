@@ -1,0 +1,69 @@
+"""Roofline table: read the dry-run JSON records and print §Roofline rows.
+
+Run the dry-run first (it needs the 512-device env and takes minutes per
+cell), e.g.:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun.json
+
+then:
+
+    PYTHONPATH=src python -m benchmarks.roofline experiments/dryrun.json
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            data = json.load(f)
+        recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def rows_from(recs):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append({
+                "bench": "roofline", "arch": r.get("arch"),
+                "shape": r.get("shape"), "mesh": r.get("mesh"),
+                "status": r.get("status"),
+                "reason": r.get("reason", r.get("error", ""))[:60],
+            })
+            continue
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        rows.append({
+            "bench": "roofline",
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": f"{rf['compute_s']:.3e}",
+            "memory_s": f"{rf['memory_s']:.3e}",
+            "collective_s": f"{rf['collective_s']:.3e}",
+            "dominant": rf["dominant"],
+            "roofline_frac": f"{rf['compute_s'] / max(total, 1e-30):.3f}",
+            "useful_flops_ratio": f"{r['useful_flops_ratio']:.3f}",
+        })
+    return rows
+
+
+def main():
+    paths = sys.argv[1:] or sorted(glob.glob("experiments/dryrun*.json"))
+    if not paths:
+        print("no dry-run records found; run repro.launch.dryrun first")
+        return
+    rows = rows_from(load(paths))
+    cols = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "roofline_frac", "useful_flops_ratio"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived``-style CSV rows per benchmark. The
+default budget is CPU-friendly (relative claims, small K/rounds); pass
+``--full`` for paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*",
+                    help="subset of: kernel table1 table2 fig2 format")
+    args = ap.parse_args()
+    which = set(args.only or ["kernel", "table1", "table2", "fig2"])
+
+    from . import fig2_curves, format_ablation, kernel_bench, \
+        table1_comm_gain, table2_ablation
+
+    t0 = time.time()
+    rows = []
+    if "kernel" in which:
+        kernel_bench.run(out_rows=rows)
+    if "table1" in which:
+        table1_comm_gain.run(full=args.full, out_rows=rows)
+    if "table2" in which:
+        table2_ablation.run(full=args.full, out_rows=rows)
+    if "fig2" in which:
+        fig2_curves.run(full=args.full, out_rows=rows)
+    if "format" in which:
+        format_ablation.run(full=args.full, out_rows=rows)
+
+    # uniform CSV: name,us_per_call,derived
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r["bench"] == "kernel":
+            print(f"kernel/{r['name']},{r['us_per_call']},{r['derived']}")
+        elif r["bench"] == "table1":
+            print(
+                f"table1/{r['task']}/{r['setting']}/{r['method']},"
+                f"{r.get('wall_s', '')},acc={r['final_acc']} "
+                f"gain={r['comm_gain']}x"
+            )
+        elif r["bench"] == "table2":
+            print(f"table2/{r['task']}/{r['cell']},{r.get('wall_s', '')},"
+                  f"acc={r['final_acc']}")
+        elif r["bench"] == "fig2":
+            print(f"fig2/{r['task']}/{r['method']}/r{r['round']},,"
+                  f"acc={r['acc']} MB={r['mbytes']}")
+        elif r["bench"] == "format":
+            print(f"format/qat-{r['qat_fmt']}/comm-{r['comm_fmt']},,"
+                  f"acc={r['final_acc']}")
+    print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 2: det vs stochastic quantization, for QAT and for comm.
+
+Four cells (paper): {det,rand} QAT without CQ; det QAT with {det,rand} CQ.
+Expected orderings (paper + Remarks 3-4): det QAT >= rand QAT;
+rand CQ >> det CQ (biased communication hurts).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import TASKS, run_method
+
+CELLS = [
+    ("det-qat/no-cq", "qat-only"),
+    ("rand-qat/no-cq", "rand-qat-only"),
+    ("det-qat/det-cq", "det-cq"),
+    ("det-qat/rand-cq", "uq"),
+]
+
+
+def run(full: bool = False, task_name: str = "cifar100-mlp", out_rows=None):
+    if full:
+        scale = dict(rounds=300, k=100, c=0.1, local_steps=50, batch=50,
+                     n_train=20000, n_test=4000)
+    else:
+        scale = dict(rounds=30, k=12, c=0.3, local_steps=12, batch=32,
+                     n_train=3000, n_test=800)
+    task = TASKS[task_name]
+    rows = out_rows if out_rows is not None else []
+    for label, method in CELLS:
+        t0 = time.time()
+        h, b = run_method(task, method, noniid=False, **scale)
+        rows.append({
+            "bench": "table2",
+            "task": task_name,
+            "cell": label,
+            "final_acc": round(h.best_accuracy(), 4),
+            "wall_s": round(time.time() - t0, 1),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--task", default="cifar100-mlp")
+    args = ap.parse_args()
+    rows = run(args.full, args.task)
+    print("bench,task,cell,final_acc")
+    for r in rows:
+        print(f"{r['bench']},{r['task']},{r['cell']},{r['final_acc']}")
+
+
+if __name__ == "__main__":
+    main()

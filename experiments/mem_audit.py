@@ -1,0 +1,109 @@
+"""Audit the biggest HLO buffers for one cell (memory hillclimb helper).
+
+    PYTHONPATH=src python experiments/mem_audit.py mixtral_8x7b train_4k [--accum N]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.core.qat import QATConfig
+from repro.models import registry
+from repro.models.common import sharding_rules
+from repro.sharding.policy import ShardingPolicy
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_optimizer, \
+    make_prefill_step, make_train_step
+
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "u8": 1, "f16": 2,
+      "s64": 8, "u64": 8, "s8": 1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--opt-level", type=int, default=1)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    policy = ShardingPolicy(mesh)
+    model = registry.get_model(cfg)
+    qcfg = QATConfig()
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = policy.params(params_shape)
+    in_specs = registry.input_specs(cfg, shape)
+    bspec = policy.batch(in_specs)
+
+    with mesh, sharding_rules(
+        policy.activation_rules(seq_sharded=shape.kind != "decode")
+    ):
+        if shape.kind == "train":
+            opt = make_optimizer(params_shape)
+            ospec = policy.params(jax.eval_shape(opt.init, params_shape))
+            dp = mesh.size // mesh.shape.get("model", 1)
+            accum = args.accum or max(
+                1, shape.global_batch * shape.seq_len // dp // 16384)
+            fn = make_train_step(model, opt, qcfg, accum=accum,
+                                 opt_level=args.opt_level, grad_shardings=pspec)
+            compiled = jax.jit(
+                fn, in_shardings=(pspec, ospec, bspec, NamedSharding(mesh, P())),
+                out_shardings=(pspec, ospec, None), donate_argnums=(0, 1),
+            ).lower(params_shape, jax.eval_shape(opt.init, params_shape),
+                    in_specs, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        elif shape.kind == "prefill":
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspec = policy.cache(cache_shape, shape.global_batch)
+            compiled = jax.jit(
+                make_prefill_step(model, qcfg), in_shardings=(pspec, bspec),
+                out_shardings=(None, cspec),
+            ).lower(params_shape, in_specs).compile()
+        else:
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspec = policy.cache(cache_shape, shape.global_batch)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            compiled = jax.jit(
+                make_decode_step(model, qcfg),
+                in_shardings=(pspec, cspec, policy.batch({"t": tok})["t"],
+                              NamedSharding(mesh, P())),
+                out_shardings=(None, cspec), donate_argnums=(1,),
+            ).lower(params_shape, cache_shape, tok,
+                    jax.ShapeDtypeStruct((), jnp.int32)).compile()
+
+    mem = compiled.memory_analysis()
+    print(f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+          f"args={mem.argument_size_in_bytes/1e9:.2f}GB "
+          f"out={mem.output_size_in_bytes/1e9:.2f}GB")
+    sizes = {}
+    for ln in compiled.as_text().splitlines():
+        m = re.match(r"\s*(?:ROOT )?%([\w\.\-]+) = (\w+)\[([\d,]+)\]", ln.strip())
+        if not m or m.group(2) not in DT:
+            continue
+        n = 1
+        for d in m.group(3).split(","):
+            n *= int(d)
+        b = n * DT[m.group(2)]
+        opm = re.search(r"\b([a-z][a-z0-9_\-]*)\(", ln)
+        mm = re.search(r'op_name="([^"]+)"', ln)
+        key = (f"{m.group(2)}[{m.group(3)}]", opm.group(1) if opm else "?",
+               (mm.group(1)[-60:] if mm else ""))
+        sizes[key] = max(sizes.get(key, 0), b)
+    for (shp, op, name), b in sorted(sizes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{b/1e9:7.2f} GB  {op:22s} {shp:34s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Merge dry-run record files (later files override earlier per cell key)."""
+import glob
+import json
+import sys
+
+ORDER = [
+    "experiments/dryrun.json",
+    "experiments/dryrun_fix1.json",
+    "experiments/dryrun_fix2.json",
+    "experiments/dryrun_fix3.json",
+    "experiments/dryrun_fix4.json",
+    "experiments/dryrun_fix5.json",
+]
+
+
+def main():
+    merged = {}
+    for path in ORDER:
+        try:
+            with open(path) as f:
+                recs = json.load(f)
+        except FileNotFoundError:
+            continue
+        for r in recs if isinstance(recs, list) else [recs]:
+            merged[(r["arch"], r["shape"], r["mesh"])] = r
+    out = list(merged.values())
+    with open("experiments/dryrun_merged.json", "w") as f:
+        json.dump(out, f, indent=1)
+    ok = sum(1 for r in out if r["status"] == "ok")
+    fail = [f"{r['arch']}/{r['shape']}/{r['mesh']}" for r in out
+            if r["status"] == "FAIL"]
+    skip = sum(1 for r in out if r["status"] == "skip")
+    print(f"merged {len(out)} cells: ok={ok} skip={skip} fail={len(fail)}")
+    for f_ in fail:
+        print("  FAIL:", f_)
+
+
+if __name__ == "__main__":
+    main()

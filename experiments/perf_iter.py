@@ -1,0 +1,131 @@
+"""§Perf hillclimb driver: lower one cell with overrides, print the terms.
+
+    PYTHONPATH=src python experiments/perf_iter.py deepseek_67b train_4k \
+        --opt-level 2 [--accum 4] [--attn-chunk 2048] [--multi-pod] [--no-qat]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.core.qat import DISABLED, QATConfig
+from repro.models import registry
+from repro.models.common import sharding_rules
+from repro.sharding.policy import ShardingPolicy
+from repro.launch import hlo_cost
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.steps import make_decode_step, make_optimizer, \
+    make_prefill_step, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--opt-level", type=int, default=1)
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--ce-chunks", type=int, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-qat", action="store_true")
+    ap.add_argument("--top-ops", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.attn_chunk:
+        cfg = cfg.replace(attn_chunk=args.attn_chunk)
+    if args.ce_chunks:
+        cfg = cfg.replace(ce_chunks=args.ce_chunks)
+    if args.ssm_chunk and cfg.ssm:
+        import dataclasses
+        cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm, chunk=args.ssm_chunk))
+    if args.no_remat:
+        cfg = cfg.replace(remat=False)
+
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    policy = ShardingPolicy(mesh)
+    model = registry.get_model(cfg)
+    qcfg = DISABLED if args.no_qat else QATConfig()
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = policy.params(params_shape)
+    in_specs = registry.input_specs(cfg, shape)
+    bspec = policy.batch(in_specs)
+
+    t0 = time.time()
+    with mesh, sharding_rules(
+        policy.activation_rules(seq_sharded=shape.kind != "decode")
+    ):
+        if shape.kind == "train":
+            opt = make_optimizer(params_shape)
+            ospec = policy.params(jax.eval_shape(opt.init, params_shape))
+            dp = mesh.size // mesh.shape.get("model", 1)
+            accum = args.accum or max(
+                1, shape.global_batch * shape.seq_len // dp // 16384
+            )
+            fn = make_train_step(model, opt, qcfg, accum=accum,
+                                 opt_level=args.opt_level,
+                                 grad_shardings=pspec)
+            compiled = jax.jit(
+                fn, in_shardings=(pspec, ospec, bspec, NamedSharding(mesh, P())),
+                out_shardings=(pspec, ospec, None), donate_argnums=(0, 1),
+            ).lower(params_shape, jax.eval_shape(opt.init, params_shape),
+                    in_specs, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        elif shape.kind == "prefill":
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspec = policy.cache(cache_shape, shape.global_batch)
+            compiled = jax.jit(
+                make_prefill_step(model, qcfg),
+                in_shardings=(pspec, bspec), out_shardings=(None, cspec),
+            ).lower(params_shape, in_specs).compile()
+        else:
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspec = policy.cache(cache_shape, shape.global_batch)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            compiled = jax.jit(
+                make_decode_step(model, qcfg),
+                in_shardings=(pspec, cspec, policy.batch({"t": tok})["t"],
+                              NamedSharding(mesh, P())),
+                out_shardings=(None, cspec), donate_argnums=(1,),
+            ).lower(params_shape, cache_shape, tok,
+                    jax.ShapeDtypeStruct((), jnp.int32)).compile()
+
+    an = hlo_cost.analyze(compiled.as_text(), top_ops=args.top_ops)
+    mem = compiled.memory_analysis()
+    terms = {
+        "compute_s": an["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": an["bytes"] / HBM_BW,
+        "collective_s": an["collective_bytes"]["total"] / ICI_BW,
+    }
+    total = sum(terms.values())
+    print(json.dumps({
+        "cell": f"{args.arch}/{args.shape}",
+        "overrides": {k: v for k, v in vars(args).items()
+                      if k not in ("arch", "shape", "top_ops") and v},
+        "terms_s": {k: round(v, 3) for k, v in terms.items()},
+        "dominant": max(terms, key=terms.get),
+        "roofline_frac": round(terms["compute_s"] / max(total, 1e-30), 4),
+        "flops": an["flops"], "bytes": an["bytes"],
+        "collectives": {k: round(v / 1e9, 2)
+                        for k, v in an["collective_bytes"].items()},
+        "bytes_by_op_GB": {k: round(v / 1e9, 1)
+                           for k, v in an.get("bytes_by_op", {}).items()},
+        "temp_GB": round(mem.temp_size_in_bytes / 1e9, 2),
+        "compile_s": round(time.time() - t0, 1),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

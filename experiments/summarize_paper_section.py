@@ -1,0 +1,56 @@
+"""Insert the §Paper summary into EXPERIMENTS.md from bench_output.txt."""
+import re
+
+rows = []
+for ln in open("bench_output.txt"):
+    ln = ln.strip()
+    if ln.startswith(("table1/", "table2/", "fig2/", "kernel/", "format/")):
+        rows.append(ln)
+
+t1 = [r for r in rows if r.startswith("table1/")]
+t2 = [r for r in rows if r.startswith("table2/")]
+fig2 = [r for r in rows if r.startswith("fig2/")]
+
+lines = ["## §Paper-results — reproduction summary (CPU, synthetic data)\n"]
+lines.append("Source: bench_output.txt (regenerate: `python -m benchmarks.run`).")
+lines.append("Data are synthetic matched-dimension stand-ins (DESIGN.md §8); the")
+lines.append("claims under test are the paper's *relative* ones.\n")
+
+lines.append("**Table 1 analogue** (final acc / comm gain vs FP32 FedAvg):\n")
+lines.append("| task | setting | method | acc | gain |")
+lines.append("|---|---|---|---|---|")
+for r in t1:
+    name, _, derived = r.split(",", 2)
+    _, task, setting, method = name.split("/")
+    acc = re.search(r"acc=([\d.]+)", derived).group(1)
+    gain = re.search(r"gain=([\w.]+)x", derived).group(1)
+    lines.append(f"| {task} | {setting} | {method} | {acc} | {gain}x |")
+
+lines.append("\n**Table 2 analogue** (det/rand QAT x det/rand CQ):\n")
+lines.append("| cell | acc |")
+lines.append("|---|---|")
+for r in t2:
+    name, _, derived = r.split(",", 2)
+    cell = name.split("/", 2)[2]
+    acc = re.search(r"acc=([\d.]+)", derived).group(1)
+    lines.append(f"| {cell} | {acc} |")
+
+if fig2:
+    # last point per method
+    last = {}
+    for r in fig2:
+        name, _, derived = r.split(",", 2)
+        method = name.split("/")[2]
+        last[method] = derived
+    lines.append("\n**Figure 2 analogue** (final point per method — full curves in bench_output.txt):\n")
+    for m, d in last.items():
+        lines.append(f"- {m}: {d}")
+
+block = "\n".join(lines) + "\n"
+exp = open("EXPERIMENTS.md").read()
+marker = "## §Paper — reproduction of the paper's claims (CPU, synthetic data)"
+start = exp.index(marker)
+end = exp.index("## §Dry-run")
+exp = exp[:start] + block + "\n" + exp[end:]
+open("EXPERIMENTS.md", "w").write(exp)
+print(block)

@@ -1,0 +1,35 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig, ShapeConfig, SHAPES, reduced
+
+ARCH_IDS = [
+    "tinyllama_1_1b",
+    "deepseek_67b",
+    "granite_3_8b",
+    "minicpm3_4b",
+    "llava_next_mistral_7b",
+    "mamba2_1_3b",
+    "mixtral_8x7b",
+    "granite_moe_3b_a800m",
+    "recurrentgemma_2b",
+    "whisper_medium",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get(name: str) -> ModelConfig:
+    name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f".{name}", __package__)
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "reduced", "get",
+           "all_configs", "ARCH_IDS"]

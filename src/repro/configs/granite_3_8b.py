@@ -1,0 +1,17 @@
+"""Granite-3 8B — dense GQA [hf:ibm-granite/granite-3.0; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12800,
+    vocab=49408,  # 49155 padded to /256 for TP (std TPU vocab padding)
+    head_dim=128,
+    attention="full",
+    rope_theta=10000.0,
+    act="silu",
+)

@@ -1,0 +1,19 @@
+"""Granite-MoE 3B-a800m — 40-expert top-8 MoE
+[hf:ibm-granite/granite-3.0 MoE family; hf]."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49408,  # 49155 padded to /256 for TP (std TPU vocab padding)
+    head_dim=64,
+    attention="full",
+    moe=MoEConfig(n_experts=40, top_k=8, capacity_factor=1.25),
+    rope_theta=10000.0,
+    act="silu",
+)

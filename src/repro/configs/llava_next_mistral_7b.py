@@ -1,0 +1,23 @@
+"""LLaVA-NeXT (mistral-7b backbone) — VLM with STUB anyres patch frontend.
+
+The spec assigns the transformer BACKBONE; input_specs() provides
+precomputed patch embeddings (n_patches x d_model) standing in for the
+vision tower + anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    head_dim=128,
+    attention="full",
+    n_patches=576,       # one 24x24 CLIP grid (stub)
+    rope_theta=1000000.0,
+    act="silu",
+)

@@ -1,0 +1,17 @@
+"""Mamba2-1.3B — SSD state-space duality, attention-free [arXiv:2405.21060]."""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=64,          # d_inner / head_dim
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50432,  # 50280 padded to /256 for TP (std TPU vocab padding)
+    attention="none",
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1,
+                  conv_width=4, chunk=256),
+    subquadratic=True,
+)

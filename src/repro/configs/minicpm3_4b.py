@@ -1,0 +1,19 @@
+"""MiniCPM3-4B — MLA (multi-head latent attention) [hf:openbmb/MiniCPM3-4B; hf]."""
+from .base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,      # MHA-equivalent after latent decompression
+    d_ff=6400,
+    vocab=73472,  # 73448 padded to /256 for TP (std TPU vocab padding)
+    head_dim=64,
+    attention="mla",
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                  qk_rope_dim=32, v_head_dim=64),
+    rope_theta=10000.0,
+    act="silu",
+)

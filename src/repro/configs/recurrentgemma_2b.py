@@ -1,0 +1,21 @@
+"""RecurrentGemma-2B — RG-LRU + local attention, 1 attn : 2 recurrent
+[arXiv:2402.19427; hf]."""
+from .base import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,        # MQA
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    attention="local",
+    window=2048,
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4,
+                      block_pattern=("rec", "rec", "attn")),
+    act="gelu",
+    subquadratic=True,
+)

@@ -1,0 +1,19 @@
+"""Whisper-medium — enc-dec audio backbone, conv frontend STUB
+[arXiv:2212.04356]. input_specs() provides precomputed frame embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,          # decoder layers
+    n_encoder_layers=24,
+    encoder_len=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51968,  # 51865 padded to /256 for TP (std TPU vocab padding)
+    head_dim=64,
+    attention="full",
+    act="gelu",
+)

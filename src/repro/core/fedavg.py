@@ -1,0 +1,135 @@
+"""FP8FedAvg-UQ — Algorithm 1 of the paper, as composable pure functions.
+
+The pieces:
+
+* :func:`make_local_update` — ``LocalUpdate`` in Algorithm 1: hard-reset the
+  FP32 master weights to the dequantized downlink model, run ``U`` local
+  QAT-SGD steps (deterministic quantizer ``Q_det`` in the forward pass; the
+  clipping values alpha/beta are learnable leaves of the param tree and are
+  updated by the same optimizer).
+* :func:`make_round` — one full communication round: client sampling,
+  downlink ``Q_rand``, vmapped local updates, uplink ``Q_rand``, and the
+  server aggregation (plain federated average for UQ, ServerOptimize for
+  UQ+).
+
+All functions are jit-compatible; the simulator in ``fedsim.py`` and the
+production launcher in ``launch/train.py`` both build on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import qat as qat_lib
+from .fp8 import E4M3, FP8Format
+from .qat import QATConfig, comm_quantize
+from .server_opt import ServerOptConfig, server_optimize, weighted_mean
+from ..optim.base import Optimizer, apply_updates
+
+Array = jax.Array
+PyTree = Any
+LossFn = Callable[..., Array]  # (params, x, y, qat_cfg, key) -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 100          # K
+    participation: float = 0.1    # C
+    local_steps: int = 50         # U (local gradient updates per round)
+    batch_size: int = 50          # B
+    comm_mode: str = "rand"       # 'rand' (UQ) | 'det' (biased ablation) | 'none' (FP32)
+    qat: QATConfig = QATConfig()
+    server_opt: ServerOptConfig = ServerOptConfig(enabled=False)
+    fmt: FP8Format = E4M3
+
+    @property
+    def clients_per_round(self) -> int:
+        return max(1, int(round(self.n_clients * self.participation)))
+
+
+def make_local_update(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+):
+    """Build ``LocalUpdate(w_t, Q_det; alpha_t, beta_t, D_k)``.
+
+    Returned fn signature: ``(params0, data, labels, key) -> (params_U, mean_loss)``
+    where ``params0`` is the (dequantized) downlink model — the hard master
+    reset is implicit in starting from it. Optimizer state is re-initialized
+    every round, as is standard for FedAvg local solvers.
+    """
+
+    def local_update(params0: PyTree, data: Array, labels: Array, key: Array):
+        opt_state = optimizer.init(params0)
+        n = data.shape[0]
+
+        def step(carry, k):
+            params, opt_state, i = carry
+            k_batch, k_q = jax.random.split(k)
+            idx = jax.random.randint(k_batch, (cfg.batch_size,), 0, n)
+            xb, yb = data[idx], labels[idx]
+            loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, cfg.qat, k_q)
+            updates, opt_state = optimizer.update(grads, opt_state, params, i)
+            params = apply_updates(params, updates)
+            return (params, opt_state, i + 1), loss
+
+        keys = jax.random.split(key, cfg.local_steps)
+        (params, _, _), losses = jax.lax.scan(
+            step, (params0, opt_state, jnp.zeros((), jnp.int32)), keys
+        )
+        return params, jnp.mean(losses)
+
+    return local_update
+
+
+def make_round(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+):
+    """Build one jittable communication round over tensorized client data.
+
+    ``data``/``labels`` carry a leading client axis ``(K, n_per, ...)``;
+    ``nk`` is the per-client example count (aggregation weights).
+    Returns ``(new_server_params, metrics_dict)``.
+    """
+    local_update = make_local_update(loss_fn, optimizer, cfg)
+    P = cfg.clients_per_round
+
+    def round_fn(server_params: PyTree, data: Array, labels: Array,
+                 nk: Array, key: Array):
+        k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
+
+        # --- sample P_t (uniform, without replacement; stragglers simply
+        # fall out of P_t — FedAvg's native dropout tolerance) ------------
+        idx = jax.random.permutation(k_sel, cfg.n_clients)[:P]
+        nk_sel = nk[idx]
+
+        # --- downlink: one broadcast Q_rand sample ------------------------
+        down = comm_quantize(server_params, k_down, cfg.fmt, cfg.comm_mode)
+
+        # --- vmapped local QAT training ------------------------------------
+        loc_keys = jax.random.split(k_loc, P)
+        client_params, losses = jax.vmap(
+            local_update, in_axes=(None, 0, 0, 0)
+        )(down, data[idx], labels[idx], loc_keys)
+
+        # --- uplink: per-client independent Q_rand samples ------------------
+        up_keys = jax.random.split(k_up, P)
+        msgs = jax.vmap(
+            lambda p, k: comm_quantize(p, k, cfg.fmt, cfg.comm_mode)
+        )(client_params, up_keys)
+
+        # --- server aggregation (Algorithm 1 tail) ---------------------------
+        if cfg.server_opt.enabled and cfg.comm_mode != "none":
+            new_params = server_optimize(msgs, nk_sel, k_srv, cfg.server_opt)
+        else:
+            new_params = weighted_mean(msgs, nk_sel)
+
+        return new_params, {"local_loss": jnp.mean(losses)}
+
+    return round_fn

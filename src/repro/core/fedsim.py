@@ -1,0 +1,121 @@
+"""Paper-faithful federated simulator (K clients on one host).
+
+Drives :func:`repro.core.fedavg.make_round` for ``R`` rounds, tracking the
+exact uplink+downlink wire bytes (``repro.core.metrics``) and the
+centralized test accuracy of the *quantized* server model — the quantities
+in the paper's Table 1 / Figure 2.
+
+Scale target: LeNet/MLP/MatchboxNet/KWT-class models with K in the
+hundreds on CPU. Pod-scale federated training of the assigned LM
+architectures lives in ``repro.launch.train`` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics
+from .fedavg import FedConfig, make_round
+from .fp8 import tree_quantize_det
+from .qat import QATConfig, comm_quantize
+from ..optim.base import Optimizer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FedHistory:
+    rounds: list[int] = dataclasses.field(default_factory=list)
+    accuracy: list[float] = dataclasses.field(default_factory=list)
+    loss: list[float] = dataclasses.field(default_factory=list)
+    cumulative_bytes: list[int] = dataclasses.field(default_factory=list)
+
+    def best_accuracy(self) -> float:
+        return max(self.accuracy) if self.accuracy else 0.0
+
+    def bytes_to_accuracy(self, threshold: float) -> int | None:
+        for acc, b in zip(self.accuracy, self.cumulative_bytes):
+            if acc >= threshold:
+                return b
+        return None
+
+
+class FedSim:
+    """Federated training loop with exact byte accounting."""
+
+    def __init__(
+        self,
+        params: PyTree,
+        loss_fn: Callable,           # (params, x, y, qat_cfg, key) -> scalar
+        predict_fn: Callable,        # (params, x, qat_cfg) -> logits
+        optimizer: Optimizer,
+        cfg: FedConfig,
+        client_data: Array,          # (K, n_per, ...)
+        client_labels: Array,        # (K, n_per)
+        nk: Array | None = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.predict_fn = predict_fn
+        self.client_data = client_data
+        self.client_labels = client_labels
+        self.nk = (
+            nk
+            if nk is not None
+            else jnp.full((cfg.n_clients,), client_data.shape[1], jnp.float32)
+        )
+        self._round = jax.jit(make_round(loss_fn, optimizer, cfg))
+        quantized = cfg.comm_mode != "none"
+        self.bytes_per_round = metrics.round_bytes(
+            params, cfg.clients_per_round, quantized
+        )
+
+        @jax.jit
+        def _eval(params, x, y):
+            # Deployment evaluation: the model the server ships is on the FP8
+            # grid; evaluate with QAT quantizers active (matches E[F(Q(w))]).
+            logits = predict_fn(params, x, cfg.qat)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._eval = _eval
+
+    def evaluate(self, x: Array, y: Array, batch: int = 500) -> float:
+        accs = []
+        for i in range(0, x.shape[0], batch):
+            accs.append(float(self._eval(self.params, x[i : i + batch], y[i : i + batch])))
+        return float(np.mean(accs))
+
+    def run(
+        self,
+        rounds: int,
+        key: Array,
+        eval_data: tuple[Array, Array] | None = None,
+        eval_every: int = 10,
+        verbose: bool = False,
+    ) -> FedHistory:
+        hist = FedHistory()
+        total_bytes = 0
+        for r in range(1, rounds + 1):
+            key, k_round = jax.random.split(key)
+            self.params, m = self._round(
+                self.params, self.client_data, self.client_labels, self.nk, k_round
+            )
+            total_bytes += self.bytes_per_round
+            if eval_data is not None and (r % eval_every == 0 or r == rounds):
+                acc = self.evaluate(*eval_data)
+                hist.rounds.append(r)
+                hist.accuracy.append(acc)
+                hist.loss.append(float(m["local_loss"]))
+                hist.cumulative_bytes.append(total_bytes)
+                if verbose:
+                    print(
+                        f"round {r:4d}  acc {acc:.4f}  local_loss "
+                        f"{float(m['local_loss']):.4f}  MB {total_bytes/1e6:.1f}"
+                    )
+        return hist

@@ -1,0 +1,63 @@
+"""Exact wire-byte accounting for federated communication.
+
+The paper's headline metric is the *communication gain*: bytes transferred
+by FP32 FedAvg divided by bytes transferred by FP8FedAvg-UQ(+), each
+measured up to the round where the method reaches its comparison accuracy.
+This module computes exact per-round payloads:
+
+* FP8-quantized weight tensor  -> 1 byte / element  (+ 4 bytes per clip value)
+* everything else (biases, norm parameters, clip values themselves)
+                               -> 4 bytes / element
+
+Both uplink (P clients -> server) and downlink (server -> P clients) are
+counted, matching Figure 1 of the paper.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from . import qat
+
+PyTree = Any
+
+
+def payload_bytes(params: PyTree, quantized: bool) -> int:
+    """Bytes to transmit one model copy."""
+    qnames = qat.quantized_leaf_names(params) if quantized else set()
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        dotted = ".".join(qat._key_name(p) for p in path)
+        n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
+        total += n * (1 if dotted in qnames else 4)
+    return total
+
+
+def round_bytes(params: PyTree, n_clients: int, quantized: bool) -> int:
+    """Uplink + downlink bytes for one communication round with P clients."""
+    per_model = payload_bytes(params, quantized)
+    return 2 * n_clients * per_model
+
+
+def param_count(params: PyTree) -> int:
+    return sum(
+        int(np.prod(l.shape)) if hasattr(l, "shape") else 1
+        for l in jax.tree_util.tree_leaves(params)
+    )
+
+
+def communication_gain(
+    bytes_baseline: float, bytes_method: float
+) -> float:
+    """Paper Table 1's `/ N x` column: baseline bytes over method bytes."""
+    return float(bytes_baseline) / float(max(bytes_method, 1.0))
+
+
+def rounds_to_accuracy(acc_history: list[float], threshold: float) -> int | None:
+    """First round index (1-based) whose accuracy reaches ``threshold``."""
+    for i, a in enumerate(acc_history):
+        if a >= threshold:
+            return i + 1
+    return None

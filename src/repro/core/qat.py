@@ -1,0 +1,212 @@
+"""Quantization-aware-training plumbing.
+
+Convention (used by every model in ``repro.models``): learnable clipping
+values live *inside* the parameter pytree as siblings of the tensor they
+clip —
+
+* weight ``foo`` (ndim >= 2)      -> clipping scalar ``foo_qa`` (alpha)
+* activation site ``bar``         -> clipping scalar ``bar_qb`` (beta)
+
+For stacked (scanned-over-layers) parameters of shape ``(L, ...)`` the
+clipping value has shape ``(L, 1, ..., 1)`` so it broadcasts per layer —
+"per-tensor" in the paper's sense means per (layer, tensor).
+
+This keeps alphas/betas trainable by the same optimizer as the weights
+(the paper treats them as learnable parameters), makes them scan-sliceable,
+and lets the communication layer pair weights with their clipping values
+by name. Biases, norm parameters and the clip values themselves are never
+weight-quantized (paper: "< 2% of parameters", kept FP32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8
+from .fp8 import E4M3, FP8Format
+
+Array = jax.Array
+PyTree = Any
+
+QA_SUFFIX = "_qa"
+QB_SUFFIX = "_qb"
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    """How fake-quantization is applied during local (on-device) training."""
+
+    enabled: bool = True
+    quantize_weights: bool = True
+    quantize_acts: bool = True
+    fmt: FP8Format = E4M3
+    # Paper default: deterministic QAT (Remark 4). 'rand' exists for the
+    # Table 2 ablation.
+    mode: str = "det"
+
+    def replace(self, **kw) -> "QATConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DISABLED = QATConfig(enabled=False, quantize_weights=False, quantize_acts=False)
+
+
+def is_clip_key(name: str) -> bool:
+    return name.endswith(QA_SUFFIX) or name.endswith(QB_SUFFIX)
+
+
+def alpha_like(w: Array, stacked: bool = False) -> Array:
+    """Paper's alpha init: per-tensor max |w| (per layer when stacked)."""
+    if stacked:
+        axes = tuple(range(1, w.ndim))
+        return jnp.max(jnp.abs(w), axis=axes, keepdims=True).astype(jnp.float32)
+    return jnp.max(jnp.abs(w)).astype(jnp.float32)
+
+
+def beta_init(value: float = 4.0, stacked_layers: int | None = None) -> Array:
+    """Activation clipping init (refined online by the learnable beta)."""
+    if stacked_layers is None:
+        return jnp.asarray(value, jnp.float32)
+    return jnp.full((stacked_layers,), value, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# In-graph fake-quant helpers used by model code
+# ---------------------------------------------------------------------------
+
+
+def _lsq_grad_scale(alpha: Array, n_elements: int, fmt: FP8Format) -> Array:
+    """LSQ gradient scaling (Esser et al. 2020) for learnable clip values.
+
+    The raw STE gradient of a range parameter sums contributions over every
+    element it clips — ~sqrt(N) too large, which free-falls the clipping
+    value within tens of steps (measured: LeNet head alpha 0.55 -> 0.04 in
+    20 steps, training collapses to uniform predictions — EXPERIMENTS.md
+    §Paper-notes). Forward value is unchanged; the gradient is scaled by
+    1/sqrt(N * Q_max), the standard remedy in range-learning QAT.
+    """
+    import numpy as _np
+
+    g = 1.0 / float(_np.sqrt(max(n_elements, 1) * (2 ** (fmt.mant + 1) - 1)))
+    return alpha * g + jax.lax.stop_gradient(alpha * (1.0 - g))
+
+
+def wq(w: Array, alpha: Array, cfg: QATConfig, key: Array | None = None) -> Array:
+    """Fake-quantize a weight tensor for the forward pass (QAT)."""
+    if not (cfg.enabled and cfg.quantize_weights):
+        return w
+    alpha = _lsq_grad_scale(alpha, w.size, cfg.fmt)
+    if cfg.mode == "rand":
+        assert key is not None, "stochastic QAT needs a PRNG key"
+        return fp8.quantize_rand(w, alpha, key, cfg.fmt)
+    return fp8.quantize_det(w, alpha, cfg.fmt)
+
+
+def aq(x: Array, beta: Array, cfg: QATConfig) -> Array:
+    """Fake-quantize an activation tensor (always deterministic, sep. clip beta)."""
+    if not (cfg.enabled and cfg.quantize_acts):
+        return x
+    # Activations are quantized symmetrically like weights (paper §2).
+    beta = _lsq_grad_scale(beta, x.size, cfg.fmt)
+    return fp8.quantize_det(x, beta, cfg.fmt)
+
+
+# ---------------------------------------------------------------------------
+# PyTree-level utilities used by the federated/communication layer
+# ---------------------------------------------------------------------------
+
+
+def _walk(params: PyTree) -> list[tuple[tuple, str, Array]]:
+    """Flatten to (path, leaf_name, leaf) for dict-based param trees."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = _key_name(path[-1])
+        out.append((path, name, leaf))
+    return out
+
+
+def _key_name(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return entry.name
+    return str(entry)
+
+
+def quantized_leaf_names(params: PyTree) -> set[str]:
+    """Dotted paths of weight leaves that get FP8-quantized for communication."""
+    names = set()
+    entries = {}
+    for path, name, leaf in _walk(params):
+        dotted = ".".join(_key_name(p) for p in path)
+        entries[dotted] = leaf
+    for dotted, leaf in entries.items():
+        name = dotted.rsplit(".", 1)[-1]
+        if is_clip_key(name):
+            continue
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and dotted + QA_SUFFIX in entries:
+            names.add(dotted)
+    return names
+
+
+def comm_quantize(
+    params: PyTree,
+    key: Array,
+    fmt: FP8Format = E4M3,
+    mode: str = "rand",
+) -> PyTree:
+    """Quantize a model for transmission (paper: Q_rand on every weight tensor
+    that has a paired clipping value; clip values / biases / norms ride along
+    in FP32 — they are <2% of bytes, counted exactly by ``metrics``).
+
+    ``mode='det'`` exists for the Table-2 "biased communication" ablation;
+    ``mode='none'`` returns the tree unchanged (FP32 baseline).
+    """
+    if mode == "none":
+        return params
+    qnames = quantized_leaf_names(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    by_name = {".".join(_key_name(p) for p in path): leaf for path, leaf in flat}
+    keys = jax.random.split(key, max(len(qnames), 1))
+    kmap = dict(zip(sorted(qnames), keys))
+    out = []
+    for path, leaf in flat:
+        dotted = ".".join(_key_name(p) for p in path)
+        if dotted in qnames:
+            alpha = by_name[dotted + QA_SUFFIX]
+            if mode == "rand":
+                out.append(fp8.quantize_rand(leaf, alpha, kmap[dotted], fmt))
+            else:
+                out.append(fp8.quantize_det(leaf, alpha, fmt))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def clip_value_mask(params: PyTree) -> PyTree:
+    """True for learnable clipping values (alpha/beta leaves).
+
+    Used by the optimizers' trust-region guard: clip values get relative
+    update clamping (|delta| <= 2% of |alpha| per step). Without it, large
+    task gradients (e.g. the classifier head under CE loss) collapse alpha
+    within tens of steps — the clip-everything failure mode measured in
+    EXPERIMENTS.md §Paper-notes — while the paper's accuracy numbers imply
+    stable ranges.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [is_clip_key(_key_name(path[-1])) for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def weight_decay_mask(params: PyTree) -> PyTree:
+    """True for leaves that should receive weight decay (>=2-D weights only;
+    no biases, no norm scales, no clip values)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = _key_name(path[-1])
+        out.append((not is_clip_key(name)) and hasattr(leaf, "ndim") and leaf.ndim >= 2)
+    return jax.tree_util.tree_unflatten(treedef, out)

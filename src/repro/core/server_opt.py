@@ -1,0 +1,158 @@
+"""ServerOptimize — the paper's UQ+ server-side aggregation (Eqs. 4-5).
+
+Standard FedAvg minimizes the weighted MSE between the server model and
+the client models *in the unquantized domain*. Once the server model is
+itself re-quantized before the next downlink, that optimality breaks; the
+paper instead minimizes
+
+    sum_k (n_k / m_t) || Q_rand(w; alpha) - Q_rand(w_k; alpha_k) ||_2^2
+
+by alternating minimization:
+
+1. ``w``:     a fixed number of SGD steps through the STE gradient of
+              Q_rand, holding ``alpha`` at the federated average (Eq. 4).
+2. ``alpha``: per-tensor grid search over ``n_grid`` points spanning
+              [min_k alpha_k, max_k alpha_k] (Eq. 5) — the scale/alpha map
+              is piecewise-constant so GD is useless here (paper §2).
+
+Inputs are *stacked* client messages: every leaf has a leading client axis
+``(P, ...)`` — exactly what a vmapped client update produces. All
+computation happens on the server; no extra communication (paper §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8, qat
+from .fp8 import E4M3, FP8Format
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptConfig:
+    enabled: bool = True
+    gd_steps: int = 5      # paper: 5
+    lr: float = 0.1        # paper: grid-searched over {0.01, 0.1, 1}
+    n_grid: int = 50       # paper: 50
+    fmt: FP8Format = E4M3
+
+
+def weighted_mean(stacked: PyTree, nk: Array) -> PyTree:
+    """Federated average over the leading client axis with weights n_k/m."""
+    w = nk / jnp.sum(nk)
+
+    def avg(leaf):
+        wshape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+        return jnp.sum(leaf * w.reshape(wshape), axis=0)
+
+    return jax.tree.map(avg, stacked)
+
+
+def _leaf_gd(w0: Array, alpha_bar: Array, targets: Array, nw: Array,
+             key: Array, cfg: ServerOptConfig) -> Array:
+    """Eq. (4): ``gd_steps`` SGD steps on one weight tensor."""
+
+    def loss(w, k):
+        q = fp8.quantize_rand(w, alpha_bar, k, cfg.fmt)
+        err = q[None] - targets
+        per_client = jnp.sum(err * err, axis=tuple(range(1, err.ndim)))
+        return jnp.sum(nw * per_client)
+
+    def step(w, k):
+        g = jax.grad(loss)(w, k)
+        return w - cfg.lr * g, None
+
+    keys = jax.random.split(key, cfg.gd_steps)
+    w, _ = jax.lax.scan(step, w0, keys)
+    return w
+
+
+def _leaf_alpha_grid(w: Array, alphas_k: Array, targets: Array, nw: Array,
+                     key: Array, cfg: ServerOptConfig) -> Array:
+    """Eq. (5): grid search alpha in [min_k alpha_k, max_k alpha_k]."""
+    lo = jnp.min(alphas_k, axis=0)
+    hi = jnp.max(alphas_k, axis=0)
+    ts = jnp.linspace(0.0, 1.0, cfg.n_grid)
+
+    def mse_at(t, k):
+        a = lo + t * (hi - lo)
+        q = fp8.quantize_rand(w, a, k, cfg.fmt)
+        err = q[None] - targets
+        per_client = jnp.sum(err * err, axis=tuple(range(1, err.ndim)))
+        return jnp.sum(nw * per_client)
+
+    keys = jax.random.split(key, cfg.n_grid)
+    losses = jax.vmap(mse_at)(ts, keys)
+    t_best = ts[jnp.argmin(losses)]
+    return lo + t_best * (hi - lo)
+
+
+def server_optimize(
+    stacked_msgs: PyTree,
+    nk: Array,
+    key: Array,
+    cfg: ServerOptConfig,
+) -> PyTree:
+    """Full UQ+ aggregation. Returns the new server parameter tree.
+
+    Non-quantized leaves (biases, norms, betas) use the plain federated
+    average — exactly Algorithm 1's fallback for those parameters.
+    """
+    avg = weighted_mean(stacked_msgs, nk)
+    if not cfg.enabled:
+        return avg
+
+    nw = nk / jnp.sum(nk)
+    qnames = qat.quantized_leaf_names(avg)
+
+    flat_avg, treedef = jax.tree_util.tree_flatten_with_path(avg)
+    by_name_avg = {
+        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_avg
+    }
+    flat_stk = jax.tree_util.tree_flatten_with_path(stacked_msgs)[0]
+    by_name_stk = {
+        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_stk
+    }
+
+    n_q = max(len(qnames), 1)
+    keys = jax.random.split(key, 2 * n_q)
+    kmap = {n: (keys[2 * i], keys[2 * i + 1]) for i, n in enumerate(sorted(qnames))}
+
+    out = []
+    for path, leaf in flat_avg:
+        dotted = ".".join(qat._key_name(p) for p in path)
+        if dotted in qnames:
+            targets = by_name_stk[dotted]          # (P, ...) quantized client weights
+            alphas_k = by_name_stk[dotted + qat.QA_SUFFIX]  # (P, ...) client alphas
+            alpha_bar = by_name_avg[dotted + qat.QA_SUFFIX]
+            kw, ka = kmap[dotted]
+            w_new = _leaf_gd(leaf, alpha_bar, targets, nw, kw, cfg)
+            out.append(w_new)
+        else:
+            out.append(leaf)
+    result = jax.tree_util.tree_unflatten(treedef, out)
+
+    # Second half of the alternation: refresh alphas given the new weights.
+    flat_res = jax.tree_util.tree_flatten_with_path(result)[0]
+    by_name_res = {
+        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_res
+    }
+    out2 = []
+    for path, leaf in flat_res:
+        dotted = ".".join(qat._key_name(p) for p in path)
+        base = dotted[: -len(qat.QA_SUFFIX)] if dotted.endswith(qat.QA_SUFFIX) else None
+        if base is not None and base in qnames:
+            w_new = by_name_res[base]
+            targets = by_name_stk[base]
+            alphas_k = by_name_stk[dotted]
+            _, ka = kmap[base]
+            out2.append(_leaf_alpha_grid(w_new, alphas_k, targets, nw, ka, cfg))
+        else:
+            out2.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out2)

@@ -1,0 +1,17 @@
+from .synthetic import (
+    synthetic_classification,
+    synthetic_images,
+    synthetic_sequences,
+    synthetic_lm_tokens,
+)
+from .federated import partition_iid, partition_dirichlet, partition_by_speaker
+
+__all__ = [
+    "synthetic_classification",
+    "synthetic_images",
+    "synthetic_sequences",
+    "synthetic_lm_tokens",
+    "partition_iid",
+    "partition_dirichlet",
+    "partition_by_speaker",
+]

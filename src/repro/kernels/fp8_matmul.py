@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused FP8-QAT matmul.
+
+The TPU-native analogue of H100 FP8 tensor-core GEMMs (DESIGN.md §3): both
+operand tiles are fake-quantized onto the FP8 grid *in VMEM* immediately
+before feeding the MXU, and the product accumulates in f32. The quantized
+operands never round-trip to HBM — vs. the naive "quantize whole tensor,
+then matmul" graph this removes one full read+write of both operands.
+
+Blocking: (bm x bk) @ (bk x bn) with all three dims multiples of 128 to
+match the 128x128 MXU systolic array; the K grid axis is innermost and
+accumulates into the revisited output tile (standard Pallas matmul
+pattern). Default tiles use ~(256+256+128)KB of VMEM, leaving room for
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.fp8 import E4M3, FP8Format
+from .fp8_quant import _mant_const
+
+
+def _fake_quant(x, alpha, fmt: FP8Format):
+    b = 2.0 ** fmt.exp - jnp.log2(alpha) + _mant_const(fmt) - 1.0
+    xc = jnp.clip(x, -alpha, alpha)
+    p = jnp.floor(jnp.log2(jnp.abs(xc)) + b)
+    p = jnp.where(p > 1.0, p, 1.0)
+    s = jnp.exp2(p - b - fmt.mant)
+    return s * jnp.round(xc / s)
+
+
+def _qat_matmul_kernel(x_ref, w_ref, beta_ref, alpha_ref, o_ref, *, fmt, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _fake_quant(x_ref[...].astype(jnp.float32), beta_ref[0, 0], fmt)
+    wq = _fake_quant(w_ref[...].astype(jnp.float32), alpha_ref[0, 0], fmt)
+    o_ref[...] += jnp.dot(
+        xq, wq, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "bm", "bk", "bn", "interpret")
+)
+def qat_matmul(
+    x: jax.Array,       # (M, K)
+    w: jax.Array,       # (K, N)
+    beta: jax.Array,    # activation clip (scalar)
+    alpha: jax.Array,   # weight clip (scalar)
+    fmt: FP8Format = E4M3,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    scalar = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_qat_matmul_kernel, fmt=fmt, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            scalar,
+            scalar,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, jnp.reshape(beta.astype(jnp.float32), (1, 1)),
+      jnp.reshape(alpha.astype(jnp.float32), (1, 1)))
+    return out.astype(x.dtype)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode —
+the kernel bodies execute exactly, which is what the correctness tests
+validate. On a real TPU backend ``interpret`` flips off automatically and
+the same BlockSpecs compile to Mosaic.
+
+``quantize_det_kernel``/``quantize_rand_kernel`` also provide a custom-VJP
+STE so the fused kernels are drop-in replacements for
+``repro.core.fp8.quantize_det`` inside training graphs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fp8 import E4M3, FP8Format
+from . import fp8_matmul, fp8_quant
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quantize_det_fwd(x, alpha, fmt: FP8Format = E4M3):
+    return fp8_quant.quant_det(x, alpha, fmt=fmt, interpret=_on_cpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def quantize_det_ste(x, alpha, fmt: FP8Format = E4M3):
+    """Kernel-backed Q_det with the paper's straight-through gradients."""
+    return quantize_det_fwd(x, alpha, fmt)
+
+
+def _ste_fwd(x, alpha, fmt):
+    y = quantize_det_fwd(x, alpha, fmt)
+    return y, (x, alpha)
+
+
+def _ste_bwd(fmt, res, g):
+    x, alpha = res
+    a = jnp.maximum(alpha, 1e-12)
+    inside = (jnp.abs(x) <= a).astype(g.dtype)
+    gx = g * inside
+    # clipped elements route gradient to alpha with the sign of the clip side
+    galpha = jnp.sum(g * (1.0 - inside) * jnp.sign(x)).astype(jnp.float32)
+    return gx, galpha.reshape(jnp.shape(alpha))
+
+
+quantize_det_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_rand_kernel(x, alpha, key, fmt: FP8Format = E4M3):
+    """Kernel-backed Q_rand; randomness from jax.random outside the kernel."""
+    bits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
+    return fp8_quant.quant_rand(x, alpha, bits, fmt=fmt, interpret=_on_cpu())
+
+
+def qat_matmul(x, w, beta, alpha, fmt: FP8Format = E4M3, **blocks):
+    """Fused fake-quant(x) @ fake-quant(w) (forward)."""
+    return fp8_matmul.qat_matmul(
+        x, w, beta, alpha, fmt=fmt, interpret=_on_cpu(), **blocks
+    )

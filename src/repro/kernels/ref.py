@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests ``assert_allclose`` against.
+They deliberately re-derive the math independently of the kernel bodies
+(sharing only the paper's formulas) so a transcription bug in a kernel
+cannot hide in a shared helper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fp8 import E4M3, FP8Format
+
+
+def _scale_ref(x, alpha, fmt: FP8Format):
+    b = 2.0 ** fmt.exp - jnp.log2(alpha) + np.log2(2.0 - 2.0 ** (-fmt.mant)) - 1.0
+    p = jnp.floor(jnp.log2(jnp.abs(x)) + b)
+    p = jnp.where(p > 1.0, p, 1.0)
+    return jnp.exp2(p - b - fmt.mant)
+
+
+def quant_det_ref(x, alpha, fmt: FP8Format = E4M3):
+    """Deterministic FP8 fake-quant (forward only — oracle for the kernel)."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    xc = jnp.clip(x.astype(jnp.float32), -alpha, alpha)
+    s = _scale_ref(xc, alpha, fmt)
+    return (s * jnp.round(xc / s)).astype(x.dtype)
+
+
+def quant_rand_ref(x, alpha, rand_u32, fmt: FP8Format = E4M3):
+    """Stochastic FP8 quant given explicit uint32 random bits.
+
+    ``u = rand_u32 / 2^32`` reproduces exactly what the kernel computes, so
+    oracle and kernel see identical randomness.
+    """
+    alpha = jnp.asarray(alpha, jnp.float32)
+    xc = jnp.clip(x.astype(jnp.float32), -alpha, alpha)
+    s = _scale_ref(xc, alpha, fmt)
+    y = xc / s
+    fl = jnp.floor(y)
+    u = rand_u32.astype(jnp.float32) * (1.0 / 4294967296.0)
+    q = fl + (u < (y - fl)).astype(jnp.float32)
+    return (s * q).astype(x.dtype)
+
+
+def qat_matmul_ref(x, w, beta, alpha, fmt: FP8Format = E4M3):
+    """Fused QAT matmul oracle: quantize both operands, multiply in f32."""
+    xq = quant_det_ref(x, beta, fmt)
+    wq = quant_det_ref(w, alpha, fmt)
+    return jnp.dot(
+        xq.astype(jnp.float32), wq.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)

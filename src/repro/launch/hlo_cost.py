@@ -1,0 +1,452 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers program (all of ours) under-reports FLOPs/bytes/collective
+traffic by ~n_layers x. This module re-derives the three roofline terms by
+parsing the optimized HLO text:
+
+* builds the computation graph (ENTRY, while bodies/conds, fusions) with a
+  per-computation symbol table (instruction -> shape),
+* per-instruction FLOPs (dot/convolution via contraction-dim lookup), HBM
+  bytes (operands+outputs of top-level instructions; fusion-internal
+  traffic is elided — matching what a fused kernel actually reads/writes),
+  and collective payload bytes,
+* resolves ``while`` trip counts from the loop condition's
+  compare-with-constant and multiplies the body cost accordingly.
+
+Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# first word-token immediately followed by '(' — the opcode (shape specs
+# like f32[64,64]{1,0} contain no word+paren sequences)
+_OP_RE = re.compile(r"\b([a-z][a-z0-9_\-]*)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    # per-opcode byte attribution (trip-count-scaled) — the "profile" used
+    # by the §Perf hillclimbing loop.
+    bytes_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] += v
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] += v
+        return self
+
+    def add_bytes(self, op: str, b: float) -> None:
+        self.bytes += b
+        self.bytes_by_op[op] += b
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k,
+            self.bytes * k,
+            defaultdict(float, {c: v * k for c, v in self.collectives.items()}),
+            defaultdict(float, {c: v * k for c, v in self.bytes_by_op.items()}),
+        )
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_dt: str
+    out_dims: str
+    opcode: str
+    rhs: str
+
+    def out_bytes(self) -> float:
+        # tuple outputs: sum all shape tokens in the output spec
+        lhs = self.rhs.split(self.opcode + "(", 1)[0]
+        return _first_shape_bytes(lhs)
+
+
+def _args_of(rhs: str, opcode: str) -> list[str]:
+    inner = rhs.split(opcode + "(", 1)[1]
+    depth = 1
+    out = []
+    cur = []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _arg_name(arg: str) -> str:
+    m = re.search(r"%?([\w\.\-]+)\s*$", arg)
+    return m.group(1) if m else arg
+
+
+class HloCostModel:
+    """``tpu_equiv_dtypes=True`` (default) counts traffic in TPU-equivalent
+    dtypes: the CPU backend has no bf16 matmul units, so it inserts
+    convert-to-f32 fusions around every dot and (crucially) *before* the
+    FSDP all-gathers, doubling apparent bytes. A TPU lowering keeps bf16
+    end-to-end, so we look through pure-convert chains: convert ops cost
+    nothing and consumers see the pre-convert dtype."""
+
+    def __init__(self, hlo_text: str, tpu_equiv_dtypes: bool = True):
+        self.computations: dict[str, list[Instr]] = {}
+        self.shapes: dict[str, dict[str, tuple[str, str]]] = {}
+        self.instr_by_name: dict[str, dict[str, Instr]] = {}
+        self.entry: str | None = None
+        self.tpu_equiv = tpu_equiv_dtypes
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self._eff_memo: dict[tuple[str, str], tuple[str, str]] = {}
+        # interprocedural: while-body/cond param tuple-element -> effective
+        # dtype of the corresponding operand in the parent (handles converts
+        # hoisted out of loops, e.g. CPU's bf16->f32 of whole weight stacks)
+        self._param_eff: dict[str, dict[int, str]] = {}
+        if self.tpu_equiv:
+            # fixed point over loop nesting depth (outer loops set the
+            # param dtypes the inner loops' propagation reads)
+            for _ in range(3):
+                self._eff_memo.clear()
+                self._propagate_while_dtypes()
+            self._eff_memo.clear()
+
+    # ---- effective (pre-convert) dtype lookup ------------------------------
+
+    # ops that change layout/selection but not values: a fusion made only of
+    # these (+convert) is a dtype/layout bridge the TPU lowering avoids
+    _BRIDGE_OPS = {
+        "parameter", "convert", "bitcast", "copy", "reshape", "transpose",
+        "dynamic-slice", "slice", "broadcast", "constant", "iota",
+    }
+
+    def _is_pure_convert(self, comp_name: str) -> bool:
+        instrs = self.computations.get(comp_name, [])
+        return bool(instrs) and all(
+            i.opcode in self._BRIDGE_OPS for i in instrs
+        ) and any(i.opcode == "convert" for i in instrs)
+
+    def _propagate_while_dtypes(self) -> None:
+        """For every while, map body/cond tuple-param indices to the
+        effective dtype of the corresponding operand element in the parent."""
+        for parent, instrs in self.computations.items():
+            for ins in instrs:
+                if ins.opcode != "while":
+                    continue
+                body = _BODY_RE.search(ins.rhs)
+                cond = _COND_RE.search(ins.rhs)
+                try:
+                    args = _args_of(ins.rhs, "while")
+                except (IndexError, ValueError):
+                    continue
+                if not args:
+                    continue
+                tup = self.instr_by_name.get(parent, {}).get(_arg_name(args[0]))
+                if tup is None or tup.opcode != "tuple":
+                    continue
+                try:
+                    elems = _args_of(tup.rhs, "tuple")
+                except (IndexError, ValueError):
+                    continue
+                eff = {}
+                for i, e in enumerate(elems):
+                    dt, _ = self._effective(parent, _arg_name(e))
+                    eff[i] = dt
+                for target in (body, cond):
+                    if target:
+                        self._param_eff.setdefault(target.group(1), {}).update(eff)
+
+    _PASS_THROUGH = {"copy", "reshape", "transpose", "dynamic-slice",
+                     "broadcast", "slice"}
+
+    def _effective(self, comp: str, name: str, depth: int = 0):
+        """(dtype, dims) of an instruction, looking through converts and
+        layout/slicing ops (dims stay the op's own; dtype from the source)."""
+        key = (comp, name)
+        if key in self._eff_memo:
+            return self._eff_memo[key]
+        table = self.instr_by_name.get(comp, {})
+        ins = table.get(name)
+        if ins is None or not self.tpu_equiv or depth > 12:
+            return self.shapes.get(comp, {}).get(name, ("f32", ""))
+        through = (
+            ins.opcode == "convert"
+            or ins.opcode in self._PASS_THROUGH
+            or (ins.opcode == "fusion"
+                and (m := _CALLS_RE.search(ins.rhs)) is not None
+                and self._is_pure_convert(m.group(1)))
+        )
+        if ins.opcode == "get-tuple-element":
+            idx_m = re.search(r"index=(\d+)", ins.rhs)
+            try:
+                args = _args_of(ins.rhs, ins.opcode)
+            except (IndexError, ValueError):
+                args = []
+            if idx_m and args:
+                src = table.get(_arg_name(args[0]))
+                if src is not None and src.opcode == "parameter" and \
+                        comp in self._param_eff:
+                    dt = self._param_eff[comp].get(int(idx_m.group(1)))
+                    if dt is not None:
+                        out = (dt, ins.out_dims)
+                        self._eff_memo[key] = out
+                        return out
+                # GTE of a local while: fall through to own dtype
+        if through:
+            try:
+                args = _args_of(ins.rhs, ins.opcode)
+            except (IndexError, ValueError):
+                args = []
+            if args:
+                src_dt, _ = self._effective(comp, _arg_name(args[0]), depth + 1)
+                out = (src_dt, ins.out_dims)  # dims from this op, dtype from source
+                self._eff_memo[key] = out
+                return out
+        out = (ins.out_dt, ins.out_dims)
+        self._eff_memo[key] = out
+        return out
+
+    def _eff_bytes(self, comp: str, name: str) -> float:
+        dt, dims = self._effective(comp, name)
+        if dt not in _DTYPE_BYTES:
+            return 0.0
+        return _elems(dims) * _DTYPE_BYTES[dt]
+
+    def _parse(self, text: str) -> None:
+        cur: str | None = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if cur is None:
+                m = _COMP_HDR.match(stripped)
+                if m and "->" in stripped and stripped.endswith("{"):
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    self.shapes[cur] = {}
+                    if stripped.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(stripped)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            shape_m = _SHAPE_RE.search(rhs)
+            op_m = _OP_RE.search(rhs)
+            opcode = op_m.group(1) if op_m else ""
+            out_dt, out_dims = (shape_m.group(1), shape_m.group(2)) if shape_m \
+                else ("", "")
+            ins = Instr(name, out_dt, out_dims, opcode, rhs)
+            self.computations[cur].append(ins)
+            self.shapes[cur][name] = (out_dt, out_dims)
+            self.instr_by_name.setdefault(cur, {})[name] = ins
+
+    # ---- trip counts -------------------------------------------------------
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Loop bound = the scalar integer constant in the loop condition.
+
+        XLA may wrap the compare in a kLoop fusion, so rather than chase the
+        dataflow we take the max scalar s32/u32 constant declared in the
+        condition computation — scan conditions contain exactly the bound
+        (increments live in the body computation).
+        """
+        best = 1
+        for ins in self.computations.get(cond_name, []):
+            if ins.opcode != "constant":
+                continue
+            cm = re.search(r"^[su]\d+\[\]\s.*constant\((\d+)\)", ins.rhs)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return best
+
+    # ---- per-instruction flops ------------------------------------------------
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        args = _args_of(ins.rhs, "dot")
+        if not args:
+            return 0.0
+        lhs_name = _arg_name(args[0])
+        lhs = self.shapes[comp].get(lhs_name)
+        if lhs is None:
+            return 0.0
+        lhs_dims = [int(d) for d in lhs[1].split(",") if d]
+        m = _LHS_CDIMS.search(ins.rhs)
+        contraction = 1
+        if m and lhs_dims:
+            for i in m.group(1).split(","):
+                if i:
+                    contraction *= lhs_dims[int(i)]
+        return 2.0 * _elems(ins.out_dims) * contraction
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        args = _args_of(ins.rhs, "convolution")
+        if len(args) < 2:
+            return 0.0
+        kern = self.shapes[comp].get(_arg_name(args[1]))
+        if kern is None:
+            return 0.0
+        kdims = [int(d) for d in kern[1].split(",") if d]
+        cout = kdims[-1] if kdims else 1
+        return 2.0 * _elems(ins.out_dims) * max(_elems(kern[1]) // max(cout, 1), 1)
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> float:
+        if ins.opcode not in ("dot", "convolution") and "(" not in ins.rhs:
+            return 0.0
+        try:
+            args = _args_of(ins.rhs, ins.opcode)
+        except (IndexError, ValueError):
+            return 0.0
+        total = 0.0
+        for a in args:
+            nm = _arg_name(a)
+            if nm in self.shapes.get(comp, {}):
+                total += self._eff_bytes(comp, nm)
+        return total
+
+    # ---- computation cost -------------------------------------------------------
+
+    def cost_of(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total
+        for ins in self.computations.get(name, []):
+            op = ins.opcode
+            if not op or op in _FREE_OPS:
+                continue
+            if self.tpu_equiv and (
+                op == "convert"
+                or (op == "fusion"
+                    and (cm := _CALLS_RE.search(ins.rhs)) is not None
+                    and self._is_pure_convert(cm.group(1)))
+            ):
+                continue  # dtype-bridging op a TPU lowering wouldn't emit
+            if op == "while":
+                body = _BODY_RE.search(ins.rhs)
+                cond = _COND_RE.search(ins.rhs)
+                trips = self._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total += self.cost_of(body.group(1)).scaled(trips)
+                continue
+            if op == "fusion":
+                m = _CALLS_RE.search(ins.rhs)
+                if m:
+                    inner = self.cost_of(m.group(1))
+                    total.flops += inner.flops
+                    for k, v in inner.collectives.items():
+                        total.collectives[k] += v
+                total.add_bytes("fusion", ins.out_bytes() + self._operand_bytes(name, ins))
+                continue
+            if op in ("call", "conditional"):
+                for m in _CALLS_RE.finditer(ins.rhs):
+                    total += self.cost_of(m.group(1))
+                for m in re.finditer(
+                    r"(?:true_computation|false_computation)=%?([\w\.\-]+)",
+                    ins.rhs,
+                ):
+                    total += self.cost_of(m.group(1))
+                continue
+            matched_coll = None
+            for coll in _COLLECTIVES:
+                if op == coll or op == coll + "-start":
+                    matched_coll = coll
+                    break
+            if matched_coll:
+                payload = ins.out_bytes()
+                if self.tpu_equiv:
+                    # payload = output elems at the *pre-convert* dtype of
+                    # the operand (TPU would move bf16, not CPU's f32)
+                    try:
+                        args = _args_of(ins.rhs, op)
+                    except (IndexError, ValueError):
+                        args = []
+                    if args:
+                        dt, _ = self._effective(name, _arg_name(args[0]))
+                        if dt in _DTYPE_BYTES and ins.out_dims:
+                            payload = _elems(ins.out_dims) * _DTYPE_BYTES[dt]
+                total.collectives[matched_coll] += payload
+                total.add_bytes(matched_coll, payload + self._operand_bytes(name, ins))
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(name, ins)
+            elif op == "convolution":
+                total.flops += self._conv_flops(name, ins)
+            total.add_bytes(op, ins.out_bytes() + self._operand_bytes(name, ins))
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str, top_ops: int = 0) -> dict:
+    c = HloCostModel(hlo_text).entry_cost()
+    colls = dict(c.collectives)
+    colls["total"] = sum(colls.values())
+    out = {"flops": c.flops, "bytes": c.bytes, "collective_bytes": colls}
+    if top_ops:
+        ranked = sorted(c.bytes_by_op.items(), key=lambda kv: -kv[1])
+        out["bytes_by_op"] = dict(ranked[:top_ops])
+    return out

@@ -1,0 +1,147 @@
+"""Production cross-silo federated trainer (DESIGN.md §4).
+
+One *silo* = one group of mesh rows along the federated axes. Within a
+silo, training is ordinary DP/FSDP+TP; every ``--local-steps`` steps the
+FedAvg round boundary runs as a quantized collective
+(``core.compression.quantized_allreduce_mean``) across the silo axes.
+
+Fault tolerance: atomic keep-k checkpoints (params + opt state + round
+counter + data cursor); ``--resume`` restores and re-shards onto the
+*current* mesh — elastic by construction since checkpoints are
+mesh-agnostic. Client/silo dropout: a silo that misses the deadline is
+excluded from the quantized all-reduce by its participation weight (the
+collective weights by the live-silo count).
+
+On this CPU container the same code path runs with the host mesh
+(``--mesh host``) and a reduced config (``--reduced``) — that is what
+examples/train_lm100m.py drives. The production mesh is exercised by
+``dryrun.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..checkpoint import CheckpointManager
+from ..core.qat import DISABLED, QATConfig
+from ..data.pipeline import LMBatcher, silo_stream
+from ..models import registry
+from ..models.common import sharding_rules
+from ..sharding.policy import ShardingPolicy
+from .mesh import make_host_mesh, make_production_mesh
+from .steps import make_optimizer, make_train_step
+
+
+def build_trainer(cfg, mesh, qat: bool, lr: float, opt_kind: str = "adamw"):
+    policy = ShardingPolicy(mesh)
+    model = registry.get_model(cfg)
+    qcfg = QATConfig() if qat else DISABLED
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = policy.params(params_shape)
+    opt = make_optimizer(params_shape, kind=opt_kind, lr=lr)
+    ospec = policy.params(jax.eval_shape(opt.init, params_shape))
+
+    step_fn = make_train_step(model, opt, qcfg)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(pspec, ospec, None, None),
+        out_shardings=(pspec, ospec, None),
+        donate_argnums=(0, 1),
+    )
+    return model, opt, jitted, policy, qcfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--local-steps", type=int, default=10,
+                    help="U: steps between federated round boundaries")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--no-qat", action="store_true")
+    ap.add_argument("--comm-mode", default="rand",
+                    choices=["rand", "det", "none"])
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    model, opt, jitted, policy, qcfg = build_trainer(
+        cfg, mesh, not args.no_qat, args.lr
+    )
+
+    stream = silo_stream(cfg.vocab, args.batch * (args.seq + 1) * 64, 0,
+                         args.seed)
+    batcher = LMBatcher(stream, args.batch, args.seq)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3, every=args.ckpt_every)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    start = 0
+    if args.resume:
+        from ..checkpoint.manager import latest_step, load_checkpoint
+        if latest_step(args.ckpt_dir) is not None:
+            tree, manifest = load_checkpoint(
+                args.ckpt_dir, {"params": params, "opt": opt_state}
+            )
+            params, opt_state = tree["params"], tree["opt"]
+            params = jax.device_put(params, policy.params(params))
+            opt_state = jax.device_put(opt_state, policy.params(opt_state))
+            start = manifest["step"]
+            print(f"resumed at step {start}")
+
+    fl_axes = tuple(a for a in ("pod",) if a in mesh.axis_names
+                    and mesh.shape[a] > 1)
+
+    with mesh, sharding_rules(policy.activation_rules()):
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in batcher(step).items()}
+            params, opt_state, m = jitted(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32)
+            )
+            if fl_axes and (step + 1) % args.local_steps == 0:
+                # federated round boundary: quantized all-reduce across silos
+                from .steps import make_comm_round
+                from .dryrun import pspec_to_pspecs
+
+                cr = make_comm_round(
+                    mesh, pspec_to_pspecs(policy.params(params)), fl_axes,
+                    qcfg, mode=args.comm_mode,
+                )
+                params = jax.jit(cr)(params, jax.random.PRNGKey(step))
+            if (step + 1) % 10 == 0 or step == start:
+                print(
+                    f"step {step+1:5d}  loss {float(m['loss']):.4f}  "
+                    f"{(step + 1 - start) / (time.time() - t0):.2f} it/s",
+                    flush=True,
+                )
+            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state},
+                           extra={"arch": args.arch})
+        mgr.maybe_save(args.steps, {"params": params, "opt": opt_state},
+                       extra={"arch": args.arch}, force=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import small  # noqa: F401

@@ -1,0 +1,188 @@
+"""Attention flavours: flash-style chunked GQA, block-local/SWA, MLA, decode.
+
+Memory discipline is what matters at the assigned shapes: prefill_32k would
+materialize a 32k x 32k score matrix per head if written naively; instead
+``flash_attention`` scans over KV chunks with an online-softmax carry
+(running max / denominator / accumulator), bounding live memory to
+O(T x chunk) per head. Sliding-window archs (mixtral, recurrentgemma's
+local layers) use ``local_block_attention`` which only *computes* the
+in-window blocks — FLOPs proportional to T x 2W, not T^2 — keeping the
+roofline's useful-FLOPs ratio honest.
+
+All functions take (B, T, H, hd) queries and (B, S, KV, hd) keys/values and
+handle GQA by grouping H into KV groups.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _group(q: Array, n_kv: int) -> Array:
+    B, T, H, D = q.shape
+    return q.reshape(B, T, n_kv, H // n_kv, D)
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head G times.
+
+    Head order matches _group(): h = kv * G + g. Materializing the expanded
+    KV keeps every attention einsum sharded cleanly on the FULL head axis
+    (H is a multiple of the TP degree; KV often is not) — this is what lets
+    XLA partition flash attention over `model` without involuntary
+    replication of the score tensors.
+    """
+    B, S, KV, D = k.shape
+    G = n_heads // KV
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def flash_attention(
+    q: Array,                     # (B, T, H, hd)
+    k: Array,                     # (B, S, KV, hd)
+    v: Array,                     # (B, S, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: int | Array = 0,    # absolute position of q[0] (prefill=0)
+    window: int = 0,              # >0: sliding-window mask on top of causal
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax attention, scanned over KV chunks (flash-style)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    Dv = v.shape[-1]  # may differ from D (MLA: qk dim != v dim)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    qf = q.astype(jnp.float32) * (1.0 / np.sqrt(D))
+    kc = k.reshape(B, n_chunks, chunk, H, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, H, Dv).swapaxes(0, 1)
+
+    q_pos = jnp.arange(T) + q_offset  # (T,)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bthd,bchd->bhtc", qf, kj.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        mask = jnp.ones((T, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhtc,bchd->bhtd", p, vj.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, T), jnp.float32)
+    a0 = jnp.zeros((B, H, T, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3)  # (B,H,T,Dv) -> (B,T,H,Dv)
+    return out.astype(q.dtype)
+
+
+def local_block_attention(
+    q: Array, k: Array, v: Array, *, window: int, q_tile: int = 512
+) -> Array:
+    """Causal sliding-window attention computing only in-window blocks.
+
+    T is tiled into blocks of size ``window``; each query block attends to
+    itself (causally) and its predecessor — exactly covering the W-token
+    window with 2W computed keys per query (FLOPs ~ T*2W, not T^2). Query
+    blocks are further scanned in ``q_tile`` sub-tiles to bound the live
+    f32 score tensor.
+    """
+    B, T, H, D = q.shape
+    W = min(window, T)
+    while T % W:
+        W -= 1
+    n = T // W
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+
+    qb = q.reshape(B, n, W, H, D).astype(jnp.float32) * (1.0 / np.sqrt(D))
+    kb = k.reshape(B, n, W, H, D)
+    vb = v.reshape(B, n, W, H, D)
+    # previous block (block 0's predecessor is masked out entirely)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kb], axis=2).astype(jnp.float32)  # (B,n,2W,H,D)
+    vcat = jnp.concatenate([vprev, vb], axis=2).astype(jnp.float32)
+
+    wq = min(q_tile, W)
+    while W % wq:
+        wq -= 1
+    ns = W // wq
+    qs = qb.reshape(B, n, ns, wq, H, D).transpose(2, 0, 1, 3, 4, 5)
+
+    blk_ok = (jnp.arange(n) > 0)[None, :, None, None, None]  # prev block exists
+    k_rel = jnp.arange(2 * W) - W  # key position relative to block start
+
+    def tile(s_idx_and_q):
+        s_idx, qt = s_idx_and_q
+        q_rel = s_idx * wq + jnp.arange(wq)
+        mask = (k_rel[None, :] <= q_rel[:, None]) & (
+            q_rel[:, None] - k_rel[None, :] < window
+        )
+        s = jnp.einsum("bnwhd,bnxhd->bnhwx", qt, kcat,
+                       preferred_element_type=jnp.float32)
+        valid = mask[None, None, None] & (blk_ok | (k_rel >= 0)[None, None, None, None])
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bnhwx,bnxhd->bnwhd", p, vcat,
+                          preferred_element_type=jnp.float32)
+
+    out = jax.lax.map(tile, (jnp.arange(ns), qs))  # (ns,B,n,wq,H,D)
+    out = out.transpose(1, 2, 0, 3, 4, 5).reshape(B, T, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,            # (B, 1, H, hd)
+    k_cache: Array,      # (B, S, KV, hd)
+    v_cache: Array,
+    pos: Array,          # (B,) int32 — index of the *current* token
+    *,
+    window: int = 0,
+) -> Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    from .common import cache_dot
+    qg = _group(q, KV).astype(jnp.float32) * (1.0 / np.sqrt(D))
+    s = cache_dot("btkgd,bskd->bkgts", qg, k_cache)
+    idx = jnp.arange(S)[None, :]  # (1, S)
+    valid = idx <= pos[:, None]
+    if window:
+        valid &= idx > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = cache_dot("bkgts,bskd->btkgd", p, v_cache)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

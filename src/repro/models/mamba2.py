@@ -1,0 +1,302 @@
+"""Mamba-2 (SSD — state-space duality) layer stack.
+
+Train/prefill use the chunked SSD algorithm (Dao & Gu 2024): within-chunk
+quadratic attention-like einsums + an inter-chunk linear recurrence over
+per-chunk states, giving O(T) work with MXU-friendly block matmuls — the
+TPU-appropriate formulation (no scan over single timesteps).
+
+Decode carries a constant-size recurrent state per layer
+``(B, H, P, N)``; a 500k-token context costs exactly the same per token as
+a 1k-token one — which is why this arch *runs* the long_500k cell.
+
+QAT: in/out projections are FP8-fake-quantized like any dense layer; the
+SSD recurrence parameters (A_log, dt_bias, D) and the short conv are
+precision-exempt (DESIGN.md §6 — recurrence error compounds over T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.qat import QATConfig, beta_init
+from .common import COMPUTE_DTYPE, chunked_ce_loss, dense, hint, logits_head, put, rms_norm, winit
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return s, d_in, H
+
+
+def init_lm(key: Array, cfg: ModelConfig) -> dict:
+    s, d_in, H = _dims(cfg)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    G, N = s.n_groups, s.d_state
+    k = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * G * N
+    # zxbcdt projection: z (gate), x, B, C, dt
+    proj_out = 2 * d_in + 2 * G * N + H
+    blocks = {
+        "ln1": jnp.ones((L, D), jnp.float32),
+        "conv_w": jax.random.normal(k[2], (L, s.conv_width, conv_dim), jnp.float32)
+        * (1.0 / np.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((L, conv_dim), jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.linspace(1.0, 16.0, H), (L, H)).astype(jnp.float32)
+        ),
+        "dt_bias": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.full((H,), 0.01))), (L, H)
+        ).astype(jnp.float32),
+        "D_skip": jnp.ones((L, H), jnp.float32),
+        "ssm_norm": jnp.ones((L, d_in), jnp.float32),
+    }
+    put(blocks, "in_proj", winit(k[0], (L, D, proj_out)))
+    put(blocks, "out_proj", winit(k[1], (L, d_in, D), fan_in=d_in))
+    blocks["in_qb"] = beta_init(stacked_layers=L)
+    blocks["out_qb"] = beta_init(stacked_layers=L)
+    embed = jax.random.normal(k[3], (V, D), jnp.float32) * 0.02
+    head, head_qa = winit(k[4], (D, V), fan_in=D, stacked=False)
+    from ..core.qat import alpha_like
+
+    return {
+        "embed": embed,
+        "embed_qa": alpha_like(embed),
+        "blocks": blocks,
+        "ln_f": jnp.ones((D,), jnp.float32),
+        "lm_head": head,
+        "lm_head_qa": head_qa,
+        "head_qb": beta_init(),
+    }
+
+
+def _segsum(x: Array) -> Array:
+    """exp-able segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k] (i>=j)."""
+    T = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    out = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, T, H, P); dt: (B, T, H); A: (H,) negative;
+    B_/C_: (B, T, G, N). Returns y: (B, T, H, P), final_state (B, H, P, N).
+    """
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, T)
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    rep = H // G
+
+    def cshape(a, extra):
+        return a.reshape((Bb, nc, Q) + extra)
+
+    xc = cshape(x, (H, P)).astype(jnp.float32)
+    dtc = cshape(dt, (H,)).astype(jnp.float32)
+    Bc = cshape(B_, (G, N)).astype(jnp.float32)
+    Cc = cshape(C_, (G, N)).astype(jnp.float32)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A  # (B,nc,Q,H) negative
+    dA_t = dA.transpose(0, 1, 3, 2)           # (B,nc,H,Q)
+    seg = _segsum(dA_t)                        # (B,nc,H,Q,Q)
+    Lmat = jnp.exp(seg)
+
+    xdt = xc * dtc[..., None]                  # (B,nc,Q,H,P)
+
+    # within-chunk (diagonal block) output
+    y_diag = jnp.einsum(
+        "bcqhn,bckhn,bchqk,bckhp->bcqhp", Ch, Bh, Lmat, xdt,
+        preferred_element_type=jnp.float32,
+    )
+
+    # per-chunk end states
+    dA_cum = jnp.cumsum(dA_t, axis=-1)         # (B,nc,H,Q)
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (B,nc,H,Q)
+    states = jnp.einsum(
+        "bckhn,bchk,bckhp->bchpn", Bh, decay_to_end, xdt,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dA_t, axis=-1))  # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        dec, st = inp
+        h = h_prev * dec[..., None, None] + st
+        return h, h_prev
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h0,
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)),
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # cross-chunk contribution
+    in_decay = jnp.exp(dA_cum)  # (B,nc,H,Q) decay from chunk start to q
+    y_off = jnp.einsum(
+        "bcqhn,bchq,bchpn->bcqhp", Ch, in_decay, h_prevs,
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_diag + y_off).reshape(Bb, T, H, P)
+    return y, h_final
+
+
+def _layer_full(h, p, cfg: ModelConfig, qcfg: QATConfig):
+    """Full-sequence Mamba2 block. Returns (h, final_state)."""
+    s, d_in, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B, T, D = h.shape
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    zxbcdt = dense(p, "in_proj", x, qcfg, "in_qb")
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1
+    )
+    # short depthwise causal conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    w = p["conv_w"].astype(COMPUTE_DTYPE)  # (K, conv_dim)
+    pad = jnp.pad(xbc, ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+    xbc = sum(
+        pad[:, i : i + T] * w[i] for i in range(s.conv_width)
+    ) + p["conv_b"].astype(COMPUTE_DTYPE)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = _ssd_chunked(
+        xs.reshape(B, T, H, P),
+        dt,
+        A,
+        Bc.reshape(B, T, G, N),
+        Cc.reshape(B, T, G, N),
+        s.chunk,
+    )
+    y = y + xs.reshape(B, T, H, P).astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, T, d_in).astype(COMPUTE_DTYPE)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = dense(p, "out_proj", y, qcfg, "out_qb")
+    return h + out, state
+
+
+def _layer_decode(h, p, state, conv_buf, cfg: ModelConfig, qcfg: QATConfig):
+    """Single-token recurrent step.
+
+    state: (B, H, P, N); conv_buf: (B, conv_width-1, conv_dim) past inputs.
+    """
+    s, d_in, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B = h.shape[0]
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    zxbcdt = dense(p, "in_proj", x, qcfg, "in_qb")[:, 0]  # (B, proj)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1
+    )
+    xbc_new = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B, conv_dim)
+    w = p["conv_w"].astype(COMPUTE_DTYPE)
+    hist = jnp.concatenate([conv_buf, xbc_new[:, None]], axis=1)  # (B, K, conv)
+    xbc = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(COMPUTE_DTYPE)
+    xbc = jax.nn.silu(xbc)
+    new_buf = hist[:, 1:]
+    xs, Bc, Cc = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bc.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[..., None], Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(COMPUTE_DTYPE)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p["ssm_norm"], cfg.norm_eps)
+    out = dense(p, "out_proj", y, qcfg, "out_qb")
+    return h + out, state, new_buf
+
+
+# --------------------------------------------------------------------------
+# Model-level API (mirrors transformer.py)
+# --------------------------------------------------------------------------
+
+
+def forward_hidden(params, tokens, cfg, qcfg, patches=None):
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    h = hint(emb[tokens], "batch", "seq", None)
+
+    def body(h, layer_p):
+        h, _ = _layer_full(h, layer_p, cfg, qcfg)
+        return hint(h, "batch", "seq", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return rms_norm(h, params["ln_f"], cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg, qcfg):
+    h = forward_hidden(params, batch["tokens"], cfg, qcfg)
+    return chunked_ce_loss(h, params, batch["labels"], qcfg, cfg.ce_chunks)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    s, d_in, H = _dims(cfg)
+    L = cfg.n_layers
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "state": jnp.zeros((L, batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((L, batch, s.conv_width - 1, conv_dim), COMPUTE_DTYPE),
+    }
+
+
+def prefill(params, tokens, cfg, qcfg, patches=None):
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    h = emb[tokens]
+    s, d_in, H = _dims(cfg)
+
+    def body(h, layer_p):
+        h, state = _layer_full(h, layer_p, cfg, qcfg)
+        return h, state
+
+    h, states = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = logits_head(h[:, -1:], params, qcfg)[:, 0]
+    cache = init_cache(cfg, tokens.shape[0], tokens.shape[1])
+    cache["state"] = states
+    # conv buffer: last (conv_width-1) inputs are not tracked through scan ys
+    # here; decode restarts its conv history (first K-1 decode steps see a
+    # zero-padded window, matching a fresh-context assumption).
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg, qcfg):
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    h = emb[token][:, None, :]
+
+    def body(h, xs):
+        layer_p, state, buf = xs
+        h, state, buf = _layer_decode(h, layer_p, state, buf, cfg, qcfg)
+        return h, (state, buf)
+
+    h, (states, bufs) = jax.lax.scan(
+        body, h, (params["blocks"], cache["state"], cache["conv"])
+    )
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = logits_head(h, params, qcfg)[:, 0]
+    return logits, {"state": states, "conv": bufs}

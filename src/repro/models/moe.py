@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with capacity-based sort-free dispatch.
+
+Token routing uses the rank-in-expert trick (argsort + first-occurrence
+searchsorted) to place each (token, choice) pair into a unique
+``(expert, slot)`` cell of a (E, C, D) dispatch buffer — no (N, E, C)
+one-hot tensors (which would be ~10^12 elements at train_4k scale). Expert
+FFNs then run as dense stacked einsums over the buffer, so compiled FLOPs
+scale with top_k * capacity_factor, not n_experts.
+
+Distribution (§Perf cell 2): under a mesh, the whole dispatch+compute runs
+inside a ``shard_map`` that is *manual over the data axes and auto over
+model*: each data row routes only its own tokens into its own local
+capacity buffer (C_local = cf*K*N_local/E). Tokens never cross rows —
+the global-scatter formulation cost 1.2 TB/step of dispatch all-gathers
+on granite-moe train_4k (measured; see EXPERIMENTS.md). Statistically
+this is the standard "local dispatch" EP approximation: capacity is
+enforced per row rather than globally, and expert weights are shared
+(FSDP-gathered) as before.
+
+The router stays FP32 and un-quantized (DESIGN.md §6); expert weights
+carry per-(layer, expert) FP8 clipping values. Tokens overflowing an
+expert's per-row capacity are dropped (combine weight zero) — standard
+GShard behaviour, rare at capacity_factor 1.25 under balanced routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core.qat import QATConfig, aq, wq
+from .common import _RULES, COMPUTE_DTYPE, activation, hint
+
+Array = jax.Array
+
+
+def _expert_dense(p, name: str, x: Array, qcfg: QATConfig) -> Array:
+    """x: (E, C, d_in) @ stacked expert weights (E, d_in, d_out)."""
+    w = p[name]
+    if qcfg.enabled and qcfg.quantize_weights:
+        w = wq(w.astype(jnp.float32), p[name + "_qa"], qcfg)
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(COMPUTE_DTYPE))
+
+
+def _moe_tokens(p, xf: Array, cfg: ModelConfig, qcfg: QATConfig,
+                n_total_tokens: int, sharded_hints: bool = False) -> Array:
+    """Route + dispatch + expert-compute + combine for a flat token batch.
+
+    ``xf``: (N, D) — global batch outside a mesh, or the row-local shard
+    inside the shard_map. Capacity derives from ``n_total_tokens`` == N.
+    """
+    N, D = xf.shape
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    xf = aq(xf, p["mlp_qb"].astype(jnp.float32), qcfg)
+
+    # ---- routing (FP32) ----------------------------------------------------
+    logits = jnp.einsum(
+        "nd,de->ne", xf.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(gates_all, K)      # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- rank of each (token, choice) within its expert ---------------------
+    flat_e = expert_idx.reshape(-1)                          # (N*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(N * K) - first
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    C = max(int(m.capacity_factor * n_total_tokens * K / E), 1)
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)         # overflow -> waste row
+
+    # ---- dispatch ------------------------------------------------------------
+    xr = jnp.repeat(xf.astype(COMPUTE_DTYPE), K, axis=0)     # (N*K, D)
+    if sharded_hints:
+        xr = hint(xr, None, "tp")
+    buf = jnp.zeros((E * C + 1, D), COMPUTE_DTYPE).at[slot].set(xr)
+    if sharded_hints:
+        buf = hint(buf, None, "tp")
+    buf = buf[: E * C].reshape(E, C, D)
+    if sharded_hints:
+        # capacity rows over data (EP), model dim over TP — without these
+        # the scatter output replicates per device (55-96 GB measured)
+        buf = hint(buf, None, "batch", "tp")
+
+    # ---- expert compute (stacked, QAT-quantized) ------------------------------
+    g = _expert_dense(p, "we_gate", buf, qcfg)
+    u = _expert_dense(p, "we_up", buf, qcfg)
+    hmid = activation(g, cfg.act) * u
+    if sharded_hints:
+        hmid = hint(hmid, None, "batch", "tp")
+    hmid = aq(hmid, p["down_qb"].astype(jnp.float32), qcfg)
+    out_buf = _expert_dense(p, "we_down", hmid, qcfg)        # (E, C, D)
+    if sharded_hints:
+        out_buf = hint(out_buf, None, "batch", "tp")
+
+    # ---- combine ---------------------------------------------------------------
+    out_flat = out_buf.reshape(E * C, D)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((1, D), COMPUTE_DTYPE)], axis=0
+    )
+    gathered = out_flat[slot].reshape(N, K, D)
+    w = (gate_vals * keep.reshape(N, K)).astype(jnp.float32)
+    y = jnp.einsum("nkd,nk->nd", gathered.astype(jnp.float32), w)
+    return y.astype(xf.dtype)
+
+
+def moe_ffn(p, x: Array, cfg: ModelConfig, qcfg: QATConfig) -> Array:
+    """x: (B, T, D) -> (B, T, D). ``p`` holds this layer's slice.
+
+    NOTE (§Perf cell 2): a row-local EP variant (shard_map manual over the
+    data axes, auto over model) removes the cross-row dispatch collectives
+    entirely, but partial-auto shard_map nested inside scan+vjp aborts the
+    XLA:CPU SPMD partitioner (C++ crash) at jax 0.8 — the global-dispatch
+    formulation below with explicit buffer sharding hints is the shipped
+    path; the EP variant is the recorded next step for real-TPU infra.
+    """
+    B, T, D = x.shape
+    y = _moe_tokens(p, x.reshape(B * T, D), cfg, qcfg, B * T,
+                    sharded_hints=True)
+    return y.reshape(B, T, D).astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Uniform model API over the families + input spec factory for the dry-run.
+
+``get_model(cfg)`` returns a :class:`Model` namespace of pure functions:
+``init``, ``train_loss``, ``prefill``, ``decode_step``, ``init_cache``.
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step lowered for that shape (no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import mamba2, rglru, transformer, whisper
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable        # (params, batch, qcfg) -> scalar
+    prefill: Callable           # (params, batch, qcfg) -> (logits, cache)
+    decode_step: Callable       # (params, cache, token, pos, qcfg) -> (logits, cache)
+    init_cache: Callable        # (batch, seq_len) -> cache
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        mod = mamba2
+    elif cfg.family == "hybrid":
+        mod = rglru
+    elif cfg.family == "encdec":
+        mod = whisper
+    else:
+        mod = transformer
+
+    def train_loss(params, batch, qcfg):
+        return mod.train_loss(params, batch, cfg, qcfg)
+
+    def prefill(params, batch, qcfg):
+        if cfg.family == "encdec":
+            return mod.prefill(params, batch["tokens"], cfg, qcfg,
+                               features=batch["features"])
+        if cfg.family == "vlm":
+            return mod.prefill(params, batch["tokens"], cfg, qcfg,
+                               patches=batch.get("patches"))
+        return mod.prefill(params, batch["tokens"], cfg, qcfg)
+
+    def decode_step(params, cache, token, pos, qcfg):
+        return mod.decode_step(params, cache, token, pos, cfg, qcfg)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_lm(key, cfg),
+        train_loss=train_loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the lowered step's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            # decoder sees S tokens; encoder sees the stub frame embeddings
+            return {
+                "features": emb(B, cfg.encoder_len, cfg.d_model),
+                "tokens": tok(B, S),
+                **({"labels": tok(B, S)} if shape.kind == "train" else {}),
+            }
+        batch: dict = {"tokens": tok(B, S if not cfg.n_patches else S - cfg.n_patches)}
+        if cfg.n_patches:
+            batch["patches"] = emb(B, cfg.n_patches, cfg.d_model)
+        if shape.kind == "train":
+            batch["labels"] = tok(B, *batch["tokens"].shape[1:])
+        return batch
+
+    # decode: one token against a seq_len cache
+    return {"token": tok(B), "pos": jax.ShapeDtypeStruct((), jnp.int32)}

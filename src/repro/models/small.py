@@ -1,0 +1,363 @@
+"""The paper's own experiment models (federated-simulation scale).
+
+LeNet (GroupNorm variant), a reduced ResNet, MatchboxNet-style 1-D
+separable conv net, and a KWT-style tiny transformer classifier — all with
+FP8-QAT hooks following the ``_qa``/``_qb`` clipping-value convention of
+``repro.core.qat``. Per the paper, batch norms are replaced by GroupNorm
+(better under skewed federated data), and biases/norm parameters are never
+weight-quantized.
+
+All models expose ``init(key, ...) -> params`` and
+``apply(params, x, qat_cfg, key=None) -> logits``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.qat import QATConfig, alpha_like, aq, beta_init, wq
+
+Array = jax.Array
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / d_in))
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w, "w_qa": alpha_like(w), "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * np.sqrt(
+        2.0 / fan_in
+    )
+    return {"w": w, "w_qa": alpha_like(w), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+_SITE = [0]   # per-trace quantization-site counter (reset at apply entry)
+_KEY = [None]  # per-trace PRNG key for stochastic QAT (Table 2 ablation)
+
+
+def _key_for(qcfg, key, i):
+    if qcfg.mode != "rand" or not (qcfg.enabled and qcfg.quantize_weights):
+        return None
+    import jax as _jax
+    base = key if key is not None else _KEY[0]
+    if base is None:
+        base = _jax.random.PRNGKey(0)
+    return _jax.random.fold_in(base, i)
+
+
+def _dense(p, x, qcfg, key=None):
+    x = aq(x, p["x_qb"], qcfg) if "x_qb" in p else x
+    _SITE[0] += 1
+    return x @ wq(p["w"], p["w_qa"], qcfg,
+                  key=_key_for(qcfg, key, _SITE[0])) + p["b"]
+
+
+def _conv(p, x, qcfg, stride=1, padding="SAME", key=None):
+    x = aq(x, p["x_qb"], qcfg) if "x_qb" in p else x
+    _SITE[0] += 1
+    w = wq(p["w"], p["w_qa"], qcfg, key=_key_for(qcfg, key, _SITE[0]))
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def group_norm(p, x, groups=8, eps=1e-5):
+    c = x.shape[-1]
+    g = min(groups, c)
+    shape = x.shape[:-1] + (g, c // g)
+    xg = x.reshape(shape)
+    mean = xg.mean(axis=tuple(range(1, xg.ndim - 2)) + (xg.ndim - 1,), keepdims=True)
+    var = xg.var(axis=tuple(range(1, xg.ndim - 2)) + (xg.ndim - 1,), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    x = xg.reshape(x.shape)
+    return x * p["scale"] + p["bias"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (unit/property-test workhorse)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_in=32, d_hidden=64, n_classes=10, depth=2):
+    keys = jax.random.split(key, depth + 1)
+    params = {}
+    d = d_in
+    for i in range(depth):
+        layer = _dense_init(keys[i], d, d_hidden)
+        layer["x_qb"] = beta_init()
+        params[f"fc{i}"] = layer
+        d = d_hidden
+    head = _dense_init(keys[-1], d, n_classes)
+    head["x_qb"] = beta_init()
+    params["head"] = head
+    return params
+
+
+def apply_mlp(params, x, qcfg: QATConfig, key=None):
+    _SITE[0] = 0
+    _KEY[0] = key
+    h = x.reshape(x.shape[0], -1)
+    i = 0
+    while f"fc{i}" in params:
+        h = jax.nn.relu(_dense(params[f"fc{i}"], h, qcfg))
+        i += 1
+    return _dense(params["head"], h, qcfg)
+
+
+# ---------------------------------------------------------------------------
+# LeNet with GroupNorm (paper's CIFAR model)
+# ---------------------------------------------------------------------------
+
+
+def init_lenet(key, in_ch=3, n_classes=10):
+    k = jax.random.split(key, 5)
+    params = {
+        "conv1": {**_conv_init(k[0], 5, 5, in_ch, 6), "x_qb": beta_init()},
+        "gn1": _gn_init(6),
+        "conv2": {**_conv_init(k[1], 5, 5, 6, 16), "x_qb": beta_init()},
+        "gn2": _gn_init(16),
+        "fc1": {**_dense_init(k[2], 16 * 8 * 8, 120), "x_qb": beta_init()},
+        "fc2": {**_dense_init(k[3], 120, 84), "x_qb": beta_init()},
+        "head": {**_dense_init(k[4], 84, n_classes), "x_qb": beta_init()},
+    }
+    return params
+
+
+def apply_lenet(params, x, qcfg: QATConfig, key=None):
+    _SITE[0] = 0
+    _KEY[0] = key
+    # x: (B, 32, 32, C) float in [0,1]
+    h = jax.nn.relu(group_norm(params["gn1"], _conv(params["conv1"], x, qcfg)))
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    h = jax.nn.relu(group_norm(params["gn2"], _conv(params["conv2"], h, qcfg)))
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_dense(params["fc1"], h, qcfg))
+    h = jax.nn.relu(_dense(params["fc2"], h, qcfg))
+    return _dense(params["head"], h, qcfg)
+
+
+# ---------------------------------------------------------------------------
+# Reduced ResNet (GroupNorm) — stand-in for the paper's ResNet18 at sim scale
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cin, cout, stride):
+    k = jax.random.split(key, 3)
+    p = {
+        "conv1": {**_conv_init(k[0], 3, 3, cin, cout), "x_qb": beta_init()},
+        "gn1": _gn_init(cout),
+        "conv2": {**_conv_init(k[1], 3, 3, cout, cout), "x_qb": beta_init()},
+        "gn2": _gn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = {**_conv_init(k[2], 1, 1, cin, cout), "x_qb": beta_init()}
+    return p
+
+
+def init_resnet(key, in_ch=3, n_classes=10, widths=(16, 32, 64)):
+    keys = jax.random.split(key, len(widths) * 2 + 2)
+    params = {
+        "stem": {**_conv_init(keys[0], 3, 3, in_ch, widths[0]), "x_qb": beta_init()},
+        "gn0": _gn_init(widths[0]),
+    }
+    c = widths[0]
+    i = 1
+    for w in widths:
+        stride = 1 if w == widths[0] else 2
+        params[f"block{i}a"] = _block_init(keys[i * 2 - 1], c, w, stride)
+        params[f"block{i}b"] = _block_init(keys[i * 2], w, w, 1)
+        c = w
+        i += 1
+    params["head"] = {**_dense_init(keys[-1], c, n_classes), "x_qb": beta_init()}
+    return params
+
+
+def _apply_block(p, x, qcfg):
+    # Downsampling blocks are exactly the ones with a projection shortcut
+    # (widths grow monotonically in this reduced family).
+    stride = 2 if "proj" in p else 1
+    h = jax.nn.relu(group_norm(p["gn1"], _conv(p["conv1"], x, qcfg, stride=stride)))
+    h = group_norm(p["gn2"], _conv(p["conv2"], h, qcfg))
+    if "proj" in p:
+        x = _conv(p["proj"], x, qcfg, stride=stride)
+    return jax.nn.relu(h + x)
+
+
+def apply_resnet(params, x, qcfg: QATConfig, key=None):
+    _SITE[0] = 0
+    _KEY[0] = key
+    h = jax.nn.relu(group_norm(params["gn0"], _conv(params["stem"], x, qcfg)))
+    i = 1
+    while f"block{i}a" in params:
+        h = _apply_block(params[f"block{i}a"], h, qcfg)
+        h = _apply_block(params[f"block{i}b"], h, qcfg)
+        i += 1
+    h = h.mean(axis=(1, 2))
+    return _dense(params["head"], h, qcfg)
+
+
+# ---------------------------------------------------------------------------
+# MatchboxNet-style 1-D separable conv net (keyword spotting)
+# ---------------------------------------------------------------------------
+
+
+def _conv1d_init(key, k, cin, cout, depthwise=False):
+    if depthwise:
+        w = jax.random.normal(key, (k, 1, cin), jnp.float32) * np.sqrt(2.0 / k)
+    else:
+        w = jax.random.normal(key, (k, cin, cout), jnp.float32) * np.sqrt(
+            2.0 / (k * cin)
+        )
+    return {"w": w, "w_qa": alpha_like(w), "b": jnp.zeros((cout if not depthwise else cin,), jnp.float32)}
+
+
+def _conv1d(p, x, qcfg, depthwise=False, key=None):
+    x = aq(x, p["x_qb"], qcfg) if "x_qb" in p else x
+    _SITE[0] += 1
+    w = wq(p["w"], p["w_qa"], qcfg, key=_key_for(qcfg, key, _SITE[0]))
+    groups = x.shape[-1] if depthwise else 1
+    y = jax.lax.conv_general_dilated(
+        x, w, (1,), "SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups,
+    )
+    return y + p["b"]
+
+
+def init_matchbox(key, in_feats=64, channels=64, n_classes=35, blocks=3):
+    keys = jax.random.split(key, blocks * 2 + 3)
+    params = {
+        "stem": {**_conv1d_init(keys[0], 11, in_feats, channels), "x_qb": beta_init()},
+        "gn0": _gn_init(channels),
+    }
+    for i in range(blocks):
+        params[f"dw{i}"] = {
+            **_conv1d_init(keys[1 + 2 * i], 13, channels, channels, depthwise=True),
+            "x_qb": beta_init(),
+        }
+        params[f"pw{i}"] = {
+            **_conv1d_init(keys[2 + 2 * i], 1, channels, channels),
+            "x_qb": beta_init(),
+        }
+        params[f"gn{i+1}"] = _gn_init(channels)
+    params["head"] = {**_dense_init(keys[-1], channels, n_classes), "x_qb": beta_init()}
+    return params
+
+
+def apply_matchbox(params, x, qcfg: QATConfig, key=None):
+    _SITE[0] = 0
+    _KEY[0] = key
+    # x: (B, T, F) mel-spectrogram-like features
+    h = jax.nn.relu(group_norm(params["gn0"], _conv1d(params["stem"], x, qcfg)))
+    i = 0
+    while f"dw{i}" in params:
+        r = _conv1d(params[f"dw{i}"], h, qcfg, depthwise=True)
+        r = _conv1d(params[f"pw{i}"], r, qcfg)
+        h = jax.nn.relu(group_norm(params[f"gn{i+1}"], r + h))
+        i += 1
+    h = h.mean(axis=1)
+    return _dense(params["head"], h, qcfg)
+
+
+# ---------------------------------------------------------------------------
+# KWT-style tiny transformer classifier (keyword spotting)
+# ---------------------------------------------------------------------------
+
+
+def init_kwt(key, in_feats=64, d_model=64, n_heads=4, depth=2, n_classes=35,
+             seq_len=32):
+    keys = jax.random.split(key, depth * 4 + 3)
+    params = {
+        "embed": {**_dense_init(keys[0], in_feats, d_model), "x_qb": beta_init()},
+        "pos": jax.random.normal(keys[1], (seq_len + 1, d_model), jnp.float32) * 0.02,
+        "cls": jnp.zeros((1, 1, d_model), jnp.float32),
+    }
+    for i in range(depth):
+        k = keys[2 + 4 * i : 6 + 4 * i]
+        params[f"layer{i}"] = {
+            "ln1": _gn_init(d_model),
+            "qkv": {**_dense_init(k[0], d_model, 3 * d_model), "x_qb": beta_init()},
+            "proj": {**_dense_init(k[1], d_model, d_model), "x_qb": beta_init()},
+            "ln2": _gn_init(d_model),
+            "fc1": {**_dense_init(k[2], d_model, 4 * d_model), "x_qb": beta_init()},
+            "fc2": {**_dense_init(k[3], 4 * d_model, d_model), "x_qb": beta_init()},
+        }
+    params["head"] = {**_dense_init(keys[-1], d_model, n_classes), "x_qb": beta_init()}
+    return params
+
+
+def _layer_norm(p, x, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _kwt_layer(p, x, qcfg, n_heads=4):
+    B, T, D = x.shape
+    H = n_heads
+    h = _layer_norm(p["ln1"], x)
+    qkv = _dense(p["qkv"], h, qcfg).reshape(B, T, 3, H, D // H)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(D // H)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, D)
+    x = x + _dense(p["proj"], o, qcfg)
+    h = _layer_norm(p["ln2"], x)
+    h = jax.nn.gelu(_dense(p["fc1"], h, qcfg))
+    return x + _dense(p["fc2"], h, qcfg)
+
+
+def apply_kwt(params, x, qcfg: QATConfig, key=None, n_heads=4):
+    _SITE[0] = 0
+    _KEY[0] = key
+    # x: (B, T, F)
+    h = _dense(params["embed"], x, qcfg)
+    cls = jnp.broadcast_to(params["cls"], (h.shape[0], 1, h.shape[-1]))
+    h = jnp.concatenate([cls, h], axis=1) + params["pos"][: h.shape[1] + 1]
+    i = 0
+    while f"layer{i}" in params:
+        h = _kwt_layer(params[f"layer{i}"], h, qcfg, n_heads)
+        i += 1
+    return _dense(params["head"], h[:, 0], qcfg)
+
+
+# ---------------------------------------------------------------------------
+# Shared loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss(apply_fn):
+    def loss(params, x, y, qcfg, key=None):
+        return softmax_xent(apply_fn(params, x, qcfg, key=key), y)
+
+    return loss
+
+
+REGISTRY = {
+    "mlp": (init_mlp, apply_mlp),
+    "lenet": (init_lenet, apply_lenet),
+    "resnet": (init_resnet, apply_resnet),
+    "matchbox": (init_matchbox, apply_matchbox),
+    "kwt": (init_kwt, apply_kwt),
+}

@@ -1,0 +1,239 @@
+"""Whisper-style encoder-decoder backbone (audio frontend = STUB per spec).
+
+``input_specs`` provide *precomputed post-conv frame embeddings*
+(B, enc_len, D) — the mel+conv frontend is out of scope (assignment note).
+Encoder: bidirectional self-attention blocks. Decoder: causal self-attn +
+cross-attn to the encoder output + GELU MLP. Sinusoidal positions on both
+sides (extendable, so the decode_32k research shape is well-defined).
+
+Decode caches: per-decoder-layer self-attn KV ring plus the cross-attn KV,
+which is computed once at prefill and never changes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.qat import QATConfig, alpha_like, beta_init
+from .attention import decode_attention, flash_attention
+from .common import (
+    COMPUTE_DTYPE,
+    chunked_ce_loss,
+    dense,
+    hint,
+    logits_head,
+    put,
+    rms_norm,
+    winit,
+)
+
+Array = jax.Array
+
+
+def _sinusoidal(T: int, D: int) -> Array:
+    pos = np.arange(T)[:, None]
+    dim = np.arange(D // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / D)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), COMPUTE_DTYPE
+    )
+
+
+def _init_attn(key, cfg: ModelConfig, L: int, prefix: str) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    put(p, f"{prefix}_wq", winit(ks[0], (L, D, H * hd), fan_in=D))
+    put(p, f"{prefix}_wk", winit(ks[1], (L, D, KV * hd), fan_in=D))
+    put(p, f"{prefix}_wv", winit(ks[2], (L, D, KV * hd), fan_in=D))
+    put(p, f"{prefix}_wo", winit(ks[3], (L, H * hd, D), fan_in=H * hd))
+    p[f"{prefix}_ln"] = jnp.ones((L, D), jnp.float32)
+    p[f"{prefix}_qb"] = beta_init(stacked_layers=L)
+    p[f"{prefix}_o_qb"] = beta_init(stacked_layers=L)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig, L: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    p: dict = {}
+    put(p, "w_up", winit(ks[0], (L, D, F), fan_in=D))
+    put(p, "w_down", winit(ks[1], (L, F, D), fan_in=F))
+    p["mlp_ln"] = jnp.ones((L, D), jnp.float32)
+    p["mlp_qb"] = beta_init(stacked_layers=L)
+    p["down_qb"] = beta_init(stacked_layers=L)
+    return p
+
+
+def init_lm(key: Array, cfg: ModelConfig) -> dict:
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    D, V = cfg.d_model, cfg.vocab
+    k = jax.random.split(key, 8)
+    enc_blocks = {**_init_attn(k[0], cfg, Le, "self"), **_init_mlp(k[1], cfg, Le)}
+    dec_blocks = {
+        **_init_attn(k[2], cfg, Ld, "self"),
+        **_init_attn(k[3], cfg, Ld, "cross"),
+        **_init_mlp(k[4], cfg, Ld),
+    }
+    embed = jax.random.normal(k[5], (V, D), jnp.float32) * 0.02
+    head, head_qa = winit(k[6], (D, V), fan_in=D, stacked=False)
+    return {
+        "enc_blocks": enc_blocks,
+        "dec_blocks": dec_blocks,
+        "enc_ln_f": jnp.ones((D,), jnp.float32),
+        "embed": embed,
+        "embed_qa": alpha_like(embed),
+        "ln_f": jnp.ones((D,), jnp.float32),
+        "lm_head": head,
+        "lm_head_qa": head_qa,
+        "head_qb": beta_init(),
+    }
+
+
+def _mha(p, prefix, xq, xkv, cfg, qcfg, causal):
+    B, T, D = xq.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(p, f"{prefix}_wq", xq, qcfg, f"{prefix}_qb").reshape(B, T, H, hd)
+    k = dense(p, f"{prefix}_wk", xkv, qcfg, f"{prefix}_qb").reshape(
+        B, xkv.shape[1], KV, hd
+    )
+    v = dense(p, f"{prefix}_wv", xkv, qcfg, f"{prefix}_qb").reshape(
+        B, xkv.shape[1], KV, hd
+    )
+    out = flash_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    out = dense(p, f"{prefix}_wo", out.reshape(B, T, H * hd), qcfg,
+                f"{prefix}_o_qb")
+    return out, k, v
+
+
+def _mlp(p, h, cfg, qcfg):
+    x = rms_norm(h, p["mlp_ln"], cfg.norm_eps)
+    u = jax.nn.gelu(dense(p, "w_up", x, qcfg, "mlp_qb"))
+    return h + dense(p, "w_down", u, qcfg, "down_qb")
+
+
+def encode(params, features: Array, cfg: ModelConfig, qcfg: QATConfig) -> Array:
+    """features: (B, enc_len, D) stub frame embeddings."""
+    h = features.astype(COMPUTE_DTYPE) + _sinusoidal(features.shape[1], cfg.d_model)
+    h = hint(h, "batch", "seq", None)
+
+    def body(h, p):
+        x = rms_norm(h, p["self_ln"], cfg.norm_eps)
+        out, _, _ = _mha(p, "self", x, x, cfg, qcfg, causal=False)
+        h = h + out
+        return _mlp(p, h, cfg, qcfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return rms_norm(h, params["enc_ln_f"], cfg.norm_eps)
+
+
+def decoder_hidden(params, tokens, enc_out, cfg, qcfg):
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    h = emb[tokens] + _sinusoidal(tokens.shape[1], cfg.d_model)
+    h = hint(h, "batch", "seq", None)
+
+    def body(h, p):
+        x = rms_norm(h, p["self_ln"], cfg.norm_eps)
+        out, _, _ = _mha(p, "self", x, x, cfg, qcfg, causal=True)
+        h = h + out
+        x = rms_norm(h, p["cross_ln"], cfg.norm_eps)
+        out, ck, cv = _mha(p, "cross", x, enc_out, cfg, qcfg, causal=False)
+        h = h + out
+        return _mlp(p, h, cfg, qcfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    return rms_norm(h, params["ln_f"], cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg, qcfg):
+    """batch: {'features': (B,F,D), 'tokens': (B,T), 'labels': (B,T)}"""
+    enc = encode(params, batch["features"], cfg, qcfg)
+    h = decoder_hidden(params, batch["tokens"], enc, cfg, qcfg)
+    return chunked_ce_loss(h, params, batch["labels"], qcfg, cfg.ce_chunks)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    Ld = cfg.n_layers
+    kv = (Ld, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    cross = (Ld, batch, cfg.encoder_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(kv, COMPUTE_DTYPE),
+        "v": jnp.zeros(kv, COMPUTE_DTYPE),
+        "ck": jnp.zeros(cross, COMPUTE_DTYPE),
+        "cv": jnp.zeros(cross, COMPUTE_DTYPE),
+    }
+
+
+def prefill(params, tokens, cfg, qcfg, features=None, cache_len: int | None = None):
+    """Encode audio + run decoder prompt; returns (logits, cache)."""
+    B, T = tokens.shape
+    S = cache_len or T
+    enc = encode(params, features, cfg, qcfg)
+    cache = init_cache(cfg, B, S)
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    h = emb[tokens] + _sinusoidal(T, cfg.d_model)
+
+    def body(h, p):
+        x = rms_norm(h, p["self_ln"], cfg.norm_eps)
+        out, sk, sv = _mha(p, "self", x, x, cfg, qcfg, causal=True)
+        h = h + out
+        x = rms_norm(h, p["cross_ln"], cfg.norm_eps)
+        out, ck, cv = _mha(p, "cross", x, enc, cfg, qcfg, causal=False)
+        h = h + out
+        return _mlp(p, h, cfg, qcfg), (sk, sv, ck, cv)
+
+    h, (sk, sv, ck, cv) = jax.lax.scan(body, h, params["dec_blocks"])
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    pad = S - T
+    cache["k"] = jnp.pad(sk.astype(COMPUTE_DTYPE), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache["v"] = jnp.pad(sv.astype(COMPUTE_DTYPE), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache["ck"], cache["cv"] = ck.astype(COMPUTE_DTYPE), cv.astype(COMPUTE_DTYPE)
+    return logits_head(h[:, -1:], params, qcfg)[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, qcfg: QATConfig):
+    B = token.shape[0]
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    T_table = _sinusoidal_at(pos, cfg.d_model)
+    h = emb[token][:, None, :] + T_table
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def body(h, xs):
+        p, kc, vc, ck, cv = xs
+        x = rms_norm(h, p["self_ln"], cfg.norm_eps)
+        q = dense(p, "self_wq", x, qcfg, "self_qb").reshape(B, 1, H, hd)
+        k = dense(p, "self_wk", x, qcfg, "self_qb").reshape(B, 1, KV, hd)
+        v = dense(p, "self_wv", x, qcfg, "self_qb").reshape(B, 1, KV, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
+        out = decode_attention(q, kc, vc, jnp.broadcast_to(pos, (B,)))
+        h = h + dense(p, "self_wo", out.reshape(B, 1, H * hd), qcfg, "self_o_qb")
+        x = rms_norm(h, p["cross_ln"], cfg.norm_eps)
+        q = dense(p, "cross_wq", x, qcfg, "cross_qb").reshape(B, 1, H, hd)
+        F = ck.shape[1]
+        out = decode_attention(q, ck, cv, jnp.full((B,), F - 1, jnp.int32))
+        h = h + dense(p, "cross_wo", out.reshape(B, 1, H * hd), qcfg, "cross_o_qb")
+        h = _mlp(p, h, cfg, qcfg)
+        return h, (kc, vc)
+
+    h, (kc, vc) = jax.lax.scan(
+        body, h,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
+    )
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    new_cache = dict(cache, k=kc, v=vc)
+    return logits_head(h, params, qcfg)[:, 0], new_cache
+
+
+def _sinusoidal_at(pos, D: int) -> Array:
+    dim = jnp.arange(D // 2)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(
+        COMPUTE_DTYPE
+    )

@@ -1,0 +1,14 @@
+from .sgd import sgd
+from .adamw import adamw
+from .schedules import constant, cosine_decay, warmup_cosine
+from .base import Optimizer, apply_updates
+
+__all__ = [
+    "sgd",
+    "adamw",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+    "Optimizer",
+    "apply_updates",
+]

@@ -1,0 +1,60 @@
+"""AdamW with decoupled weight decay (paper's keyword-spotting optimizer)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, as_schedule
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    wd_mask: PyTree | None = None,
+    trust_mask: PyTree | None = None,
+    trust_frac: float = 0.02,
+) -> Optimizer:
+    lr_fn = as_schedule(lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(mu=z, nu=jax.tree.map(jnp.zeros_like, z))
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1**t), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2**t), nu)
+        mask = wd_mask if wd_mask is not None else jax.tree.map(lambda _: True, params)
+
+        tmask = trust_mask if trust_mask is not None else \
+            jax.tree.map(lambda _: False, params)
+
+        def upd(mh, vh, p, msk, is_clip):
+            step_ = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p * (1.0 if msk else 0.0)
+            u = -eta * step_
+            if is_clip:
+                lim = trust_frac * jnp.maximum(jnp.abs(p), 1e-8)
+                u = jnp.clip(u, -lim, lim)
+            return u
+
+        return (jax.tree.map(upd, mu_hat, nu_hat, params, mask, tmask),
+                AdamWState(mu, nu))
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+
+    return fn
+
+
+def warmup_cosine(init_value: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    cos = cosine_decay(init_value, max(decay_steps - warmup_steps, 1), alpha)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = init_value * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,60 @@
+"""SGD with optional momentum and decoupled weight decay (paper's image-task optimizer)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, as_schedule
+
+PyTree = Any
+
+
+def sgd(
+    lr,
+    momentum: float = 0.0,
+    weight_decay: float = 0.0,
+    wd_mask: PyTree | None = None,
+    nesterov: bool = False,
+    trust_mask: PyTree | None = None,
+    trust_frac: float = 0.02,
+) -> Optimizer:
+    """``trust_mask`` marks leaves (FP8 clip values) whose per-step update
+    is clamped to ``trust_frac * |param|`` — range-learning stability."""
+    lr_fn = as_schedule(lr)
+
+    def _trust(u, p, is_clip):
+        if not is_clip:
+            return u
+        lim = trust_frac * jnp.maximum(jnp.abs(p), 1e-8)
+        return jnp.clip(u, -lim, lim)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+
+        def decayed(g, p, m):
+            return g + weight_decay * p if (weight_decay and m) else g
+
+        mask = wd_mask if wd_mask is not None else jax.tree.map(lambda _: True, params)
+        g = jax.tree.map(decayed, grads, params, mask)
+        tmask = trust_mask if trust_mask is not None else \
+            jax.tree.map(lambda _: False, params)
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda gi: -eta * gi, g)
+            upd = jax.tree.map(_trust, upd, params, tmask)
+            return upd, ()
+        new_m = jax.tree.map(lambda mi, gi: momentum * mi + gi, state, g)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, gi: -eta * (momentum * mi + gi), new_m, g)
+        else:
+            upd = jax.tree.map(lambda mi: -eta * mi, new_m)
+        upd = jax.tree.map(_trust, upd, params, tmask)
+        return upd, new_m
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from .policy import ShardingPolicy, param_sharding, batch_sharding
+
+__all__ = ["ShardingPolicy", "param_sharding", "batch_sharding"]

@@ -1,0 +1,211 @@
+"""Sharding policy: name+shape driven PartitionSpecs for params/caches/batch.
+
+Mesh axes (DESIGN.md §4):
+
+* ``pod``   — federated silo axis (multi-pod only). Model state is
+              **replicated** across pods (each silo trains its own copy;
+              the FedAvg round boundary reduces over it), batch is sharded.
+* ``data``  — within-silo data parallelism + FSDP parameter sharding.
+* ``model`` — tensor parallelism (heads / d_ff / vocab), and *sequence*
+              sharding for decode KV caches (distributed-flash decode).
+
+The policy is deliberately shape/name-driven rather than per-arch tables:
+every model in the zoo names its projections consistently (``w*`` input
+projections contract d_model -> wide, ``*_down``/``*o``/``out*`` contract
+wide -> d_model), so two rules cover the whole zoo.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaves whose last-two dims are (wide, d_model): shard (model, data)
+_OUT_PROJ = {
+    "wo", "w_down", "we_down", "out_proj", "w_out", "self_wo", "cross_wo",
+}
+# everything else 2-D+ is an input projection (d_model, wide): (data, model)
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(e.name)
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+# small per-layer vectors/recurrence params: replicate (bytes are negligible)
+_REPLICATED = {
+    "ln1", "ln2", "ln", "ln_f", "enc_ln_f", "ssm_norm", "mlp_ln", "self_ln",
+    "cross_ln", "conv_w", "conv_b", "lambda_p", "A_log", "dt_bias", "D_skip",
+    "pos", "cls",
+}
+
+
+def param_spec(name: str, shape: tuple, *, fsdp: str | None = "data",
+               tp: str | None = "model") -> P:
+    leaf = name.rsplit("/", 1)[-1]
+    if leaf.endswith("_qa") or leaf.endswith("_qb") or len(shape) < 2:
+        return P()
+    if leaf in _REPLICATED:
+        return P()
+    if leaf == "embed":
+        # vocab replicated, d_model TP-sharded: token gather partitions
+        # trivially (sharding the vocab dim forces XLA into involuntary
+        # full rematerialization of the gather — measured in the dry-run).
+        return P(None, tp)
+    if leaf == "lm_head":
+        # (d_model, vocab): FSDP-gather the d_model dim, TP-shard vocab so
+        # chunked-CE logsumexp partial-reduces over `model`.
+        return P(fsdp, tp)
+    if leaf in ("router",):
+        return P(*([None] * (len(shape) - 2)), fsdp, None)
+    lead = [None] * (len(shape) - 2)
+    if leaf in _OUT_PROJ:
+        return P(*lead, tp, fsdp)
+    return P(*lead, fsdp, tp)
+
+
+def cache_spec(name: str, shape: tuple, *, dp: tuple[str, ...] = ("data",),
+               tp: str | None = "model", shard_batch: bool = True) -> P:
+    """KV caches / recurrent states for decode.
+
+    Convention: batch over dp axes (when divisible), sequence (or heads for
+    SSM states) over the tp axis -> distributed-flash decode.
+    """
+    leaf = name.rsplit("/", 1)[-1]
+    dp_spec = dp if shard_batch else None
+    if leaf in ("k", "v", "latent"):          # (L, B, S, ...) transformer
+        return P(None, dp_spec, tp, *([None] * (len(shape) - 3)))
+    if leaf in ("ck", "cv"):                  # whisper cross-attn
+        return P(None, dp_spec, tp, *([None] * (len(shape) - 3)))
+    if leaf == "state":                       # mamba (L, B, H, P, N)
+        return P(None, dp_spec, tp, None, None)
+    if leaf == "conv":                        # mamba conv buffer (L,B,cw-1,C)
+        return P(None, dp_spec, None, tp)
+    if leaf in ("p_k", "p_v"):                # rglru (n_p, B, win, KV, hd)
+        return P(None, dp_spec, tp, None, None)
+    if leaf == "p_state":                     # (n_p, n_rec, B, W)
+        return P(None, None, dp_spec, tp)
+    if leaf == "p_conv":                      # (n_p, n_rec, B, cw-1, W)
+        return P(None, None, dp_spec, None, tp)
+    if leaf == "t_state":                     # (n_trail, B, W)
+        return P(None, dp_spec, tp)
+    if leaf == "t_conv":
+        return P(None, dp_spec, None, tp)
+    return P()
+
+
+def batch_spec(name: str, shape: tuple, *, dp: tuple[str, ...]) -> P:
+    if len(shape) == 0:
+        return P()
+    return P(dp, *([None] * (len(shape) - 1)))
+
+
+class ShardingPolicy:
+    """Binds the rules above to a mesh; produces NamedShardings for trees."""
+
+    def __init__(self, mesh: Mesh, fl_axis: str | None = None):
+        self.mesh = mesh
+        axis_names = mesh.axis_names
+        self.fl_axis = fl_axis if (fl_axis in axis_names) else None
+        self.fsdp = "data" if "data" in axis_names else None
+        self.tp = "model" if "model" in axis_names else None
+        dp = [a for a in ("pod", "data") if a in axis_names]
+        self.dp = tuple(dp)
+
+    # --- tree -> NamedSharding trees ------------------------------------
+
+    def _fit(self, spec: P, shape: tuple) -> P:
+        """Drop axes that don't divide the dim evenly (jit rejects ragged
+        explicit shardings). Vocabs are padded in configs so this is rare."""
+        fixed = []
+        for d, ax in enumerate(spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([self.mesh.shape[a] for a in axes]))
+            fixed.append(ax if shape[d] % size == 0 else None)
+        return P(*fixed)
+
+    def params(self, tree: PyTree) -> PyTree:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = [
+            NamedSharding(
+                self.mesh,
+                self._fit(
+                    param_spec(_leaf_name(p), l.shape, fsdp=self.fsdp,
+                               tp=self.tp),
+                    l.shape,
+                ),
+            )
+            for p, l in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def cache(self, tree: PyTree, batch: int) -> PyTree:
+        dp_size = int(np.prod([self.mesh.shape[a] for a in self.dp])) if self.dp else 1
+        shard_batch = batch % max(dp_size, 1) == 0 and batch >= dp_size
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = [
+            NamedSharding(
+                self.mesh,
+                self._fit(
+                    cache_spec(_leaf_name(p), l.shape, dp=self.dp, tp=self.tp,
+                               shard_batch=shard_batch),
+                    l.shape,
+                ),
+            )
+            for p, l in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def batch(self, tree: PyTree) -> PyTree:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = [
+            NamedSharding(
+                self.mesh,
+                self._fit(batch_spec(_leaf_name(p), l.shape, dp=self.dp),
+                          l.shape),
+            )
+            for p, l in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def activation_rules(self, seq_sharded: bool = True) -> dict:
+        """Logical-axis table consumed by models.common.hint().
+
+        ``seq_sharded=True`` enables Megatron-style sequence parallelism on
+        the residual stream: ``hint(h, "batch", "seq", None)`` shards the
+        token dim over `model` between blocks, cutting the per-layer scan
+        residual stacks by the TP degree (XLA inserts the all-gather before
+        attention and reduce-scatters after — the SP schedule). Decode
+        steps (T==1) pass seq_sharded=False.
+        """
+        return {
+            "__mesh__": self.mesh,
+            "batch": self.dp if self.dp else None,
+            "seq": self.tp if seq_sharded else None,
+            "tp": self.tp,  # generic TP dim (MoE dispatch buffers etc.)
+        }
+
+
+def param_sharding(mesh: Mesh, tree: PyTree) -> PyTree:
+    return ShardingPolicy(mesh).params(tree)
+
+
+def batch_sharding(mesh: Mesh, tree: PyTree) -> PyTree:
+    return ShardingPolicy(mesh).batch(tree)

@@ -1,0 +1,105 @@
+"""Integration tests for the federated core (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import metrics
+from repro.core.fedavg import FedConfig
+from repro.core.fedsim import FedSim
+from repro.core.qat import DISABLED, QATConfig, comm_quantize, quantized_leaf_names
+from repro.core.server_opt import ServerOptConfig
+from repro.data import partition_dirichlet, partition_iid, synthetic_classification
+from repro.models import small
+
+
+def _setup(k=10, noise=1.8):
+    xall, yall = synthetic_classification(0, 3500, d=32, n_classes=10,
+                                          noise=noise)
+    x, y = xall[:3000], yall[:3000]
+    xt, yt = jnp.asarray(xall[3000:]), jnp.asarray(yall[3000:])
+    cx, cy, nk = partition_iid(x, y, k=k, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0))
+    return params, apply, (jnp.asarray(cx), jnp.asarray(cy),
+                           jnp.asarray(nk)), (xt, yt)
+
+
+def _run(params, apply, data, evald, cfg, rounds=25):
+    from repro.core.qat import clip_value_mask, weight_decay_mask
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.1, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    sim = FedSim(params, loss, apply, opt, cfg, *data)
+    return sim.run(rounds, jax.random.PRNGKey(5), eval_data=evald,
+                   eval_every=5), sim
+
+
+def test_fp8_uq_converges_and_matches_fp32():
+    params, apply, data, evald = _setup()
+    base = dict(n_clients=10, participation=0.3, local_steps=15, batch_size=32)
+    h32, s32 = _run(params, apply, data, evald,
+                    FedConfig(comm_mode="none", qat=DISABLED, **base))
+    h8, s8 = _run(params, apply, data, evald,
+                  FedConfig(comm_mode="rand", qat=QATConfig(), **base))
+    assert h32.best_accuracy() > 0.7, "FP32 baseline failed to learn"
+    assert h8.best_accuracy() > h32.best_accuracy() - 0.05, \
+        "FP8FedAvg-UQ lost more than 5 points vs FP32"
+    # byte accounting: FP8 rounds must be >3x smaller (paper: ~3.9x at
+    # these model sizes; clip values + biases stay FP32)
+    assert s32.bytes_per_round / s8.bytes_per_round > 3.0
+
+
+def test_server_opt_improves_or_matches():
+    params, apply, data, evald = _setup()
+    base = dict(n_clients=10, participation=0.3, local_steps=15, batch_size=32)
+    h_uq, _ = _run(params, apply, data, evald,
+                   FedConfig(comm_mode="rand", qat=QATConfig(), **base))
+    h_uqp, _ = _run(params, apply, data, evald,
+                    FedConfig(comm_mode="rand", qat=QATConfig(),
+                              server_opt=ServerOptConfig(enabled=True,
+                                                         gd_steps=3,
+                                                         n_grid=10), **base))
+    assert h_uqp.best_accuracy() > h_uq.best_accuracy() - 0.03
+
+
+def test_comm_quantize_only_touches_weights():
+    params, apply, _, _ = _setup()
+    q = comm_quantize(params, jax.random.PRNGKey(0))
+    names = quantized_leaf_names(params)
+    assert names, "no quantized leaves found"
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_q = jax.tree_util.tree_flatten_with_path(q)[0]
+    from repro.core.qat import _key_name
+    for (path, p), (_, qv) in zip(flat_p, flat_q):
+        dotted = ".".join(_key_name(e) for e in path)
+        if dotted in names:
+            assert float(jnp.max(jnp.abs(p - qv))) > 0 or p.size < 4
+        else:
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(qv))
+
+
+def test_payload_accounting_exact():
+    params, _, _, _ = _setup()
+    qnames = quantized_leaf_names(params)
+    n_q = 0
+    n_all = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        from repro.core.qat import _key_name
+        dotted = ".".join(_key_name(e) for e in path)
+        n_all += leaf.size
+        if dotted in qnames:
+            n_q += leaf.size
+    expect = n_q * 1 + (n_all - n_q) * 4
+    assert metrics.payload_bytes(params, quantized=True) == expect
+    assert metrics.payload_bytes(params, quantized=False) == n_all * 4
+
+
+def test_dirichlet_partition_is_skewed():
+    from repro.data.federated import label_distribution_skew
+    x, y = synthetic_classification(0, 4000, d=16, n_classes=10)
+    _, cy_iid, _ = partition_iid(x, y, k=20, seed=0)
+    _, cy_dir, _ = partition_dirichlet(x, y, k=20, concentration=0.3, seed=0)
+    assert label_distribution_skew(cy_dir, 10) > \
+        label_distribution_skew(cy_iid, 10) + 0.1

@@ -1,0 +1,53 @@
+"""FP8-wire federated collective: correctness + actual u8 payload on the wire."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import compression
+from repro.core.qat import alpha_like
+
+
+def _params():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    return {"w": w, "w_qa": alpha_like(w), "b": jnp.ones((64,))}
+
+
+def test_fp8_wire_mean_unbiased_single_device():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    params = _params()
+
+    fn = jax.jit(shard_map(
+        lambda p, k: compression.fp8_wire_allreduce_mean(p, k, ("pod",)),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+    ))
+    acc = np.zeros(params["w"].shape, np.float64)
+    n = 150
+    for i in range(n):
+        acc += np.asarray(fn(params, jax.random.PRNGKey(i))["w"])
+    bias = np.abs(acc / n - np.asarray(params["w"])).max()
+    assert bias < 2.5e-2, bias
+    out = fn(params, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(params["b"]))
+
+
+def test_fp8_wire_collective_moves_uint8():
+    """The lowered collective must carry u8, not f32 — the 4x is real."""
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    params = _params()
+    fn = shard_map(
+        lambda p, k: compression.fp8_wire_allreduce_mean(p, k, ("pod",)),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+    )
+    txt = jax.jit(fn).lower(params, jax.random.PRNGKey(0)).compile().as_text()
+    gathers = [ln for ln in txt.splitlines()
+               if "all-gather" in ln and "= " in ln]
+    u8 = [ln for ln in gathers if re.search(r"\bu8\[", ln)]
+    f32_weight = [ln for ln in gathers if "f32[32,64]" in ln or
+                  "f32[1,32,64]" in ln]
+    assert u8, "expected a u8 all-gather on the wire"
+    assert not f32_weight, "weights must not cross the wire in f32"

@@ -1,0 +1,69 @@
+"""Validate the loop-aware HLO cost model against unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _flops(fn, *specs):
+    compiled = jax.jit(fn).lower(*specs).compile()
+    return analyze(compiled.as_text())["flops"]
+
+
+def test_scan_trip_count_multiplies():
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def unrolled(x, w):
+        for _ in range(10):
+            x = x @ w
+        return x
+
+    fs = _flops(scanned, x, w)
+    fu = _flops(unrolled, x, w)
+    expected = 10 * 2 * 512**3
+    assert fu == pytest.approx(expected, rel=0.01)
+    assert fs == pytest.approx(fu, rel=0.05), (fs, fu)
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def nested(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    f = _flops(nested, x, w)
+    expected = 12 * 2 * 256**3
+    assert f == pytest.approx(expected, rel=0.05), f
+
+
+def test_dot_general_batched():
+    a = jax.ShapeDtypeStruct((8, 128, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((8, 64, 32), jnp.float32)
+    f = _flops(lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b)
+    assert f == pytest.approx(2 * 8 * 128 * 64 * 32, rel=0.01), f
+
+
+def test_bytes_reasonable():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    out = analyze(jax.jit(lambda x: x + 1.0).lower(x).compile().as_text())
+    nbytes = 1024 * 1024 * 4
+    # read + write = 2 buffers; allow fusion bookkeeping slack
+    assert nbytes <= out["bytes"] <= 4 * nbytes, out["bytes"]

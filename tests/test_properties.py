@@ -1,0 +1,154 @@
+"""Property-based tests of the paper's theoretical claims (Appendix A-C).
+
+Each lemma/remark that the convergence proof leans on is checked
+executably with hypothesis-generated inputs:
+
+* Lemma 3  — stochastic quantization is unbiased.
+* Lemma 4  — E|r_Qrand(x)|^2 <= S|x| (variance bound, per scalar).
+* Lemma 5  — E|r_Q(Q(x)+y)|^2 <= S|y| (error decomposition on grid points).
+* Lemma 1  — |r_Q(w)|_2 <= sqrt(d) S.
+* Remark 4 — deterministic quantization has smaller error norm than
+             stochastic (motivates det QAT).
+* Grid structure — symmetric around zero, bin sizes monotonically
+             non-decreasing away from zero (the property Lemma 5's proof
+             requires of FP8).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fp8
+from repro.core.fp8 import E4M3, E5M2
+
+FMTS = [E4M3, E5M2]
+
+floats = st.floats(min_value=-100.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+alphas = st.floats(min_value=np.float32(1e-3), max_value=50.0,
+                   allow_nan=False, width=32)
+
+
+def _max_scale(alpha: float, fmt) -> float:
+    """S: the largest grid spacing for clipping value alpha."""
+    grid = fp8.quantization_grid(alpha, fmt)
+    return float(np.max(np.diff(grid)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=floats, alpha=alphas)
+def test_lemma3_unbiased(x, alpha):
+    xs = jnp.full((512,), x, jnp.float32)
+    a = jnp.asarray(alpha)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    qs = jnp.stack([fp8.quantize_rand(xs, a, k) for k in keys])  # 4096 samples
+    xc = float(jnp.clip(x, -alpha, alpha))
+    mean = float(qs.mean())
+    # tolerance: 5 sigma of the sample mean; var <= S|x| (Lemma 4)
+    s_bound = _max_scale(alpha, E4M3)
+    tol = 5.0 * np.sqrt(s_bound * max(abs(xc), 1e-6) / 4096) + 1e-6
+    assert abs(mean - xc) <= tol, (mean, xc, tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=floats, alpha=alphas, fmt_i=st.integers(0, 1))
+def test_lemma4_variance_bound(x, alpha, fmt_i):
+    fmt = FMTS[fmt_i]
+    xc = float(np.clip(x, -alpha, alpha))
+    xs = jnp.full((2048,), x, jnp.float32)
+    a = jnp.asarray(alpha)
+    q = fp8.quantize_rand(xs, a, jax.random.PRNGKey(1), fmt)
+    err2 = float(jnp.mean((q - xc) ** 2))
+    s_bound = _max_scale(alpha, fmt)
+    # E|r|^2 <= S|x| with sampling slack
+    assert err2 <= s_bound * max(abs(xc), 1e-9) * 1.2 + 1e-10, (err2, s_bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(x=floats, y=st.floats(min_value=-5.0, max_value=5.0, allow_nan=False,
+                             width=32), alpha=alphas)
+def test_lemma5_error_decomposition(x, y, alpha):
+    """E|r_Q(Q(x)+y)|^2 <= S|y| — quantizing a grid point plus a perturbation."""
+    fmt = E4M3
+    a = jnp.asarray(alpha)
+    qx = float(fp8.quantize_det(jnp.asarray(x, jnp.float32), a, fmt))
+    z = qx + y
+    if abs(z) > alpha:  # lemma applies on the unclipped grid
+        z = float(np.clip(z, -alpha, alpha))
+        y = z - qx
+    zs = jnp.full((2048,), z, jnp.float32)
+    q = fp8.quantize_rand(zs, a, jax.random.PRNGKey(2), fmt)
+    err2 = float(jnp.mean((q - z) ** 2))
+    s_bound = _max_scale(alpha, fmt)
+    assert err2 <= s_bound * abs(y) * 1.25 + 1e-10, (err2, s_bound * abs(y))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), alpha=alphas)
+def test_lemma1_error_norm(seed, alpha):
+    d = 256
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,)) * alpha
+    a = jnp.asarray(alpha)
+    q = fp8.quantize_det(x, a)
+    err = float(jnp.linalg.norm(q - jnp.clip(x, -alpha, alpha)))
+    s_bound = _max_scale(alpha, E4M3)
+    assert err <= np.sqrt(d) * s_bound + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_remark4_det_error_smaller(seed):
+    """Deterministic rounding has smaller MSE than stochastic (Remark 4)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4096,))
+    alpha = jnp.max(jnp.abs(x))
+    qd = fp8.quantize_det(x, alpha)
+    qr = fp8.quantize_rand(x, alpha, jax.random.fold_in(key, 1))
+    mse_d = float(jnp.mean((qd - x) ** 2))
+    mse_r = float(jnp.mean((qr - x) ** 2))
+    assert mse_d <= mse_r + 1e-12
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("alpha", [0.01, 1.0, 7.5, 448.0])
+def test_grid_structure(fmt, alpha):
+    grid = fp8.quantization_grid(alpha, fmt)
+    assert grid[0] == 0.0
+    diffs = np.diff(grid)
+    assert np.all(diffs > 0)
+    # bin sizes monotonically non-decreasing away from zero (Lemma 5's req.)
+    assert np.all(diffs[1:] >= diffs[:-1] * (1 - 1e-9))
+    # max value == alpha (clipping value is representable)
+    np.testing.assert_allclose(grid[-1], alpha, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_det_quant_idempotent(fmt):
+    x = jax.random.normal(jax.random.PRNGKey(3), (1024,))
+    alpha = jnp.max(jnp.abs(x))
+    q1 = fp8.quantize_det(x, alpha, fmt)
+    q2 = fp8.quantize_det(q1, alpha, fmt)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+
+
+def test_rand_quant_lands_on_grid():
+    x = jax.random.normal(jax.random.PRNGKey(4), (512,))
+    alpha = jnp.max(jnp.abs(x)) * 0.7
+    q = np.asarray(fp8.quantize_rand(x, alpha, jax.random.PRNGKey(5)))
+    grid = fp8.quantization_grid(float(alpha))
+    full = np.concatenate([-grid[::-1], grid])
+    dist = np.min(np.abs(q[:, None] - full[None, :]), axis=1)
+    assert dist.max() < 1e-5
+
+
+def test_pack_unpack_roundtrip_both_formats():
+    for fmt in FMTS:
+        x = jax.random.normal(jax.random.PRNGKey(6), (2048,))
+        alpha = jnp.max(jnp.abs(x))
+        q = fp8.quantize_det(x, alpha, fmt)
+        code = fp8.pack_fp8(q, alpha, fmt)
+        assert code.dtype == jnp.uint8
+        back = fp8.unpack_fp8(code, alpha, fmt)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(q),
+                                   rtol=1e-5, atol=1e-7)

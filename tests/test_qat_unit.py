@@ -1,0 +1,91 @@
+"""QAT plumbing unit tests: clipping-value conventions, masks, wq/aq."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fp8
+from repro.core.qat import (
+    DISABLED,
+    QATConfig,
+    alpha_like,
+    aq,
+    beta_init,
+    comm_quantize,
+    quantized_leaf_names,
+    weight_decay_mask,
+    wq,
+)
+
+
+def test_alpha_like_stacked():
+    w = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4) - 12.0
+    a = alpha_like(w, stacked=True)
+    assert a.shape == (2, 1, 1)
+    np.testing.assert_allclose(np.asarray(a[:, 0, 0]),
+                               np.abs(np.asarray(w)).max(axis=(1, 2)))
+    a2 = alpha_like(w, stacked=False)
+    assert a2.shape == ()
+
+
+def test_wq_disabled_identity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    out = wq(w, jnp.asarray(1.0), DISABLED)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_wq_rand_mode_needs_key():
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    cfg = QATConfig(mode="rand")
+    try:
+        wq(w, jnp.asarray(1.0), cfg)
+        assert False, "should require key"
+    except AssertionError:
+        pass
+
+
+def test_aq_respects_beta():
+    x = jnp.linspace(-10, 10, 64)
+    beta = jnp.asarray(2.0)
+    out = aq(x, beta, QATConfig())
+    assert float(jnp.max(jnp.abs(out))) <= 2.0 + 1e-6
+
+
+def test_quantized_leaf_names_and_decay_mask():
+    params = {
+        "layer": {
+            "w": jnp.zeros((4, 4)), "w_qa": jnp.asarray(1.0),
+            "b": jnp.zeros((4,)),
+            "x_qb": jnp.asarray(4.0),
+            "orphan": jnp.zeros((4, 4)),  # no _qa sibling -> not comm-quantized
+        }
+    }
+    names = quantized_leaf_names(params)
+    assert names == {"layer.w"}
+    mask = weight_decay_mask(params)
+    assert mask["layer"]["w"] and mask["layer"]["orphan"]
+    assert not mask["layer"]["b"] and not mask["layer"]["w_qa"]
+    assert not mask["layer"]["x_qb"]
+
+
+def test_comm_quantize_modes():
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    params = {"w": w, "w_qa": alpha_like(w)}
+    same = comm_quantize(params, jax.random.PRNGKey(0), mode="none")
+    np.testing.assert_array_equal(np.asarray(same["w"]), np.asarray(w))
+    det = comm_quantize(params, jax.random.PRNGKey(0), mode="det")
+    det2 = comm_quantize(params, jax.random.PRNGKey(99), mode="det")
+    np.testing.assert_array_equal(np.asarray(det["w"]), np.asarray(det2["w"]))
+    r1 = comm_quantize(params, jax.random.PRNGKey(0), mode="rand")
+    r2 = comm_quantize(params, jax.random.PRNGKey(1), mode="rand")
+    assert not np.array_equal(np.asarray(r1["w"]), np.asarray(r2["w"]))
+
+
+def test_wire_roundtrip_through_codec_matches_comm():
+    """Simulated FP8 wire: pack->unpack of Q_rand output is lossless."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 64))
+    alpha = alpha_like(w)
+    q = fp8.quantize_rand(w, alpha, jax.random.PRNGKey(3))
+    code = fp8.pack_fp8(q, alpha)
+    back = fp8.unpack_fp8(code, alpha)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(q),
+                               rtol=1e-5, atol=1e-7)

@@ -1,0 +1,75 @@
+"""ServerOptimize (UQ+) unit tests against the closed-form/unquantized case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qat import alpha_like
+from repro.core.server_opt import ServerOptConfig, server_optimize, weighted_mean
+
+
+def _client_msgs(n_clients=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (8, 16))
+    msgs = []
+    for i in range(n_clients):
+        w = base + 0.05 * jax.random.normal(jax.random.fold_in(key, i), (8, 16))
+        msgs.append({"w": w, "w_qa": alpha_like(w), "b": jnp.ones((16,)) * i})
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *msgs)
+
+
+def test_weighted_mean_matches_manual():
+    stacked = _client_msgs()
+    nk = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    avg = weighted_mean(stacked, nk)
+    want = np.average(np.asarray(stacked["w"]), axis=0,
+                      weights=np.asarray(nk))
+    np.testing.assert_allclose(np.asarray(avg["w"]), want, rtol=1e-5)
+    want_b = np.average(np.asarray(stacked["b"]), axis=0,
+                        weights=np.asarray(nk))
+    np.testing.assert_allclose(np.asarray(avg["b"]), want_b, rtol=1e-5)
+
+
+def test_server_opt_reduces_quantized_mse():
+    stacked = _client_msgs()
+    nk = jnp.ones((4,))
+    cfg = ServerOptConfig(enabled=True, gd_steps=5, lr=0.1, n_grid=20)
+    plain = weighted_mean(stacked, nk)
+    opt = server_optimize(stacked, nk, jax.random.PRNGKey(1), cfg)
+
+    # measure the paper's Eq.(4) objective for both aggregates
+    from repro.core import fp8
+
+    def mse(w, alpha, key):
+        total = 0.0
+        for i in range(4):
+            q = fp8.quantize_rand(w, alpha, jax.random.fold_in(key, i))
+            total += float(jnp.sum((q - stacked["w"][i]) ** 2))
+        return total / 4
+
+    key = jax.random.PRNGKey(42)
+    mse_plain = np.mean([mse(plain["w"], plain["w_qa"],
+                             jax.random.fold_in(key, s)) for s in range(8)])
+    mse_opt = np.mean([mse(opt["w"], opt["w_qa"],
+                           jax.random.fold_in(key, 100 + s)) for s in range(8)])
+    assert mse_opt <= mse_plain * 1.05, (mse_opt, mse_plain)
+
+
+def test_server_opt_disabled_is_fedavg():
+    stacked = _client_msgs()
+    nk = jnp.asarray([1.0, 1.0, 2.0, 2.0])
+    cfg = ServerOptConfig(enabled=False)
+    out = server_optimize(stacked, nk, jax.random.PRNGKey(0), cfg)
+    avg = weighted_mean(stacked, nk)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_alpha_grid_search_stays_in_range():
+    stacked = _client_msgs()
+    nk = jnp.ones((4,))
+    cfg = ServerOptConfig(enabled=True, gd_steps=2, n_grid=10)
+    out = server_optimize(stacked, nk, jax.random.PRNGKey(3), cfg)
+    lo = float(jnp.min(stacked["w_qa"]))
+    hi = float(jnp.max(stacked["w_qa"]))
+    a = float(out["w_qa"])
+    assert lo - 1e-6 <= a <= hi + 1e-6
