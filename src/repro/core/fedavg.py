@@ -23,9 +23,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from . import qat as qat_lib
+from . import wire
 from .fp8 import E4M3, FP8Format
-from .qat import QATConfig, comm_quantize
+from .qat import QATConfig
 from .server_opt import ServerOptConfig, server_optimize, weighted_mean
 from ..optim.base import Optimizer, apply_updates
 
@@ -104,13 +104,25 @@ def make_round(
                  nk: Array, key: Array):
         k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
 
+        # Static wire layout for this model (trace-time): the SAME uint8
+        # payload format is used for both directions, so byte accounting
+        # below reads off the actual transmitted buffer.
+        spec = wire.make_wire_spec(server_params)
+        on_wire = cfg.comm_mode != "none" and bool(spec.q_slots)
+
         # --- sample P_t (uniform, without replacement; stragglers simply
         # fall out of P_t — FedAvg's native dropout tolerance) ------------
         idx = jax.random.permutation(k_sel, cfg.n_clients)[:P]
         nk_sel = nk[idx]
 
-        # --- downlink: one broadcast Q_rand sample ------------------------
-        down = comm_quantize(server_params, k_down, cfg.fmt, cfg.comm_mode)
+        # --- downlink: one broadcast payload (single fused encode), one
+        # dequantize-unpack on receipt --------------------------------------
+        if on_wire:
+            payload = wire.encode(server_params, spec, k_down,
+                                  fmt=cfg.fmt, mode=cfg.comm_mode)
+            down = wire.decode(payload, spec, fmt=cfg.fmt)
+        else:
+            down = server_params
 
         # --- vmapped local QAT training ------------------------------------
         loc_keys = jax.random.split(k_loc, P)
@@ -118,11 +130,18 @@ def make_round(
             local_update, in_axes=(None, 0, 0, 0)
         )(down, data[idx], labels[idx], loc_keys)
 
-        # --- uplink: per-client independent Q_rand samples ------------------
-        up_keys = jax.random.split(k_up, P)
-        msgs = jax.vmap(
-            lambda p, k: comm_quantize(p, k, cfg.fmt, cfg.comm_mode)
-        )(client_params, up_keys)
+        # --- uplink: per-client independent payloads ------------------------
+        if on_wire:
+            up_keys = jax.random.split(k_up, P)
+            payloads = jax.vmap(
+                lambda p, k: wire.encode(p, spec, k,
+                                         fmt=cfg.fmt, mode=cfg.comm_mode)
+            )(client_params, up_keys)
+            msgs = jax.vmap(lambda pl: wire.decode(pl, spec, fmt=cfg.fmt))(
+                payloads
+            )
+        else:
+            msgs = client_params
 
         # --- server aggregation (Algorithm 1 tail) ---------------------------
         if cfg.server_opt.enabled and cfg.comm_mode != "none":
@@ -130,6 +149,15 @@ def make_round(
         else:
             new_params = weighted_mean(msgs, nk_sel)
 
-        return new_params, {"local_loss": jnp.mean(losses)}
+        per_model = (
+            wire.payload_nbytes(spec) if on_wire
+            else 4 * (spec.total + spec.n_other_elems)
+        )
+        return new_params, {
+            "local_loss": jnp.mean(losses),
+            # exact bytes moved this round: P uplink payloads + P downlink
+            # copies of the broadcast payload (Figure 1 accounting)
+            "wire_bytes": jnp.asarray(2 * P * per_model, jnp.float32),
+        }
 
     return round_fn

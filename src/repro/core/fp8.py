@@ -179,10 +179,14 @@ def pack_fp8(x: Array, alpha: Array, fmt: FP8Format = E4M3) -> Array:
     p_eff = jnp.clip(p, 1.0, float(fmt.max_exp_code))
     s = jnp.exp2(p_eff - b - fmt.mant)
     v = jnp.round(ax / s).astype(jnp.int32)  # in [0, 2^(m+1)-1]
-    # v may equal 2^(m+1) due to float fuzz at bin edges; renormalize.
+    # v may equal 2^(m+1) due to float fuzz at bin edges; renormalize into
+    # the next bin — or saturate the mantissa when the exponent is already
+    # at max (halving v without bumping p would decode at half the value).
     overflow = v >= 2 ** (fmt.mant + 1)
-    v = jnp.where(overflow, v // 2, v)
-    p_eff = jnp.where(overflow, jnp.minimum(p_eff + 1, float(fmt.max_exp_code)), p_eff)
+    at_max = p_eff >= float(fmt.max_exp_code)
+    v = jnp.where(overflow & at_max, 2 ** (fmt.mant + 1) - 1,
+                  jnp.where(overflow, v // 2, v))
+    p_eff = jnp.where(overflow & ~at_max, p_eff + 1, p_eff)
     is_normal = v >= 2 ** fmt.mant
     f = jnp.where(is_normal, p_eff, 0.0).astype(jnp.int32)
     m_field = jnp.where(is_normal, v - 2 ** fmt.mant, v).astype(jnp.int32)
@@ -217,19 +221,34 @@ def unpack_fp8(code: Array, alpha: Array, fmt: FP8Format = E4M3,
 
 
 def tree_quantize_det(tree: PyTree, alphas: PyTree, fmt: FP8Format = E4M3) -> PyTree:
-    """Apply Q_det leaf-wise; ``alphas`` mirrors ``tree`` (scalars per tensor)."""
-    return jax.tree.map(lambda x, a: quantize_det(x, a, fmt), tree, alphas)
+    """Apply Q_det leaf-wise; ``alphas`` mirrors ``tree`` (scalars per tensor).
+
+    Routed through the backend-aware dispatcher (``kernels.dispatch``) so a
+    TPU lowering hits the fused Pallas quantizer per leaf. For federated
+    communication prefer the flat-buffer codec in ``core.wire`` — one fused
+    launch for the whole tree.
+    """
+    from ..kernels import dispatch  # lazy: kernels imports this module
+
+    return jax.tree.map(
+        lambda x, a: dispatch.quantize_det(x, a, fmt), tree, alphas
+    )
 
 
 def tree_quantize_rand(
     tree: PyTree, alphas: PyTree, key: Array, fmt: FP8Format = E4M3
 ) -> PyTree:
-    """Apply Q_rand leaf-wise with independent randomness per leaf."""
+    """Apply Q_rand leaf-wise with independent randomness per leaf.
+
+    Same dispatch note as :func:`tree_quantize_det`.
+    """
+    from ..kernels import dispatch  # lazy: kernels imports this module
+
     leaves, treedef = jax.tree.flatten(tree)
     a_leaves = treedef.flatten_up_to(alphas)
     keys = jax.random.split(key, len(leaves))
     out = [
-        quantize_rand(x, a, k, fmt)
+        dispatch.quantize_rand(x, a, k, fmt)
         for x, a, k in zip(leaves, a_leaves, keys)
     ]
     return jax.tree.unflatten(treedef, out)

@@ -19,20 +19,23 @@ from typing import Any
 import jax
 import numpy as np
 
-from . import qat
-
 PyTree = Any
 
 
 def payload_bytes(params: PyTree, quantized: bool) -> int:
-    """Bytes to transmit one model copy."""
-    qnames = qat.quantized_leaf_names(params) if quantized else set()
-    total = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        dotted = ".".join(qat._key_name(p) for p in path)
-        n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
-        total += n * (1 if dotted in qnames else 4)
-    return total
+    """Bytes to transmit one model copy.
+
+    For the quantized case this reads off the actual wire layout
+    (``core.wire.WireSpec``): the uint8 codes buffer is exactly
+    ``spec.total`` bytes — 1 byte per quantized element, no padding on the
+    wire — and every other element (biases, norms, clip values) rides FP32.
+    """
+    from . import wire
+
+    if not quantized:
+        return 4 * param_count(params)
+    spec = wire.make_wire_spec(params)
+    return wire.payload_nbytes(spec)
 
 
 def round_bytes(params: PyTree, n_clients: int, quantized: bool) -> int:

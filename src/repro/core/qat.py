@@ -95,23 +95,31 @@ def _lsq_grad_scale(alpha: Array, n_elements: int, fmt: FP8Format) -> Array:
 
 
 def wq(w: Array, alpha: Array, cfg: QATConfig, key: Array | None = None) -> Array:
-    """Fake-quantize a weight tensor for the forward pass (QAT)."""
+    """Fake-quantize a weight tensor for the forward pass (QAT).
+
+    Dispatched through ``kernels.dispatch``: fused Pallas quantizer with the
+    STE custom VJP on TPU, the jnp chain elsewhere (same math + autodiff).
+    """
     if not (cfg.enabled and cfg.quantize_weights):
         return w
+    from ..kernels import dispatch
+
     alpha = _lsq_grad_scale(alpha, w.size, cfg.fmt)
     if cfg.mode == "rand":
         assert key is not None, "stochastic QAT needs a PRNG key"
-        return fp8.quantize_rand(w, alpha, key, cfg.fmt)
-    return fp8.quantize_det(w, alpha, cfg.fmt)
+        return dispatch.quantize_rand(w, alpha, key, cfg.fmt)
+    return dispatch.quantize_det(w, alpha, cfg.fmt)
 
 
 def aq(x: Array, beta: Array, cfg: QATConfig) -> Array:
     """Fake-quantize an activation tensor (always deterministic, sep. clip beta)."""
     if not (cfg.enabled and cfg.quantize_acts):
         return x
+    from ..kernels import dispatch
+
     # Activations are quantized symmetrically like weights (paper §2).
     beta = _lsq_grad_scale(beta, x.size, cfg.fmt)
-    return fp8.quantize_det(x, beta, cfg.fmt)
+    return dispatch.quantize_det(x, beta, cfg.fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -164,26 +172,15 @@ def comm_quantize(
 
     ``mode='det'`` exists for the Table-2 "biased communication" ablation;
     ``mode='none'`` returns the tree unchanged (FP32 baseline).
+
+    Implementation: the flat-buffer wire codec (``core.wire``) — every
+    quantizable weight is concatenated into one contiguous buffer and
+    quantized+packed/unpacked by a single fused kernel launch, instead of
+    the old per-leaf Python loop (O(n_tensors) launches per model copy).
     """
-    if mode == "none":
-        return params
-    qnames = quantized_leaf_names(params)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    by_name = {".".join(_key_name(p) for p in path): leaf for path, leaf in flat}
-    keys = jax.random.split(key, max(len(qnames), 1))
-    kmap = dict(zip(sorted(qnames), keys))
-    out = []
-    for path, leaf in flat:
-        dotted = ".".join(_key_name(p) for p in path)
-        if dotted in qnames:
-            alpha = by_name[dotted + QA_SUFFIX]
-            if mode == "rand":
-                out.append(fp8.quantize_rand(leaf, alpha, kmap[dotted], fmt))
-            else:
-                out.append(fp8.quantize_det(leaf, alpha, fmt))
-        else:
-            out.append(leaf)
-    return jax.tree_util.tree_unflatten(treedef, out)
+    from . import wire
+
+    return wire.roundtrip(params, key, fmt=fmt, mode=mode)
 
 
 def clip_value_mask(params: PyTree) -> PyTree:

@@ -1,0 +1,307 @@
+"""Backend-aware kernel dispatch: one entry point per FP8 hot-path op.
+
+This module is the single seam between the model/federated code and the
+Pallas kernels. Callers (``core.qat.wq``/``aq``, ``core.wire``,
+``models.common.dense``) never touch ``pallas_call`` directly — they call
+the dispatchers here, which pick an execution path per op:
+
+* ``pallas``    — compiled Pallas kernels (Mosaic on TPU). The QAT forward
+  *and* backward run as fused kernels: one HBM read + write per element for
+  the quantizers, quantize-in-VMEM for the matmul. This is the production
+  path; it is selected automatically when ``jax.default_backend()`` is TPU.
+* ``interpret`` — the same Pallas kernels under ``interpret=True``. The
+  kernel bodies execute exactly (bit-for-bit what Mosaic would compute
+  modulo 1-ULP transcendental differences), which is what the CPU
+  correctness/parity tests validate. Selected only by explicit request —
+  it is far slower than jnp on CPU.
+* ``jnp``       — the unfused jnp reference chain from ``core.fp8`` with
+  native STE autodiff. Selected automatically on CPU/GPU hosts, where no
+  Mosaic backend exists and interpret mode would be pure overhead.
+
+Selection: ``REPRO_KERNEL_BACKEND`` ∈ {``auto`` (default), ``pallas``,
+``interpret``, ``jnp``}. ``auto`` resolves to ``pallas`` on TPU and ``jnp``
+elsewhere. The variable is read at *trace* time, so a jitted train step
+bakes in whichever path was active when it was traced.
+
+Gradients: the kernel-backed ops carry a ``jax.custom_vjp`` implementing
+the paper's straight-through estimator exactly as jnp autodiff derives it
+from ``core.fp8.quantize_det`` (round/floor pass-through, exponent term
+stop-gradded, clip gradient routed to the clipping value, plus the
+``(q - y) * s / alpha`` scale term from the differentiable exponent bias).
+Parity with the jnp autodiff oracle is enforced to <= 1e-5 relative by
+``tests/test_dispatch_vjp.py``. Ops that fall back to jnp use jnp autodiff
+natively, so CPU training is bitwise-unchanged by this module. One
+measure-zero convention difference: at an element sitting EXACTLY on the
+clip boundary (|x| == alpha, e.g. the max weight right after the
+alpha = max|w| init), ``jnp.clip`` autodiff tie-splits the subgradient
+(0.5 to x, 0.5 routed to alpha) while the kernels use the closed-form
+mask (1 to x) — gone after the first optimizer step.
+
+Shape contract: the fused quantizers require a single (per-tensor) clipping
+scalar; stacked per-layer clipping values of shape ``(L, 1, ..., 1)``
+dispatch to jnp (inside ``lax.scan`` over layers each slice is a scalar, so
+the scanned models do hit the kernels on TPU).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import fp8
+from ..core.fp8 import E4M3, FP8Format
+from . import fp8_matmul, fp8_quant
+
+Array = jax.Array
+
+BACKENDS = ("auto", "pallas", "interpret", "jnp")
+_ENV = "REPRO_KERNEL_BACKEND"
+
+
+def backend() -> str:
+    """Resolve the active kernel backend (reads ``REPRO_KERNEL_BACKEND``)."""
+    choice = os.environ.get(_ENV, "auto").lower()
+    if choice not in BACKENDS:
+        raise ValueError(
+            f"{_ENV}={choice!r}; expected one of {BACKENDS}"
+        )
+    if choice == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return choice
+
+
+def _pallas_opts() -> tuple[bool, bool]:
+    """(use Pallas kernels, interpret mode) for the active backend.
+
+    ``interpret`` is True for every backend except real TPU ``pallas`` so
+    that the kernel-backed custom-VJP functions stay runnable even when
+    invoked directly (e.g. via ``kernels.ops``) on a CPU host.
+    """
+    be = backend()
+    return be in ("pallas", "interpret"), be != "pallas"
+
+
+def _quant_kernel_ok(x, alpha) -> bool:
+    return jnp.ndim(x) >= 1 and jnp.size(alpha) == 1
+
+
+def _matmul_kernel_ok(x, w, beta, alpha) -> bool:
+    return (
+        jnp.ndim(x) == 2 and jnp.ndim(w) == 2
+        and jnp.size(beta) == 1 and jnp.size(alpha) == 1
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared jnp helpers for the codec fallback paths
+# ---------------------------------------------------------------------------
+
+
+def _rand_with_bits_jnp(x, alpha, bits, fmt: FP8Format):
+    """Q_rand with explicit uint32 bits — bit-exact with the Pallas kernel."""
+    a = jnp.maximum(alpha, fp8._ALPHA_FLOOR).astype(jnp.float32)
+    xc = jnp.clip(x.astype(jnp.float32), -a, a)
+    b = fp8.exponent_bias(a, fmt)
+    p = jnp.floor(jnp.log2(jnp.abs(xc)) + b)
+    p = jnp.where(p > 1.0, p, 1.0)
+    s = jnp.exp2(p - b - fmt.mant)
+    y = xc / s
+    fl = jnp.floor(y)
+    u = bits.astype(jnp.float32) * (1.0 / 4294967296.0)
+    q = fl + (u < (y - fl)).astype(jnp.float32)
+    return (s * q).astype(x.dtype)
+
+
+def _zero_bits_cotangent(bits):
+    return np.zeros(np.shape(bits), dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Q_det — kernel-backed custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _quant_det_kernel_ste(x, alpha, fmt):
+    _, interp = _pallas_opts()
+    return fp8_quant.quant_det(x, alpha, fmt=fmt, interpret=interp)
+
+
+def _quant_det_fwd(x, alpha, fmt):
+    return _quant_det_kernel_ste(x, alpha, fmt), (x, alpha)
+
+
+def _quant_det_bwd(fmt, res, g):
+    x, alpha = res
+    _, interp = _pallas_opts()
+    gx, ga = fp8_quant.quant_det_bwd(x, alpha, g, fmt=fmt, interpret=interp)
+    return gx, ga.astype(jnp.float32)
+
+
+_quant_det_kernel_ste.defvjp(_quant_det_fwd, _quant_det_bwd)
+
+
+def quantize_det(x: Array, alpha: Array, fmt: FP8Format = E4M3) -> Array:
+    """Deterministic FP8 fake-quant, dispatched (see module docstring)."""
+    use, _ = _pallas_opts()
+    if use and _quant_kernel_ok(x, alpha):
+        return _quant_det_kernel_ste(x, alpha, fmt)
+    return fp8.quantize_det(x, alpha, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Q_rand — kernel-backed custom VJP over explicit random bits
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _quant_rand_kernel_ste(x, alpha, bits, fmt):
+    _, interp = _pallas_opts()
+    return fp8_quant.quant_rand(x, alpha, bits, fmt=fmt, interpret=interp)
+
+
+def _quant_rand_fwd(x, alpha, bits, fmt):
+    return _quant_rand_kernel_ste(x, alpha, bits, fmt), (x, alpha, bits)
+
+
+def _quant_rand_bwd(fmt, res, g):
+    x, alpha, bits = res
+    _, interp = _pallas_opts()
+    gx, ga = fp8_quant.quant_rand_bwd(
+        x, alpha, bits, g, fmt=fmt, interpret=interp
+    )
+    return gx, ga.astype(jnp.float32), _zero_bits_cotangent(bits)
+
+
+_quant_rand_kernel_ste.defvjp(_quant_rand_fwd, _quant_rand_bwd)
+
+
+def quantize_rand(
+    x: Array, alpha: Array, key: Array, fmt: FP8Format = E4M3
+) -> Array:
+    """Stochastic (unbiased) FP8 quantization, dispatched.
+
+    Randomness is drawn from ``jax.random`` *outside* any kernel, so the
+    kernel stays deterministic given its inputs. NOTE: the kernel path and
+    ``fp8.quantize_rand`` derive their uniforms differently from ``key``
+    (raw bits vs ``jax.random.uniform``) — identically distributed, not
+    bitwise identical.
+    """
+    use, _ = _pallas_opts()
+    if use and _quant_kernel_ok(x, alpha):
+        bits = jax.random.bits(key, shape=jnp.shape(x), dtype=jnp.uint32)
+        return _quant_rand_kernel_ste(x, alpha, bits, fmt)
+    return fp8.quantize_rand(x, alpha, key, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Fused QAT matmul — kernel-backed custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _qat_matmul_kernel_ste(x, w, beta, alpha, fmt):
+    _, interp = _pallas_opts()
+    return fp8_matmul.qat_matmul(x, w, beta, alpha, fmt=fmt, interpret=interp)
+
+
+def _qat_matmul_fwd(x, w, beta, alpha, fmt):
+    return _qat_matmul_kernel_ste(x, w, beta, alpha, fmt), (x, w, beta, alpha)
+
+
+def _qat_matmul_bwd(fmt, res, g):
+    x, w, beta, alpha = res
+    _, interp = _pallas_opts()
+    gx, gb = fp8_matmul.qat_matmul_dx(
+        g, x, w, beta, alpha, fmt=fmt, interpret=interp
+    )
+    gw, ga = fp8_matmul.qat_matmul_dw(
+        g, x, w, beta, alpha, fmt=fmt, interpret=interp
+    )
+    return gx, gw, gb.astype(jnp.float32), ga.astype(jnp.float32)
+
+
+_qat_matmul_kernel_ste.defvjp(_qat_matmul_fwd, _qat_matmul_bwd)
+
+
+def qat_matmul(
+    x: Array, w: Array, beta: Array, alpha: Array, fmt: FP8Format = E4M3
+) -> Array:
+    """``Q_det(x; beta) @ Q_det(w; alpha)`` with f32 accumulation, dispatched.
+
+    On the Pallas path both operand tiles quantize in VMEM right before the
+    MXU (forward) and the backward runs the fused dx/dw kernels; on the jnp
+    path this is the plain composition with native autodiff.
+    """
+    use, _ = _pallas_opts()
+    if use and _matmul_kernel_ok(x, w, beta, alpha):
+        return _qat_matmul_kernel_ste(x, w, beta, alpha, fmt)
+    out = jnp.dot(
+        fp8.quantize_det(x, beta, fmt).astype(jnp.float32),
+        fp8.quantize_det(w, alpha, fmt).astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer wire codec entry points (quantize + bit-pack fused)
+# ---------------------------------------------------------------------------
+
+
+def quant_pack_tiles(
+    x2: Array,                   # (R, LANE) wire tile layout (see core.wire)
+    a2: Array,                   # (R, LANE) per-element clipping values
+    key2: Array | None = None,   # (2,) u32 key -> stochastic; None -> det
+    fmt: FP8Format = E4M3,
+) -> Array:
+    """Quantize+pack the wire tile layout into uint8 codes, one launch.
+
+    Stochastic rounding uses the in-kernel counter RNG
+    (``fp8_quant.counter_bits``); the jnp fallback evaluates the identical
+    integer hash, so codes are bit-identical across backends.
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.quant_pack_tiles(
+            x2, a2, key2, fmt=fmt, interpret=interp
+        )
+    if key2 is None:
+        q = fp8.quantize_det(x2, a2, fmt)
+    else:
+        k2 = key2.astype(jnp.uint32)
+        bits2 = fp8_quant._tile_counter_bits(
+            jnp.uint32(0), x2.shape, k2[0], k2[1]
+        )
+        q = _rand_with_bits_jnp(x2, a2, bits2, fmt)
+    return fp8.pack_fp8(q, a2, fmt)
+
+
+def unpack_tiles(c2: Array, a2: Array, fmt: FP8Format = E4M3) -> Array:
+    """Decode (R, LANE) uint8 code tiles back to f32 grid values."""
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.unpack_tiles(c2, a2, fmt=fmt, interpret=interp)
+    return fp8.unpack_fp8(c2, a2, fmt).astype(jnp.float32)
+
+
+def fake_quant_tiles(
+    x2: Array,                   # (R, LANE) wire tile layout
+    a2: Array,                   # (R, LANE) per-element clipping values
+    key2: Array | None = None,   # (2,) u32 key -> stochastic; None -> det
+    fmt: FP8Format = E4M3,
+) -> Array:
+    """One-launch quantize-dequantize (simulated wire transit, f32 out).
+
+    Equal to ``unpack_tiles(quant_pack_tiles(...))`` within 1 float32 ULP
+    (same FP8 grid point either way) without materializing the codes.
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.fake_quant_tiles(
+            x2, a2, key2, fmt=fmt, interpret=interp
+        )
+    return fp8_quant.fake_quant_tiles_jnp(x2, a2, key2, fmt)

@@ -1,65 +1,51 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels (back-compat surface).
 
-On CPU (this container) the kernels run in ``interpret=True`` mode —
-the kernel bodies execute exactly, which is what the correctness tests
-validate. On a real TPU backend ``interpret`` flips off automatically and
-the same BlockSpecs compile to Mosaic.
+These shims predate :mod:`repro.kernels.dispatch`; they now delegate to it
+so every caller shares one backend-resolution and one STE custom-VJP
+implementation. New code should import ``dispatch`` directly — ``wq``/
+``aq``/``dense`` and the wire codec all do.
 
-``quantize_det_kernel``/``quantize_rand_kernel`` also provide a custom-VJP
-STE so the fused kernels are drop-in replacements for
-``repro.core.fp8.quantize_det`` inside training graphs.
+The kernel-backed ops here always run the Pallas bodies (interpret mode on
+non-TPU hosts), regardless of the ``REPRO_KERNEL_BACKEND`` fallback policy
+— they exist precisely so tests and benchmarks can exercise the kernels on
+CPU.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from ..core.fp8 import E4M3, FP8Format
-from . import fp8_matmul, fp8_quant
+from . import dispatch, fp8_matmul, fp8_quant
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _interpret() -> bool:
+    return dispatch.backend() != "pallas"
 
 
 def quantize_det_fwd(x, alpha, fmt: FP8Format = E4M3):
-    return fp8_quant.quant_det(x, alpha, fmt=fmt, interpret=_on_cpu())
+    """Forward-only fused Q_det (no custom VJP attached)."""
+    return fp8_quant.quant_det(x, alpha, fmt=fmt, interpret=_interpret())
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def quantize_det_ste(x, alpha, fmt: FP8Format = E4M3):
-    """Kernel-backed Q_det with the paper's straight-through gradients."""
-    return quantize_det_fwd(x, alpha, fmt)
+    """Kernel-backed Q_det with the paper's straight-through gradients.
 
-
-def _ste_fwd(x, alpha, fmt):
-    y = quantize_det_fwd(x, alpha, fmt)
-    return y, (x, alpha)
-
-
-def _ste_bwd(fmt, res, g):
-    x, alpha = res
-    a = jnp.maximum(alpha, 1e-12)
-    inside = (jnp.abs(x) <= a).astype(g.dtype)
-    gx = g * inside
-    # clipped elements route gradient to alpha with the sign of the clip side
-    galpha = jnp.sum(g * (1.0 - inside) * jnp.sign(x)).astype(jnp.float32)
-    return gx, galpha.reshape(jnp.shape(alpha))
-
-
-quantize_det_ste.defvjp(_ste_fwd, _ste_bwd)
+    Backward is the fused Pallas STE kernel: clip-mask for ``x``, clip
+    routing plus the ``(q - y) * s / alpha`` scale term for ``alpha`` —
+    matching jnp autodiff of ``repro.core.fp8.quantize_det``.
+    """
+    return dispatch._quant_det_kernel_ste(x, alpha, fmt)
 
 
 def quantize_rand_kernel(x, alpha, key, fmt: FP8Format = E4M3):
     """Kernel-backed Q_rand; randomness from jax.random outside the kernel."""
-    bits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
-    return fp8_quant.quant_rand(x, alpha, bits, fmt=fmt, interpret=_on_cpu())
+    bits = jax.random.bits(key, shape=jnp.shape(x), dtype=jnp.uint32)
+    return dispatch._quant_rand_kernel_ste(x, alpha, bits, fmt)
 
 
 def qat_matmul(x, w, beta, alpha, fmt: FP8Format = E4M3, **blocks):
-    """Fused fake-quant(x) @ fake-quant(w) (forward)."""
+    """Fused fake-quant(x) @ fake-quant(w) (forward only; see dispatch)."""
     return fp8_matmul.qat_matmul(
-        x, w, beta, alpha, fmt=fmt, interpret=_on_cpu(), **blocks
+        x, w, beta, alpha, fmt=fmt, interpret=_interpret(), **blocks
     )

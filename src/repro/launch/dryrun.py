@@ -176,6 +176,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rec["lower_compile_s"] = round(time.time() - t0, 1)
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis()
+    # jax>=0.4.30 returns a per-device-program list; older returned a dict
+    if isinstance(xla_cost, (list, tuple)):
+        xla_cost = xla_cost[0] if xla_cost else {}
     # loop-aware re-analysis (XLA counts while bodies once; ours multiplies
     # by trip count — see hlo_cost.py). All numbers are PER DEVICE: the HLO
     # is the SPMD-partitioned per-device module.

@@ -36,7 +36,7 @@ _INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
 # first word-token immediately followed by '(' — the opcode (shape specs
 # like f32[64,64]{1,0} contain no word+paren sequences)
 _OP_RE = re.compile(r"\b([a-z][a-z0-9_\-]*)\(")
-_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
@@ -115,8 +115,15 @@ class Instr:
 
 
 def _args_of(rhs: str, opcode: str) -> list[str]:
+    """Split the operand list of ``opcode(...)`` at top-level commas.
+
+    Operands carry inline shape/layout specs (``f32[64,64]{1,0} %name``),
+    so commas inside ``[]``/``{}`` must not split — track all three bracket
+    kinds, not just parens.
+    """
     inner = rhs.split(opcode + "(", 1)[1]
-    depth = 1
+    depth = 1        # paren depth; we are inside opcode's '('
+    bracket = 0      # [] and {} nesting (dims, layouts, attribute dicts)
     out = []
     cur = []
     for ch in inner:
@@ -126,7 +133,11 @@ def _args_of(rhs: str, opcode: str) -> list[str]:
             depth -= 1
             if depth == 0:
                 break
-        if ch == "," and depth == 1:
+        elif ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        if ch == "," and depth == 1 and bracket == 0:
             out.append("".join(cur).strip())
             cur = []
         else:

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.qat import QATConfig, alpha_like, aq, beta_init, wq
+from ..core.qat import QATConfig, _lsq_grad_scale, alpha_like, aq, beta_init, wq
+from ..kernels import dispatch
 
 Array = jax.Array
 
@@ -88,6 +89,28 @@ def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
     return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
 
 
+def _fused_dense_ok(p: dict, name: str, x: Array, qcfg: QATConfig,
+                    act_site: str | None) -> bool:
+    """Can this projection take the fused Pallas QAT-matmul path?
+
+    Requires: both quantizers active and deterministic (paper default), an
+    activation clip present, a plain 2-D weight with scalar clipping values
+    (inside a scanned layer the per-layer slice is scalar), and a Pallas
+    backend. Everything else falls back to the aq/wq + matmul chain.
+    """
+    if not (qcfg.enabled and qcfg.quantize_weights and qcfg.quantize_acts
+            and qcfg.mode == "det"):
+        return False
+    if act_site is None or act_site not in p:
+        return False
+    w = p[name]
+    if w.ndim != 2 or x.ndim < 2:
+        return False
+    if p[name + "_qa"].size != 1 or p[act_site].size != 1:
+        return False
+    return dispatch.backend() in ("pallas", "interpret")
+
+
 def dense(p: dict, name: str, x: Array, qcfg: QATConfig,
           act_site: str | None = None) -> Array:
     """QAT projection: optional activation fake-quant + weight fake-quant matmul.
@@ -96,7 +119,24 @@ def dense(p: dict, name: str, x: Array, qcfg: QATConfig,
     the trainer pre-quantizes weights once per step (steps.py opt_level 1)
     ``qcfg.quantize_weights`` is False and the weight is already on the FP8
     grid in bf16 — no per-use work.
+
+    On a Pallas backend the whole projection runs as ONE fused kernel
+    (operands fake-quantized in VMEM right before the MXU, custom-VJP STE
+    backward) via ``kernels.dispatch.qat_matmul`` — the quantized operands
+    never round-trip through HBM.
     """
+    if _fused_dense_ok(p, name, x, qcfg, act_site):
+        w = p[name]
+        beta = _lsq_grad_scale(
+            p[act_site].astype(jnp.float32), x.size, qcfg.fmt
+        )
+        alpha = _lsq_grad_scale(p[name + "_qa"], w.size, qcfg.fmt)
+        x2 = x.reshape(-1, x.shape[-1])
+        out = dispatch.qat_matmul(
+            x2.astype(jnp.float32), w.astype(jnp.float32), beta, alpha,
+            qcfg.fmt,
+        )
+        return out.reshape(*x.shape[:-1], w.shape[-1]).astype(COMPUTE_DTYPE)
     if act_site is not None and act_site in p:
         x = aq(x, p[act_site].astype(jnp.float32), qcfg)
     w = p[name]

@@ -16,6 +16,8 @@ from repro.models.registry import get_model
 from repro import optim
 from repro.optim.base import apply_updates
 
+pytestmark = pytest.mark.slow  # full-arch sweep, ~160s of the suite
+
 QCFG = QATConfig()
 B, S = 2, 32
 

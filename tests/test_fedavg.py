@@ -36,6 +36,7 @@ def _run(params, apply, data, evald, cfg, rounds=25):
                    eval_every=5), sim
 
 
+@pytest.mark.slow
 def test_fp8_uq_converges_and_matches_fp32():
     params, apply, data, evald = _setup()
     base = dict(n_clients=10, participation=0.3, local_steps=15, batch_size=32)
@@ -51,6 +52,7 @@ def test_fp8_uq_converges_and_matches_fp32():
     assert s32.bytes_per_round / s8.bytes_per_round > 3.0
 
 
+@pytest.mark.slow
 def test_server_opt_improves_or_matches():
     params, apply, data, evald = _setup()
     base = dict(n_clients=10, participation=0.3, local_steps=15, batch_size=32)

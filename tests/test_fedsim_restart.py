@@ -3,6 +3,7 @@ from the same server state (fault-tolerance invariant)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import optim
 from repro.checkpoint.manager import load_checkpoint, save_checkpoint
@@ -11,6 +12,8 @@ from repro.core.fedsim import FedSim
 from repro.core.qat import QATConfig, clip_value_mask, weight_decay_mask
 from repro.data import partition_iid, synthetic_classification
 from repro.models import small
+
+pytestmark = pytest.mark.slow  # multi-round federated sim, ~11s
 
 
 def _sim(params):

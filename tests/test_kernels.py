@@ -119,15 +119,21 @@ def test_qat_matmul_blocking_invariance():
 
 
 def test_ste_wrapper_gradients():
-    """Kernel-backed STE: grad wrt x is a clip mask, grad wrt alpha is the
-    signed overflow mass — matches autodiff of the core implementation."""
+    """Kernel-backed STE must match jnp autodiff of the core implementation:
+    grad wrt x is the clip mask; grad wrt alpha is the signed overflow mass
+    PLUS the scale term (q - y) * s / alpha from the differentiable
+    exponent bias (see kernels/dispatch.py docstring)."""
     x = _data((32, 128), jnp.float32, seed=8)
     alpha = jnp.asarray(0.5 * float(jnp.max(jnp.abs(x))), jnp.float32)
 
     gk = jax.grad(lambda xx: jnp.sum(ops.quantize_det_ste(xx, alpha)))(x)
+    gx_oracle = jax.grad(lambda xx: jnp.sum(fp8.quantize_det(xx, alpha)))(x)
     mask = (jnp.abs(x) <= alpha).astype(jnp.float32)
     np.testing.assert_allclose(np.asarray(gk), np.asarray(mask), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gx_oracle),
+                               atol=1e-6)
 
     ga = jax.grad(lambda a: jnp.sum(ops.quantize_det_ste(x, a)), argnums=0)(alpha)
-    want = jnp.sum((jnp.abs(x) > alpha) * jnp.sign(x))
-    np.testing.assert_allclose(np.asarray(ga), np.asarray(want), atol=1e-5)
+    ga_oracle = jax.grad(lambda a: jnp.sum(fp8.quantize_det(x, a)))(alpha)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_oracle),
+                               rtol=1e-5, atol=1e-5)

@@ -29,6 +29,7 @@ def _losses(model, params, batch, opt, **kw):
     return float(m["loss"]), p2
 
 
+@pytest.mark.slow
 def test_opt_levels_agree(setup):
     model, params, batch, opt = setup
     l0, p0 = _losses(model, params, batch, opt, opt_level=0)
@@ -41,6 +42,7 @@ def test_opt_levels_agree(setup):
         assert d < 5e-2, d
 
 
+@pytest.mark.slow
 def test_accum_matches_single(setup):
     model, params, batch, opt = setup
     l1, p1 = _losses(model, params, batch, opt, opt_level=1, accum=1)

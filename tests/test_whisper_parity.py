@@ -2,10 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.core.qat import DISABLED
 from repro.models import whisper as W
+
+pytestmark = pytest.mark.slow  # encoder-decoder parity, ~6s
 
 
 def test_decode_matches_teacher_forcing():
