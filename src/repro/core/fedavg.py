@@ -153,11 +153,20 @@ def make_round(
             wire.payload_nbytes(spec) if on_wire
             else 4 * (spec.total + spec.n_other_elems)
         )
+        round_total = 2 * P * per_model
+        # static python int at trace time; int32 keeps the count EXACT
+        # (f32 rounds integers above 2^24 ~ 16.7 MB, well inside the
+        # simulator's round sizes)
+        if round_total >= 2 ** 31:
+            raise ValueError(
+                f"round moves {round_total} bytes — exceeds the int32 "
+                "wire_bytes metric; this simulator targets sub-GiB rounds"
+            )
         return new_params, {
             "local_loss": jnp.mean(losses),
             # exact bytes moved this round: P uplink payloads + P downlink
             # copies of the broadcast payload (Figure 1 accounting)
-            "wire_bytes": jnp.asarray(2 * P * per_model, jnp.float32),
+            "wire_bytes": jnp.asarray(round_total, jnp.int32),
         }
 
     return round_fn

@@ -12,17 +12,13 @@ architectures lives in ``repro.launch.train`` instead.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import metrics
 from .fedavg import FedConfig, make_round
-from .fp8 import tree_quantize_det
-from .qat import QATConfig, comm_quantize
 from ..optim.base import Optimizer
 
 Array = jax.Array
@@ -81,15 +77,24 @@ class FedSim:
             # Deployment evaluation: the model the server ships is on the FP8
             # grid; evaluate with QAT quantizers active (matches E[F(Q(w))]).
             logits = predict_fn(params, x, cfg.qat)
-            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
         self._eval = _eval
 
     def evaluate(self, x: Array, y: Array, batch: int = 500) -> float:
-        accs = []
+        """Centralized test accuracy, exact over ragged batches.
+
+        Accumulates correct-counts rather than averaging per-batch
+        accuracies: an unweighted mean would over-weight a smaller final
+        batch (e.g. 1200 examples at batch 500 -> the 200-example tail
+        counts 2.5x per example).
+        """
+        correct = 0.0
         for i in range(0, x.shape[0], batch):
-            accs.append(float(self._eval(self.params, x[i : i + batch], y[i : i + batch])))
-        return float(np.mean(accs))
+            correct += float(
+                self._eval(self.params, x[i : i + batch], y[i : i + batch])
+            )
+        return correct / x.shape[0]
 
     def run(
         self,
@@ -101,12 +106,21 @@ class FedSim:
     ) -> FedHistory:
         hist = FedHistory()
         total_bytes = 0
+        traced_bytes: int | None = None
         for r in range(1, rounds + 1):
             key, k_round = jax.random.split(key)
             self.params, m = self._round(
                 self.params, self.client_data, self.client_labels, self.nk, k_round
             )
-            total_bytes += self.bytes_per_round
+            # charge the bytes the traced round actually moved (fedavg's
+            # wire_bytes reads the real payload layout at trace time) — the
+            # static estimate in self.bytes_per_round is kept for planning
+            # and is asserted equal in tests/test_fedsim_accounting.py.
+            # It is a trace-time constant, so fetch it ONCE: an int() every
+            # round would block async dispatch on device completion.
+            if traced_bytes is None:
+                traced_bytes = int(m["wire_bytes"])
+            total_bytes += traced_bytes
             if eval_data is not None and (r % eval_every == 0 or r == rounds):
                 acc = self.evaluate(*eval_data)
                 hist.rounds.append(r)

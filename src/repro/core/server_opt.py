@@ -18,6 +18,19 @@ by alternating minimization:
 Inputs are *stacked* client messages: every leaf has a leading client axis
 ``(P, ...)`` — exactly what a vmapped client update produces. All
 computation happens on the server; no extra communication (paper §2).
+
+Implementation: the whole alternation runs on the tiled parameter plane
+(``core.plane``). All quantized weights live in ONE ``(rows, LANE)`` buffer
+with a per-row alpha column, so each GD step is one fused
+quantize-dequantize launch (``kernels.dispatch.fake_quant_plane``, STE
+custom VJP) and each grid point is one forward launch — O(gd_steps +
+n_grid) launches total instead of O(n_leaves x gd_steps + n_leaves x
+n_grid). Eq. (5)'s argmin is taken per *alpha segment* (per tensor, or per
+layer slab for stacked scanned parameters — the paper's "per-tensor"
+granularity, see ``core.qat``) via a segment-sum of the per-row MSE.
+Stochastic rounding draws from the codec's counter RNG, so
+:func:`server_optimize_reference` — the per-leaf Python loop kept for
+parity tests and benchmarks — reproduces the fused path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -27,8 +40,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from . import fp8, qat
+from . import fp8, plane
 from .fp8 import E4M3, FP8Format
+from ..kernels import dispatch, fp8_quant
 
 Array = jax.Array
 PyTree = Any
@@ -54,43 +68,41 @@ def weighted_mean(stacked: PyTree, nk: Array) -> PyTree:
     return jax.tree.map(avg, stacked)
 
 
-def _leaf_gd(w0: Array, alpha_bar: Array, targets: Array, nw: Array,
-             key: Array, cfg: ServerOptConfig) -> Array:
-    """Eq. (4): ``gd_steps`` SGD steps on one weight tensor."""
-
-    def loss(w, k):
-        q = fp8.quantize_rand(w, alpha_bar, k, cfg.fmt)
-        err = q[None] - targets
-        per_client = jnp.sum(err * err, axis=tuple(range(1, err.ndim)))
-        return jnp.sum(nw * per_client)
-
-    def step(w, k):
-        g = jax.grad(loss)(w, k)
-        return w - cfg.lr * g, None
-
-    keys = jax.random.split(key, cfg.gd_steps)
-    w, _ = jax.lax.scan(step, w0, keys)
-    return w
+def _key_words(key: Array, n: int) -> Array:
+    """``n`` independent (2,) u32 word pairs for the counter RNG."""
+    keys = jax.random.split(key, n)
+    kd = keys if keys.dtype == jnp.uint32 else jax.vmap(jax.random.key_data)(keys)
+    return kd.reshape(n, -1)[:, :2]
 
 
-def _leaf_alpha_grid(w: Array, alphas_k: Array, targets: Array, nw: Array,
-                     key: Array, cfg: ServerOptConfig) -> Array:
-    """Eq. (5): grid search alpha in [min_k alpha_k, max_k alpha_k]."""
-    lo = jnp.min(alphas_k, axis=0)
-    hi = jnp.max(alphas_k, axis=0)
-    ts = jnp.linspace(0.0, 1.0, cfg.n_grid)
+def _plane_views(stacked_msgs: PyTree, avg: PyTree, spec: plane.PlaneSpec):
+    """Tile the server average and the stacked client messages.
 
-    def mse_at(t, k):
-        a = lo + t * (hi - lo)
-        q = fp8.quantize_rand(w, a, k, cfg.fmt)
-        err = q[None] - targets
-        per_client = jnp.sum(err * err, axis=tuple(range(1, err.ndim)))
-        return jnp.sum(nw * per_client)
+    Returns ``(w2 (R, LANE), abar (S,), t2 (P, R, LANE), ak (P, S))`` —
+    zero padding in ``w2``/``t2`` is self-cancelling in every MSE below
+    (both quantize to 0 and both targets are 0).
+    """
+    w2, abar = plane.pack_tiles(avg, spec)
+    t2, ak = jax.vmap(lambda p: plane.pack_tiles(p, spec))(stacked_msgs)
+    return w2, abar, t2, ak
 
-    keys = jax.random.split(key, cfg.n_grid)
-    losses = jax.vmap(mse_at)(ts, keys)
-    t_best = ts[jnp.argmin(losses)]
-    return lo + t_best * (hi - lo)
+
+def _reassemble(avg: PyTree, spec: plane.PlaneSpec,
+                w2_new: Array, a_new: Array) -> PyTree:
+    """New plane weights + per-segment alphas -> full server tree.
+
+    Shared by the fused path and the per-leaf reference — the two must
+    reassemble identically for the parity contract in tests/test_plane.py.
+    """
+    leaves = list(jax.tree_util.tree_leaves(avg))
+    for qi, slot in enumerate(spec.q_slots):
+        leaves[slot] = plane.leaf_from_tiles(w2_new, spec, qi)
+    for qi, aslot in enumerate(spec.alpha_slots):
+        s0, n = spec.leaf_seg0[qi], spec.leaf_segs[qi]
+        leaves[aslot] = a_new[s0:s0 + n].reshape(
+            spec.alpha_shapes[qi]
+        ).astype(spec.alpha_dtypes[qi])
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
 def server_optimize(
@@ -107,52 +119,115 @@ def server_optimize(
     avg = weighted_mean(stacked_msgs, nk)
     if not cfg.enabled:
         return avg
+    spec = plane.make_plane_spec(avg)
+    if not spec.q_slots:
+        return avg
 
     nw = nk / jnp.sum(nk)
-    qnames = qat.quantized_leaf_names(avg)
+    nw_b = nw[:, None, None]
+    w2, abar, t2, ak = _plane_views(stacked_msgs, avg, spec)
+    abar_col = plane.alpha_column(abar, spec)
+    seg_ids = jnp.asarray(spec.row_seg)
+    k_gd, k_grid = jax.random.split(key)
 
-    flat_avg, treedef = jax.tree_util.tree_flatten_with_path(avg)
-    by_name_avg = {
-        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_avg
-    }
-    flat_stk = jax.tree_util.tree_flatten_with_path(stacked_msgs)[0]
-    by_name_stk = {
-        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_stk
-    }
+    # --- Eq. (4): gd_steps STE-SGD steps, ONE fused launch per step ------
+    def gd_loss(w2_, key2):
+        q2 = dispatch.fake_quant_plane(w2_, abar_col, key2, cfg.fmt)
+        err = q2[None] - t2
+        return jnp.sum(nw_b * err * err)
 
-    n_q = max(len(qnames), 1)
-    keys = jax.random.split(key, 2 * n_q)
-    kmap = {n: (keys[2 * i], keys[2 * i + 1]) for i, n in enumerate(sorted(qnames))}
+    def gd_step(w2_, key2):
+        return w2_ - cfg.lr * jax.grad(gd_loss)(w2_, key2), None
 
-    out = []
-    for path, leaf in flat_avg:
-        dotted = ".".join(qat._key_name(p) for p in path)
-        if dotted in qnames:
-            targets = by_name_stk[dotted]          # (P, ...) quantized client weights
-            alphas_k = by_name_stk[dotted + qat.QA_SUFFIX]  # (P, ...) client alphas
-            alpha_bar = by_name_avg[dotted + qat.QA_SUFFIX]
-            kw, ka = kmap[dotted]
-            w_new = _leaf_gd(leaf, alpha_bar, targets, nw, kw, cfg)
-            out.append(w_new)
-        else:
-            out.append(leaf)
-    result = jax.tree_util.tree_unflatten(treedef, out)
+    w2_new, _ = jax.lax.scan(gd_step, w2, _key_words(k_gd, cfg.gd_steps))
 
-    # Second half of the alternation: refresh alphas given the new weights.
-    flat_res = jax.tree_util.tree_flatten_with_path(result)[0]
-    by_name_res = {
-        ".".join(qat._key_name(p) for p in path): leaf for path, leaf in flat_res
-    }
-    out2 = []
-    for path, leaf in flat_res:
-        dotted = ".".join(qat._key_name(p) for p in path)
-        base = dotted[: -len(qat.QA_SUFFIX)] if dotted.endswith(qat.QA_SUFFIX) else None
-        if base is not None and base in qnames:
-            w_new = by_name_res[base]
-            targets = by_name_stk[base]
-            alphas_k = by_name_stk[dotted]
-            _, ka = kmap[base]
-            out2.append(_leaf_alpha_grid(w_new, alphas_k, targets, nw, ka, cfg))
-        else:
-            out2.append(leaf)
-    return jax.tree_util.tree_unflatten(treedef, out2)
+    # --- Eq. (5): per-segment grid search, ONE launch per grid point -----
+    lo = jnp.min(ak, axis=0)
+    hi = jnp.max(ak, axis=0)
+    ts = jnp.linspace(0.0, 1.0, cfg.n_grid)
+
+    def seg_mse(_, t_key2):
+        t, key2 = t_key2
+        a = jnp.maximum(lo + t * (hi - lo), fp8._ALPHA_FLOOR)
+        a_col = plane.alpha_column(a, spec)
+        q2 = dispatch.fake_quant_tiles(w2_new, a_col, key2, cfg.fmt)
+        err2 = jnp.sum(nw_b * (q2[None] - t2) ** 2, axis=0)   # (R, LANE)
+        return None, jax.ops.segment_sum(
+            jnp.sum(err2, axis=1), seg_ids, num_segments=spec.n_seg
+        )
+
+    _, losses = jax.lax.scan(
+        seg_mse, None, (ts, _key_words(k_grid, cfg.n_grid))
+    )                                                          # (n_grid, S)
+    t_best = ts[jnp.argmin(losses, axis=0)]                    # (S,)
+    a_new = lo + t_best * (hi - lo)
+    return _reassemble(avg, spec, w2_new, a_new)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf reference: the O(n_seg x gd_steps + n_seg x n_grid) Python loop
+# the plane path replaced. Shares the plane layout and counter-RNG draws, so
+# it matches `server_optimize` exactly — used by tests/test_plane.py and
+# benchmarks/kernel_bench.py.
+# ---------------------------------------------------------------------------
+
+
+def _seg_bits(spec: plane.PlaneSpec, si: int, key2: Array):
+    """The counter-RNG bits the fused launch draws for segment ``si``."""
+    rows = spec.seg_rows[si]
+    k2 = key2.astype(jnp.uint32)
+    return fp8_quant._tile_counter_bits(
+        jnp.uint32(spec.seg_row0[si]), (rows, plane.LANE), k2[0], k2[1]
+    )
+
+
+def server_optimize_reference(
+    stacked_msgs: PyTree,
+    nk: Array,
+    key: Array,
+    cfg: ServerOptConfig,
+) -> PyTree:
+    """Eq. (4)-(5) as a per-segment Python loop (one launch per segment per
+    GD step / grid point), numerically identical to :func:`server_optimize`."""
+    avg = weighted_mean(stacked_msgs, nk)
+    if not cfg.enabled:
+        return avg
+    spec = plane.make_plane_spec(avg)
+    if not spec.q_slots:
+        return avg
+
+    nw = nk / jnp.sum(nk)
+    nw_b = nw[:, None, None]
+    w2, abar, t2, ak = _plane_views(stacked_msgs, avg, spec)
+    k_gd, k_grid = jax.random.split(key)
+    gd_keys = _key_words(k_gd, cfg.gd_steps)
+    grid_keys = _key_words(k_grid, cfg.n_grid)
+    ts = jnp.linspace(0.0, 1.0, cfg.n_grid)
+
+    w_rows, a_segs = [], []
+    for si in range(spec.n_seg):
+        r0, rows = spec.seg_row0[si], spec.seg_rows[si]
+        w_seg = w2[r0:r0 + rows]
+        t_seg = t2[:, r0:r0 + rows]
+        a_seg = abar[si]
+        # Eq. (4) on this segment, same bits as the fused launch
+        for step in range(cfg.gd_steps):
+            bits = _seg_bits(spec, si, gd_keys[step])
+            q = fp8_quant.fake_quant_bits_jnp(w_seg, a_seg, bits, cfg.fmt)
+            dldq = 2.0 * jnp.sum(nw_b * (q[None] - t_seg), axis=0)
+            inside = (jnp.abs(w_seg) <= a_seg).astype(jnp.float32)
+            w_seg = w_seg - cfg.lr * dldq * inside
+        # Eq. (5) on this segment
+        losses = []
+        lo, hi = jnp.min(ak[:, si]), jnp.max(ak[:, si])
+        for gi in range(cfg.n_grid):
+            a = jnp.maximum(lo + ts[gi] * (hi - lo), fp8._ALPHA_FLOOR)
+            bits = _seg_bits(spec, si, grid_keys[gi])
+            q = fp8_quant.fake_quant_bits_jnp(w_seg, a, bits, cfg.fmt)
+            losses.append(jnp.sum(nw_b * (q[None] - t_seg) ** 2))
+        t_best = ts[jnp.argmin(jnp.stack(losses))]
+        w_rows.append(w_seg)
+        a_segs.append(lo + t_best * (hi - lo))
+    w2_new = jnp.concatenate(w_rows, axis=0)
+    a_new = jnp.stack(a_segs)
+    return _reassemble(avg, spec, w2_new, a_new)

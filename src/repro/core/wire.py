@@ -26,6 +26,13 @@ Because every client round-trips the same structure, ``encode``/``decode``
 are vmap-safe: ``fedavg.make_round`` vmaps them over the client axis for
 uplink. ``compression.fp8_wire_allreduce_mean`` gathers ``codes`` across
 mesh axes so the collective itself moves uint8.
+
+The ``(rows, LANE)`` tiling machinery itself lives in ``core.plane`` (the
+reusable tiled parameter plane, shared with the opt_level-1 per-step
+weight fake-quant and the UQ+ server optimizer). The wire keeps its own
+``WireSpec`` layout on top of it: payload codes pack each leaf
+*contiguously* so they slice back to exact wire bytes, whereas the plane
+pads per alpha segment for row/clip-value alignment.
 """
 from __future__ import annotations
 
@@ -36,38 +43,12 @@ import jax
 import jax.numpy as jnp
 
 from . import fp8, qat
+from .plane import LANE, f32 as _f32, nelem as _nelem, tiles as _tiles
 from .fp8 import E4M3, FP8Format
 from ..kernels import dispatch
-from ..kernels.fp8_quant import WIRE_LANE as LANE
 
 Array = jax.Array
 PyTree = Any
-
-
-def _f32(x: Array) -> Array:
-    """Cast to f32 only when needed. A no-op ``convert`` on a buffer feeding
-    an interpret-mode pallas_call defeats XLA's operand fusion and costs
-    ~7x on the whole encode (measured on the LeNet tree) — skip it."""
-    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
-
-
-def _tiles(pieces: list, fill) -> Array:
-    """Stack 1-D pieces into the (rows, LANE) wire tile layout.
-
-    Each piece is zero-padded to a whole number of 128-lane rows and the
-    rows are concatenated. Per-leaf row alignment (rather than one flat
-    concat reshaped afterwards) matters twice: the lane width is a multiple
-    of the TPU native 128, and XLA:CPU pessimizes a flat concat-of-reshapes feeding an
-    interpret-mode pallas_call by ~7x (measured). Padding never reaches the
-    wire — codes are sliced back to exact element counts.
-    """
-    rows = []
-    for f in pieces:
-        pad = (-f.size) % LANE
-        if pad:
-            f = jnp.concatenate([f, jnp.full((pad,), fill, f.dtype)])
-        rows.append(f.reshape(-1, LANE))
-    return jnp.concatenate(rows, axis=0)
 
 
 def _alpha_tiles(other: tuple, spec: "WireSpec") -> Array:
@@ -210,13 +191,6 @@ def encode(
         )
     ])
     return {"codes": codes, "other": other}
-
-
-def _nelem(shape: tuple[int, ...]) -> int:
-    n = 1
-    for d in shape:
-        n *= d
-    return n
 
 
 def decode_tiles(codes: Array, other: tuple, spec: WireSpec,

@@ -288,6 +288,84 @@ def unpack_tiles(c2: Array, a2: Array, fmt: FP8Format = E4M3) -> Array:
     return fp8.unpack_fp8(c2, a2, fmt).astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Parameter-plane entry points (see core.plane): fused tiled Q_det with a
+# custom VJP, and a differentiable quantize-dequantize for the UQ+ server
+# optimizer. Alpha is the plane's per-ROW column (R, 1); the bwd returns the
+# per-row alpha cotangent, and the caller's gather transpose segment-sums it
+# back to each leaf's scalar (or stacked per-layer) alpha.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _quant_det_plane_kernel_ste(x2, a_col, fmt):
+    _, interp = _pallas_opts()
+    return fp8_quant.quant_det_tiles(x2, a_col, fmt=fmt, interpret=interp)
+
+
+def _quant_det_plane_fwd(x2, a_col, fmt):
+    return _quant_det_plane_kernel_ste(x2, a_col, fmt), (x2, a_col)
+
+
+def _quant_det_plane_bwd(fmt, res, g):
+    x2, a_col = res
+    _, interp = _pallas_opts()
+    gx, ga_row = fp8_quant.quant_det_tiles_bwd(
+        x2, a_col, g, fmt=fmt, interpret=interp
+    )
+    return gx, ga_row
+
+
+_quant_det_plane_kernel_ste.defvjp(_quant_det_plane_fwd, _quant_det_plane_bwd)
+
+
+def quant_det_plane(x2: Array, a_col: Array, fmt: FP8Format = E4M3) -> Array:
+    """One-launch Q_det on the (R, LANE) plane with per-row alpha column.
+
+    Kernel backends run the fused forward/backward tile pair; the jnp
+    fallback broadcasts ``core.fp8.quantize_det`` over the plane, whose
+    native autodiff reduces the alpha cotangent to the same (R, 1) column.
+    """
+    use, _ = _pallas_opts()
+    if use:
+        return _quant_det_plane_kernel_ste(x2, a_col, fmt)
+    return fp8.quantize_det(x2, a_col, fmt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant_plane(x2, a_col, key2, fmt):
+    """Differentiable one-launch Q_rand-transit on the plane (STE grads).
+
+    Same forward as :func:`fake_quant_tiles` (counter RNG, so the draw is
+    reproducible across backends); the backward applies the paper's STE —
+    clip mask to the tiles, clip routing + scale term per row to the alpha
+    column — computed elementwise from the saved forward output, since
+    ``(q - y) * s == q_val - clip(x)`` needs no random-bit replay.
+    """
+    return fake_quant_tiles(x2, a_col, key2, fmt=fmt)
+
+
+def _fake_quant_plane_fwd(x2, a_col, key2, fmt):
+    q = fake_quant_plane(x2, a_col, key2, fmt)
+    return q, (x2, a_col, key2, q)
+
+
+def _fake_quant_plane_bwd(fmt, res, g):
+    x2, a_col, key2, q = res
+    a = jnp.maximum(a_col, fp8._ALPHA_FLOOR)
+    inside = (jnp.abs(x2) <= a).astype(jnp.float32)
+    xc = jnp.clip(x2, -a, a)
+    gx = g * inside
+    ga_row = jnp.sum(
+        g * (jnp.sign(x2) * (1.0 - inside) + (q - xc) / a),
+        axis=1, keepdims=True,
+    )
+    return gx, ga_row, _zero_bits_cotangent(key2)
+
+
+fake_quant_plane.defvjp(_fake_quant_plane_fwd, _fake_quant_plane_bwd)
+
+
 def fake_quant_tiles(
     x2: Array,                   # (R, LANE) wire tile layout
     a2: Array,                   # (R, LANE) per-element clipping values

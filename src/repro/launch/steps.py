@@ -7,6 +7,12 @@
   collective*: Q_rand on every weight tensor, then mean over the federated
   mesh axes (paper Algorithm 1 uplink+aggregate+downlink fused).
 * ``make_prefill_step`` / ``make_decode_step`` — serving paths.
+
+opt_level >= 1 pre-quantizes the weight tree once per step on the tiled
+parameter plane (``core.plane``): one fused Q_det launch for the whole
+tree, forward and VJP replay, instead of one per tensor. FSDP-sharded
+lowerings (``grad_shardings`` set) keep the per-leaf variant so the
+quantize stays elementwise on the shards.
 """
 from __future__ import annotations
 
@@ -45,14 +51,45 @@ def quantize_params_once(params: PyTree, qcfg: QATConfig) -> tuple[PyTree, QATCo
 
     Q_det is a pure function of (w, alpha); inside one optimizer step it is
     evaluated identically at every use (every layer pass, every microbatch,
-    every remat recompute). Quantizing the whole parameter tree ONCE —
-    elementwise on the FSDP *shards*, before any all-gather — is
+    every remat recompute). Quantizing the whole parameter tree ONCE is
     mathematically identical (STE gradients flow through this call into w
     and alpha via normal autodiff) and removes O(accum x layers x
-    remat-passes) redundant fake-quant chains plus converts the per-layer
-    FSDP all-gather payload from f32 master weights to bf16 quantized ones.
-    Measured effect: see EXPERIMENTS.md §Perf.
+    remat-passes) redundant fake-quant chains plus lets downstream consume
+    bf16 quantized values instead of f32 master weights. Measured effect:
+    see EXPERIMENTS.md §Perf.
+
+    The tree quantizes on the tiled parameter plane (``core.plane``): every
+    quantized leaf rides one ``(rows, LANE)`` buffer with a per-row alpha
+    column, so the whole-tree fake-quant — forward AND the VJP replay at
+    the end of the step — is ONE fused kernel launch instead of
+    O(n_tensors). Values and STE gradients match the per-leaf loop
+    (:func:`quantize_params_once_per_leaf`) to float accumulation noise.
+
+    Sharding caveat: packing the plane concatenates leaves, which under
+    GSPMD reshards FSDP-sharded masters; ``make_train_step`` therefore
+    selects the per-leaf variant (elementwise on the shards, no cross-shard
+    movement) whenever it lowers with explicit ``grad_shardings``, and the
+    one-launch plane everywhere else (simulator, host meshes, replicated
+    params).
     """
+    if not (qcfg.enabled and qcfg.quantize_weights):
+        return params, qcfg
+    from ..core import plane
+    from ..models.common import COMPUTE_DTYPE
+
+    qparams = plane.quantize_det(params, fmt=qcfg.fmt,
+                                 out_dtype=COMPUTE_DTYPE)
+    return qparams, qcfg.replace(quantize_weights=False)
+
+
+def quantize_params_once_per_leaf(
+    params: PyTree, qcfg: QATConfig
+) -> tuple[PyTree, QATConfig]:
+    """Per-leaf variant of :func:`quantize_params_once` — O(n_tensors)
+    quantize chains, but purely elementwise per leaf, so FSDP-sharded
+    masters quantize on their shards with zero cross-shard traffic. Used
+    by ``make_train_step`` when lowering with ``grad_shardings`` and as
+    the grad-parity / launch-collapse benchmark reference."""
     if not (qcfg.enabled and qcfg.quantize_weights):
         return params, qcfg
     import jax.numpy as _jnp
@@ -137,11 +174,17 @@ def make_train_step(model: Model, opt: Optimizer, qcfg: QATConfig,
         )
         return loss / accum, jax.tree.map(lambda g: g / accum, grads)
 
+    # sharded (FSDP) lowering quantizes per leaf — elementwise on the
+    # shards; the one-launch plane would reshard the concatenated f32
+    # masters under GSPMD (see quantize_params_once docstring)
+    quantize_once = (quantize_params_once_per_leaf
+                     if grad_shardings is not None else quantize_params_once)
+
     def train_step(params, opt_state, batch, step):
         if opt_level >= 1:
-            # quantize shards ONCE; vjp replays the STE chain once at the end
+            # quantize the tree ONCE; vjp replays the STE chain once at the end
             params_q, vjp_quant = jax.vjp(
-                lambda p: quantize_params_once(p, qcfg)[0], params
+                lambda p: quantize_once(p, qcfg)[0], params
             )
             q_inner = qcfg.replace(quantize_weights=False)
 

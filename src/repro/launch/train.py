@@ -34,7 +34,7 @@ from ..models import registry
 from ..models.common import sharding_rules
 from ..sharding.policy import ShardingPolicy
 from .mesh import make_host_mesh, make_production_mesh
-from .steps import make_optimizer, make_train_step
+from .steps import make_comm_round, make_optimizer, make_train_step
 
 
 def build_trainer(cfg, mesh, qat: bool, lr: float, opt_kind: str = "adamw"):
@@ -112,6 +112,17 @@ def main() -> None:
 
     fl_axes = tuple(a for a in ("pod",) if a in mesh.axis_names
                     and mesh.shape[a] > 1)
+    comm_round = None
+    if fl_axes:
+        # built + jitted ONCE: the round boundary's quantized collective is
+        # the same computation every round, so constructing it inside the
+        # loop would retrace (and re-lower) it at every boundary
+        from .dryrun import pspec_to_pspecs
+
+        comm_round = jax.jit(make_comm_round(
+            mesh, pspec_to_pspecs(policy.params(params)), fl_axes,
+            qcfg, mode=args.comm_mode,
+        ))
 
     with mesh, sharding_rules(policy.activation_rules()):
         t0 = time.time()
@@ -120,16 +131,9 @@ def main() -> None:
             params, opt_state, m = jitted(
                 params, opt_state, batch, jnp.asarray(step, jnp.int32)
             )
-            if fl_axes and (step + 1) % args.local_steps == 0:
+            if comm_round is not None and (step + 1) % args.local_steps == 0:
                 # federated round boundary: quantized all-reduce across silos
-                from .steps import make_comm_round
-                from .dryrun import pspec_to_pspecs
-
-                cr = make_comm_round(
-                    mesh, pspec_to_pspecs(policy.params(params)), fl_axes,
-                    qcfg, mode=args.comm_mode,
-                )
-                params = jax.jit(cr)(params, jax.random.PRNGKey(step))
+                params = comm_round(params, jax.random.PRNGKey(step))
             if (step + 1) % 10 == 0 or step == start:
                 print(
                     f"step {step+1:5d}  loss {float(m['loss']):.4f}  "

@@ -1,0 +1,77 @@
+"""FedSim measurement correctness (ISSUE 2 bugfixes).
+
+* ``FedSim.evaluate`` must weight ragged batches by size — an unweighted
+  mean of per-batch accuracies over-weights a smaller final batch.
+* The bytes ``FedSim.run`` charges must be the bytes the traced round
+  actually moved: ``metrics.round_bytes`` (static estimate) and fedavg's
+  ``wire_bytes`` (read off the traced payload) must agree for quantized
+  (rand/det) and FP32 (``comm_mode='none'``) configs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import metrics
+from repro.core.fedavg import FedConfig, make_round
+from repro.core.fedsim import FedSim
+from repro.core.qat import (
+    DISABLED,
+    QATConfig,
+    clip_value_mask,
+    weight_decay_mask,
+)
+from repro.models import small
+
+
+def _sim(cfg, d=8, n_classes=4):
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=d, n_classes=n_classes)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    k = cfg.n_clients
+    cx = jax.random.normal(jax.random.PRNGKey(1), (k, 16, d))
+    cy = jax.random.randint(jax.random.PRNGKey(2), (k, 16), 0, n_classes)
+    nk = jnp.full((k,), 16.0)
+    return FedSim(params, loss, apply, opt, cfg, cx, cy, nk), apply, params
+
+
+def test_evaluate_exact_on_ragged_batches():
+    """70 examples at batch 32 -> 32/32/6. Labels are built so the head
+    batches score 0 and the 6-example tail scores 1: the unweighted
+    per-batch mean reports 1/3, the true accuracy is 6/70."""
+    cfg = FedConfig(n_clients=2, participation=1.0, local_steps=1,
+                    batch_size=4, comm_mode="none", qat=DISABLED)
+    sim, apply, params = _sim(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (70, 8))
+    pred = jnp.argmax(apply(params, x, cfg.qat), -1)
+    y = jnp.concatenate([(pred[:64] + 1) % 4, pred[64:]])  # head wrong, tail right
+    got = sim.evaluate(x, y, batch=32)
+    assert abs(got - 6.0 / 70.0) < 1e-6, got
+    # the bug this regresses: naive per-batch averaging would say 1/3
+    assert abs(got - 1.0 / 3.0) > 0.2
+
+
+@pytest.mark.parametrize("comm_mode,qat_cfg", [
+    ("rand", QATConfig()),
+    ("det", QATConfig()),
+    ("none", DISABLED),
+])
+def test_static_and_traced_round_bytes_agree(comm_mode, qat_cfg):
+    cfg = FedConfig(n_clients=2, participation=1.0, local_steps=1,
+                    batch_size=8, comm_mode=comm_mode, qat=qat_cfg)
+    sim, _, params = _sim(cfg)
+    _, m = sim._round(sim.params, sim.client_data, sim.client_labels,
+                      sim.nk, jax.random.PRNGKey(0))
+    static = metrics.round_bytes(params, cfg.clients_per_round,
+                                 quantized=comm_mode != "none")
+    assert static == sim.bytes_per_round
+    assert int(m["wire_bytes"]) == static, (int(m["wire_bytes"]), static)
+    # and FedSim.run must charge exactly that per round (same jitted round,
+    # so this costs no extra compile)
+    x = jax.random.normal(jax.random.PRNGKey(4), (24, 8))
+    y = jax.random.randint(jax.random.PRNGKey(5), (24,), 0, 4)
+    hist = sim.run(2, jax.random.PRNGKey(6), eval_data=(x, y), eval_every=1)
+    assert hist.cumulative_bytes == [static, 2 * static]
