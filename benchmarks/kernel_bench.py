@@ -15,7 +15,11 @@ trajectory:
 * the tiled parameter plane (ISSUE 2): whole-tree quantize-params-once
   forward+backward on the plane vs the per-leaf loop, and UQ+
   server_optimize (one launch per GD step / grid point) vs the per-segment
-  reference loop.
+  reference loop;
+* the federated client executors (ISSUE 3): chunked scan-over-vmap vs
+  full-cohort vmap at K=512 LeNet clients — XLA compiled temp-buffer size
+  (the live-memory envelope) and wall-clock. The chunked executor's temps
+  must scale with the chunk size, not the cohort size.
 
 Interpret-mode absolute numbers are NOT TPU predictions — the interpreter
 executes kernel bodies op-by-op, so true fusion only materializes on a
@@ -296,12 +300,79 @@ def _plane_benches(rows):
     })
 
 
+def _fed_executor_benches(rows):
+    """Chunked vs full-vmap ClientExecutor at K=512 LeNet clients (ISSUE 3).
+
+    The full-cohort vmap materializes per-client optimizer state,
+    activations and local-step scan residuals for ALL 512 clients at once;
+    the ChunkedExecutor's lax.scan holds them for one 16-client chunk at a
+    time, so XLA's compiled temp-buffer size (reported by
+    ``memory_analysis``) is the O(chunk)-vs-O(P) envelope made measurable.
+    Both rounds are the SAME computation (bit-identical outputs — asserted
+    in tests/test_engine.py); only the schedule differs. QAT/wire are off
+    so the numbers isolate the executor. jnp backend: the executor is pure
+    scheduling, no kernel bodies involved.
+    """
+    from repro import optim
+    from repro.core.engine import FedConfig, RoundEngine
+    from repro.core.qat import DISABLED
+
+    K, CHUNK = 512, 16
+    init, _ = small.REGISTRY["lenet"]
+    params = init(jax.random.PRNGKey(0), n_classes=10)
+    loss = small.make_loss(small.REGISTRY["lenet"][1])
+    # momentum so per-client optimizer state is real (mirrors the params)
+    opt = optim.sgd(0.05, momentum=0.9)
+    base = dict(n_clients=K, participation=1.0, local_steps=1,
+                batch_size=4, comm_mode="none", qat=DISABLED)
+    data = jax.random.normal(jax.random.PRNGKey(1), (K, 4, 32, 32, 3),
+                             jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (K, 4), 0, 10)
+    nk = jnp.full((K,), 4.0)
+    key = jax.random.PRNGKey(3)
+
+    temps = {}
+    for name, cfg in (
+        ("full_vmap", FedConfig(**base)),
+        (f"chunked_{CHUNK}", FedConfig(chunk=CHUNK, **base)),
+    ):
+        eng = RoundEngine(loss, opt, cfg)
+        # the executor STAGE, jitted standalone: the stacked client params
+        # are this jit's *output* buffer (the aggregator's input — an O(P)
+        # cost both schedules share), so temp_size_in_bytes isolates the
+        # live training memory: per-client optimizer state + activations.
+        lu = eng._local_update
+        ex = jax.jit(lambda d, l, k: eng.executor(lu, params, d, l, k))
+        keys = jax.random.split(key, K)
+        ma = ex.lower(data, labels, keys).compile().memory_analysis()
+        temp_mb = (ma.temp_size_in_bytes / 1e6) if ma is not None else None
+        temps[name] = temp_mb
+        # end-to-end round wall-clock (sampling + links + aggregate included)
+        rf = jax.jit(eng.round_fn)
+        state = eng.init(params)
+        t = _time(rf, state, data, labels, nk, key, n=2, reps=2)
+        _row(rows, f"fed_round_{name}_K{K}_lenet", t,
+             f"one round, U=1, B=4; executor XLA temp "
+             f"{temp_mb:.0f} MB" if temp_mb is not None else "temp n/a")
+    if all(v is not None for v in temps.values()):
+        ratio = temps["full_vmap"] / max(temps[f"chunked_{CHUNK}"], 1e-9)
+        rows.append({
+            "bench": "fed", "name": f"fed_executor_temp_ratio_K{K}",
+            "us_per_call": round(ratio, 2),
+            "derived": f"full-vmap/chunked-{CHUNK} executor temp-buffer "
+                       f"ratio ({temps['full_vmap']:.0f} MB vs "
+                       f"{temps[f'chunked_{CHUNK}']:.0f} MB) — the "
+                       "O(P) -> O(chunk) live-memory envelope",
+        })
+
+
 def run(out_rows=None):
     rows = out_rows if out_rows is not None else []
     _quantizer_benches(rows)
     _matmul_benches(rows)
     _codec_benches(rows)
     _plane_benches(rows)
+    _fed_executor_benches(rows)
     with open("BENCH_kernels.json", "w") as f:
         json.dump(rows, f, indent=1)
     return rows

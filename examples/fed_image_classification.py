@@ -1,8 +1,23 @@
 """Federated image classification with LeNet+GroupNorm (the paper's CIFAR
-setup, synthetic matched-dim data): FP32 vs UQ vs UQ+ with byte accounting
-and a Dir(0.3) non-iid split.
+setup, synthetic matched-dim data) on the composable round engine
+(``repro.core.engine``): FP32 vs UQ vs UQ+ vs server-momentum aggregators,
+with exact byte accounting and a Dir(0.3) non-iid split.
 
-    PYTHONPATH=src python examples/fed_image_classification.py [--rounds N]
+Each method is one ``FedConfig``; the engine knobs map to the paper's
+ablations —
+
+* ``comm_mode``:   'rand' (UQ, unbiased Q_rand) | 'det' (biased Table-2
+                   ablation) | 'none' (FP32 FedAvg baseline)
+* ``server_opt``:  the UQ+ ServerOptimize tail (Eqs. 4-5)
+* ``aggregator``:  'fedavgm' / 'fedadam' — stateful server optimizers whose
+                   momentum threads through ``ServerState`` across rounds
+* ``down_fmt/up_fmt``: per-direction wire formats (e.g. E4M3 down,
+                   E5M2 up — the hybrid-format recipe)
+* ``chunk``:       swap the full-cohort vmap for the O(chunk)-memory
+                   chunked executor (cohorts in the thousands on one host)
+
+    PYTHONPATH=src python examples/fed_image_classification.py \
+        [--rounds N] [--clients K] [--chunk C]
 """
 import argparse
 
@@ -10,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core.fedavg import FedConfig
+from repro.core.engine import FedConfig
 from repro.core.fedsim import FedSim
 from repro.core.qat import DISABLED, QATConfig
 from repro.core.server_opt import ServerOptConfig
@@ -23,6 +38,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="client-executor chunk size (None = full vmap); "
+                         "peak memory is O(chunk) instead of O(cohort)")
     args = ap.parse_args()
 
     x, y = synthetic_images(0, 6000, n_classes=10, noise=0.45)
@@ -39,14 +57,18 @@ def main():
     qat_masks = (weight_decay_mask(params), clip_value_mask(params))
 
     base = dict(n_clients=args.clients, participation=0.25, local_steps=15,
-                batch_size=32)
+                batch_size=32, chunk=args.chunk)
     methods = {
-        "fp32": FedConfig(comm_mode="none", qat=DISABLED, **base),
-        "uq":   FedConfig(comm_mode="rand", qat=QATConfig(), **base),
-        "uq+":  FedConfig(comm_mode="rand", qat=QATConfig(),
-                          server_opt=ServerOptConfig(enabled=True, gd_steps=5,
-                                                     lr=0.1, n_grid=20),
-                          **base),
+        "fp32":  FedConfig(comm_mode="none", qat=DISABLED, **base),
+        "uq":    FedConfig(comm_mode="rand", qat=QATConfig(), **base),
+        "uq+":   FedConfig(comm_mode="rand", qat=QATConfig(),
+                           server_opt=ServerOptConfig(enabled=True, gd_steps=5,
+                                                      lr=0.1, n_grid=20),
+                           **base),
+        # stateful server optimizer: FedAvgM momentum threads across rounds
+        "uq+m":  FedConfig(comm_mode="rand", qat=QATConfig(),
+                           aggregator="fedavgm", server_lr=1.0,
+                           server_momentum=0.9, **base),
     }
     for name, cfg in methods.items():
         sim = FedSim(params, loss, apply, optim.sgd(0.05, weight_decay=1e-3,

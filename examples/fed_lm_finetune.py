@@ -3,9 +3,13 @@ backbone (reduced tinyllama) — K clients with disjoint Markov token
 streams, FP8 QAT local training + UQ communication.
 
 This bridges the paper's vision-scale experiments to the LM architectures
-this framework targets: the same FedAvg-UQ core drives a transformer.
+this framework targets: the same FedAvg-UQ core drives a transformer. The
+server tail is a ``core.engine`` Aggregator — ``--server-opt fedavgm`` or
+``fedadam`` threads server momentum across rounds, the same objects
+``FedSim`` and the production ``launch.steps.make_comm_round`` use.
 
     PYTHONPATH=src python examples/fed_lm_finetune.py [--rounds N]
+        [--server-opt {mean,fedavgm,fedadam}]
 """
 import argparse
 
@@ -15,9 +19,8 @@ import numpy as np
 
 from repro import configs, optim
 from repro.core import metrics
-from repro.core.fedavg import FedConfig, make_local_update
+from repro.core.engine import FedConfig, make_aggregator, make_local_update
 from repro.core.qat import DISABLED, QATConfig, comm_quantize
-from repro.core.server_opt import weighted_mean
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models.registry import get_model
 
@@ -30,6 +33,11 @@ def main():
     ap.add_argument("--local-steps", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--no-qat", action="store_true")
+    ap.add_argument("--server-opt", default="mean",
+                    choices=["mean", "fedavgm", "fedadam"])
+    ap.add_argument("--server-lr", type=float, default=None,
+                    help="server step size; default = the aggregator's own "
+                         "default (FedAvgM 1.0, FedAdam 0.1)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get("tinyllama_1_1b"))
@@ -53,12 +61,17 @@ def main():
     key = jax.random.PRNGKey(1)
     total_bytes = 0
 
+    # the server tail: same Aggregator objects the engine/simulator use;
+    # stateful ones carry momentum in agg_state between rounds
+    aggregator = make_aggregator(args.server_opt, lr=args.server_lr)
+    agg_state = aggregator.init(params)
+
     def client_batches(stream, n):
         w = stream[: n * 4 * (args.seq + 1)].reshape(n, 4, args.seq + 1)
         return jnp.asarray(w[..., :-1]), jnp.asarray(w[..., 1:])
 
     for r in range(args.rounds):
-        key, k_sel, k_up, k_down, k_loc = jax.random.split(key, 5)
+        key, k_sel, k_up, k_down, k_loc, k_srv = jax.random.split(key, 6)
         active = np.asarray(
             jax.random.permutation(k_sel, args.clients)[: args.active]
         )
@@ -75,7 +88,9 @@ def main():
                                       fed.fmt, fed.comm_mode))
             losses.append(float(l_c))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *msgs)
-        params = weighted_mean(stacked, jnp.ones((len(active),)))
+        params, agg_state = aggregator(
+            params, stacked, jnp.ones((len(active),)), k_srv, agg_state
+        )
         total_bytes += 2 * len(active) * per_model
         print(f"round {r+1}: mean local loss {np.mean(losses):.4f}  "
               f"cum MB {total_bytes/1e6:.1f}")

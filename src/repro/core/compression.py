@@ -70,6 +70,47 @@ def quantized_allreduce_mean(
     return jax.tree.map(lambda x: jax.lax.pmean(x, axis_names), q)
 
 
+def fp8_wire_allgather(
+    params: PyTree,
+    key: Array,
+    axis_names: tuple[str, ...],
+    fmt: FP8Format = E4M3,
+    mode: str = "rand",
+) -> PyTree:
+    """All-gather every silo's model as STACKED client trees ``(P, ...)``.
+
+    The collective moves the same single uint8 payload as
+    :func:`fp8_wire_allreduce_mean` (one fused encode, one u8 all-gather,
+    clip values pmax-synced so all silos share a grid), but instead of
+    folding the mean in-place it returns what a federated *Aggregator*
+    (``core.engine``) consumes: the stacked per-silo trees. This is how
+    ``launch.steps.make_comm_round`` runs stateful server optimizers
+    (FedAvgM/FedAdam) at the round boundary — aggregate however you like,
+    the wire stays 1 byte/param. Non-quantized leaves (<2% of bytes)
+    ride f32 through their own all-gather.
+    """
+    from . import wire
+
+    if mode == "none":
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_names), params
+        )
+    synced = sync_alphas(params, axis_names)
+    spec = wire.make_wire_spec(synced)
+    if not spec.q_slots:
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_names), synced
+        )
+    payload = wire.encode(synced, spec, key, fmt=fmt, mode=mode)
+    codes_g = jax.lax.all_gather(payload["codes"], axis_names)   # (P, total)
+    other_g = tuple(
+        jax.lax.all_gather(o, axis_names) for o in payload["other"]
+    )
+    return jax.vmap(
+        lambda c, o: wire.decode({"codes": c, "other": o}, spec, fmt=fmt)
+    )(codes_g, other_g)
+
+
 def fp8_wire_allreduce_mean(
     params: PyTree,
     key: Array,

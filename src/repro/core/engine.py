@@ -1,0 +1,637 @@
+"""Composable federated round engine — Algorithm 1 as four pluggable stages.
+
+``fedavg.make_round`` used to hardwire one round shape: uniform sampling,
+full-cohort vmap, the same E4M3 wire on both links, and a stateless
+weighted-mean tail. This module decomposes the round into stages that can
+be swapped independently:
+
+* **ClientSampler** — who participates this round. ``UniformSampler``
+  (uniform without replacement — the paper's setting), ``WeightedSampler``
+  (nk-proportional without replacement via Gumbel top-k), and
+  ``FixedCohortSampler`` (deterministic cohort, e.g. cross-silo).
+* **Link** — what crosses the wire, per direction. ``WireLink`` rides the
+  flat-buffer codec (``core.wire``) and takes an independent
+  ``(fmt, mode)`` pair for downlink and uplink — e.g. E4M3 down / E5M2 up,
+  the hybrid recipe of Micikevicius et al. (*FP8 Formats for Deep
+  Learning*) — with ``mode`` in ``rand`` (unbiased), ``det`` (biased
+  ablation) or ``none`` (FP32 passthrough). Byte accounting is
+  per-direction: each leg is charged at its real payload size.
+* **ClientExecutor** — how the cohort's local updates run. ``VmapExecutor``
+  is the original full-cohort vmap; ``ChunkedExecutor(chunk)`` scans over
+  chunks-of-vmap so peak live memory (per-client optimizer state,
+  activations, scan residuals) is O(chunk) instead of O(P) — this is what
+  lets cohort sizes reach the thousands on fixed memory. The two are
+  bit-identical under the same key: every client sees the same
+  ``(params, data, key)`` triple either way.
+* **Aggregator** — the server tail, now allowed to carry *state* across
+  rounds. ``MeanAggregator`` (weighted mean), ``ServerOptAggregator``
+  (UQ+ ``server_optimize``), and the stateful ``FedAvgM`` / ``FedAdam``
+  (Reddi et al., *Adaptive Federated Optimization*) whose momentum /
+  second-moment state threads through ``ServerState``.
+
+The round signature is ``(server_state, data, labels, nk, key) ->
+(server_state, metrics)`` where ``ServerState = (params, opt)``. The
+simulator (``core.fedsim``) threads the state; ``fedavg.make_round``
+remains as a thin back-compat shim for stateless configurations; the
+production collective boundary (``launch.steps.make_comm_round``) applies
+the same Aggregator objects after its mesh all-gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import wire
+from .fp8 import E4M3, E5M2, FP8Format
+from .qat import QATConfig
+from .server_opt import ServerOptConfig, server_optimize, weighted_mean
+from ..optim.base import Optimizer, apply_updates
+
+Array = jax.Array
+PyTree = Any
+LossFn = Callable[..., Array]  # (params, x, y, qat_cfg, key) -> scalar
+
+
+class ServerState(NamedTuple):
+    """What the server carries between rounds: the model + aggregator state.
+
+    ``opt`` is ``()`` for stateless aggregators, so the state is exactly
+    the params pytree plus nothing — checkpoints of stateless runs stay
+    as small as before.
+    """
+
+    params: PyTree
+    opt: PyTree
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """One federated experiment. The original fields keep their exact
+    defaults (and semantics) so every pre-engine config reproduces
+    bit-for-bit; the engine knobs below default to the legacy round shape.
+    """
+
+    n_clients: int = 100          # K
+    participation: float = 0.1    # C
+    local_steps: int = 50         # U (local gradient updates per round)
+    batch_size: int = 50          # B
+    comm_mode: str = "rand"       # 'rand' (UQ) | 'det' (biased ablation) | 'none' (FP32)
+    qat: QATConfig = QATConfig()
+    server_opt: ServerOptConfig = ServerOptConfig(enabled=False)
+    fmt: FP8Format = E4M3
+
+    # --- engine knobs (defaults == legacy behavior) ----------------------
+    sampler: str = "uniform"      # 'uniform' | 'weighted' | 'fixed'
+    chunk: int | None = None      # executor chunk size; None = full vmap
+    down_fmt: FP8Format | None = None   # None -> fmt
+    up_fmt: FP8Format | None = None     # None -> fmt
+    down_mode: str | None = None        # None -> comm_mode
+    up_mode: str | None = None          # None -> comm_mode
+    aggregator: str = "auto"      # 'auto'|'mean'|'server_opt'|'fedavgm'|'fedadam'
+    # stateful-aggregator hyperparameters; None = that aggregator's own
+    # class default (FedAvgM lr 1.0 / beta 0.9; FedAdam lr 0.1, beta2
+    # 0.99, tau 1e-3) — so config and CLI paths agree on the defaults
+    server_lr: float | None = None
+    server_momentum: float | None = None  # FedAvgM beta / FedAdam beta1
+    server_beta2: float | None = None     # FedAdam second-moment decay
+    server_eps: float | None = None       # FedAdam tau
+
+    @property
+    def clients_per_round(self) -> int:
+        return max(1, int(round(self.n_clients * self.participation)))
+
+    # resolved per-direction link settings
+    @property
+    def resolved_down(self) -> tuple[FP8Format, str]:
+        return (self.down_fmt or self.fmt, self.down_mode or self.comm_mode)
+
+    @property
+    def resolved_up(self) -> tuple[FP8Format, str]:
+        return (self.up_fmt or self.fmt, self.up_mode or self.comm_mode)
+
+    @property
+    def resolved_aggregator(self) -> str:
+        if self.aggregator != "auto":
+            return self.aggregator
+        if self.server_opt.enabled and self.comm_mode != "none":
+            return "server_opt"
+        return "mean"
+
+
+# ---------------------------------------------------------------------------
+# Local update (Algorithm 1's LocalUpdate) — unchanged math, lives here so
+# the engine has no import cycle with the fedavg shim.
+# ---------------------------------------------------------------------------
+
+
+def make_local_update(
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    cfg: FedConfig,
+):
+    """Build ``LocalUpdate(w_t, Q_det; alpha_t, beta_t, D_k)``.
+
+    Returned fn signature: ``(params0, data, labels, key) -> (params_U, mean_loss)``
+    where ``params0`` is the (dequantized) downlink model — the hard master
+    reset is implicit in starting from it. Optimizer state is re-initialized
+    every round, as is standard for FedAvg local solvers.
+    """
+
+    def local_update(params0: PyTree, data: Array, labels: Array, key: Array):
+        opt_state = optimizer.init(params0)
+        n = data.shape[0]
+
+        def step(carry, k):
+            params, opt_state, i = carry
+            k_batch, k_q = jax.random.split(k)
+            idx = jax.random.randint(k_batch, (cfg.batch_size,), 0, n)
+            xb, yb = data[idx], labels[idx]
+            loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, cfg.qat, k_q)
+            updates, opt_state = optimizer.update(grads, opt_state, params, i)
+            params = apply_updates(params, updates)
+            return (params, opt_state, i + 1), loss
+
+        keys = jax.random.split(key, cfg.local_steps)
+        (params, _, _), losses = jax.lax.scan(
+            step, (params0, opt_state, jnp.zeros((), jnp.int32)), keys
+        )
+        return params, jnp.mean(losses)
+
+    return local_update
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: ClientSampler — (nk, key) -> cohort indices (P,)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler:
+    """Uniform without replacement (the paper's P_t; stragglers simply fall
+    out of the cohort — FedAvg's native dropout tolerance)."""
+
+    n_clients: int
+    cohort: int
+
+    def __call__(self, nk: Array, key: Array) -> Array:
+        return jax.random.permutation(key, self.n_clients)[: self.cohort]
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedSampler:
+    """nk-proportional sampling without replacement via the Gumbel top-k
+    trick: argtop-k of ``log nk + Gumbel`` draws exactly a PPSWOR cohort —
+    clients holding more data participate more often, matching the
+    cross-device production setting where cohort selection is
+    traffic-weighted."""
+
+    n_clients: int
+    cohort: int
+
+    def __call__(self, nk: Array, key: Array) -> Array:
+        g = jax.random.gumbel(key, (self.n_clients,))
+        _, idx = jax.lax.top_k(jnp.log(jnp.maximum(nk, 1e-12)) + g, self.cohort)
+        return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedCohortSampler:
+    """A deterministic cohort every round (cross-silo: the same P silos
+    always participate). ``indices=None`` means clients ``0..P-1``."""
+
+    n_clients: int
+    cohort: int
+    indices: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        # the engine sizes key fan-out / executor / byte accounting from
+        # `cohort`; a shorter index list would crash the vmap downstream
+        if self.indices is not None and len(self.indices) < self.cohort:
+            raise ValueError(
+                f"FixedCohortSampler: {len(self.indices)} indices < "
+                f"cohort {self.cohort}"
+            )
+
+    def __call__(self, nk: Array, key: Array) -> Array:
+        if self.indices is not None:
+            return jnp.asarray(self.indices, jnp.int32)[: self.cohort]
+        return jnp.arange(self.cohort, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: Link — per-direction wire format
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLink:
+    """Both legs of the model exchange, each with its own (fmt, mode).
+
+    ``mode='rand'`` is the paper's unbiased quantizer, ``'det'`` the biased
+    Table-2 ablation, ``'none'`` FP32 passthrough. ``down``/``up`` emit the
+    tree a *receiver* of the real uint8 payload would observe
+    (encode -> decode through ``core.wire``); byte accounting
+    (:meth:`down_bytes` / :meth:`up_bytes`) reads each leg's actual payload
+    layout, so asymmetric links (e.g. FP32 down / FP8 up) charge each
+    direction at its real size.
+    """
+
+    down_fmt: FP8Format = E4M3
+    up_fmt: FP8Format = E4M3
+    down_mode: str = "rand"
+    up_mode: str = "rand"
+
+    def _on_wire(self, mode: str, spec: wire.WireSpec) -> bool:
+        return mode != "none" and bool(spec.q_slots)
+
+    def down(self, params: PyTree, spec: wire.WireSpec, key: Array) -> PyTree:
+        """Server -> cohort broadcast: ONE fused encode, one decode."""
+        if not self._on_wire(self.down_mode, spec):
+            return params
+        payload = wire.encode(params, spec, key,
+                              fmt=self.down_fmt, mode=self.down_mode)
+        return wire.decode(payload, spec, fmt=self.down_fmt)
+
+    def up(self, client_params: PyTree, spec: wire.WireSpec, key: Array,
+           cohort: int) -> PyTree:
+        """Cohort -> server: per-client independent payloads (vmapped)."""
+        if not self._on_wire(self.up_mode, spec):
+            return client_params
+        up_keys = jax.random.split(key, cohort)
+        payloads = jax.vmap(
+            lambda p, k: wire.encode(p, spec, k,
+                                     fmt=self.up_fmt, mode=self.up_mode)
+        )(client_params, up_keys)
+        return jax.vmap(
+            lambda pl: wire.decode(pl, spec, fmt=self.up_fmt)
+        )(payloads)
+
+    def _leg_bytes(self, mode: str, spec: wire.WireSpec) -> int:
+        if self._on_wire(mode, spec):
+            return wire.payload_nbytes(spec)
+        return 4 * (spec.total + spec.n_other_elems)
+
+    def down_bytes(self, spec: wire.WireSpec) -> int:
+        """Exact bytes of one downlink model copy (static, per receiver)."""
+        return self._leg_bytes(self.down_mode, spec)
+
+    def up_bytes(self, spec: wire.WireSpec) -> int:
+        """Exact bytes of one uplink model copy (static, per client)."""
+        return self._leg_bytes(self.up_mode, spec)
+
+
+def fp32_link() -> WireLink:
+    """FP32 passthrough on both legs (the FedAvg baseline)."""
+    return WireLink(down_mode="none", up_mode="none")
+
+
+def hybrid_link(mode: str = "rand") -> WireLink:
+    """The E4M3-down / E5M2-up hybrid (NeMo's ``fp8_hybrid`` recipe shape:
+    wider dynamic range on the gradient-like leg)."""
+    return WireLink(down_fmt=E4M3, up_fmt=E5M2,
+                    down_mode=mode, up_mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: ClientExecutor — run LocalUpdate over the cohort
+# ---------------------------------------------------------------------------
+
+
+class VmapExecutor:
+    """Full-cohort vmap (the original path): every client trains
+    simultaneously, replicating per-client optimizer state and activations
+    P times. Fastest when the cohort fits in memory."""
+
+    def __call__(self, local_update, down: PyTree, data: Array,
+                 labels: Array, keys: Array):
+        return jax.vmap(local_update, in_axes=(None, 0, 0, 0))(
+            down, data, labels, keys
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedExecutor:
+    """scan-over-chunks-of-vmap: peak live memory is O(chunk), not O(P).
+
+    The cohort is split into ``ceil(P / chunk)`` chunks; a ``lax.scan``
+    trains one chunk at a time, so per-client optimizer state, activations
+    and local-step scan residuals exist for only ``chunk`` clients at once.
+    The stacked result is bit-identical to :class:`VmapExecutor` under the
+    same key: chunking changes the *schedule*, never a client's
+    ``(params, data, key)`` inputs, and clients never mix. A ragged tail is
+    padded by wrapping the first cohort rows; padded outputs are sliced off.
+    """
+
+    chunk: int
+
+    def __call__(self, local_update, down: PyTree, data: Array,
+                 labels: Array, keys: Array):
+        P = data.shape[0]
+        C = min(self.chunk, P)
+        if C <= 0:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
+        n_chunks = -(-P // C)
+        pad = n_chunks * C - P
+
+        def chunked(x):
+            if pad:
+                x = jnp.concatenate([x, x[:pad]], axis=0)
+            return x.reshape((n_chunks, C) + x.shape[1:])
+
+        def body(_, args):
+            d, l, k = args
+            out = jax.vmap(local_update, in_axes=(None, 0, 0, 0))(
+                down, d, l, k
+            )
+            return None, out
+
+        _, (stacked, losses) = jax.lax.scan(
+            body, None, (chunked(data), chunked(labels), chunked(keys))
+        )
+        unstack = lambda x: x.reshape((n_chunks * C,) + x.shape[2:])[:P]
+        return jax.tree.map(unstack, stacked), unstack(losses)
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: Aggregator — the server tail, optionally stateful
+# ---------------------------------------------------------------------------
+#
+# Protocol: ``init(params) -> opt_state`` and
+# ``__call__(server_params, stacked_msgs, nk, key, opt_state)
+#   -> (new_params, new_opt_state)``.
+# Stateless aggregators use ``()`` so ServerState stays minimal.
+
+
+@dataclasses.dataclass(frozen=True)
+class MeanAggregator:
+    """Plain federated average with weights n_k / m_t (Algorithm 1's tail)."""
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def __call__(self, server_params, stacked_msgs, nk, key, opt_state):
+        return weighted_mean(stacked_msgs, nk), ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptAggregator:
+    """UQ+ ``server_optimize`` (paper Eqs. 4-5): minimize the quantized-domain
+    MSE to the client models by alternating STE-SGD on w and per-tensor grid
+    search on alpha. Stateless — the alternation restarts each round."""
+
+    cfg: ServerOptConfig
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def __call__(self, server_params, stacked_msgs, nk, key, opt_state):
+        return server_optimize(stacked_msgs, nk, key, self.cfg), ()
+
+
+def _pseudo_gradient(server_params, stacked_msgs, nk):
+    """FedOpt's Delta_t: server minus the weighted client average — the
+    direction a *server optimizer* descends (Reddi et al.)."""
+    avg = weighted_mean(stacked_msgs, nk)
+    return jax.tree.map(lambda s, a: s.astype(jnp.float32) - a.astype(jnp.float32),
+                        server_params, avg)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgM:
+    """Server momentum (FedAvgM): ``v <- beta v + Delta; w <- w - lr v``.
+
+    ``lr=1, beta=0`` reduces exactly to the weighted mean. The momentum
+    buffer is ServerState.opt and threads through rounds — the first
+    aggregator here that is genuinely stateful.
+    """
+
+    lr: float = 1.0
+    momentum: float = 0.9
+
+    def init(self, params: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    def __call__(self, server_params, stacked_msgs, nk, key, opt_state):
+        delta = _pseudo_gradient(server_params, stacked_msgs, nk)
+        v = jax.tree.map(
+            lambda m, d: self.momentum * m + d, opt_state, delta
+        )
+        new = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - self.lr * m).astype(p.dtype),
+            server_params, v,
+        )
+        return new, v
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAdam:
+    """FedAdam (Reddi et al., *Adaptive Federated Optimization*): Adam on the
+    pseudo-gradient, with ``tau`` (``eps``) at the paper-recommended 1e-3
+    scale. Both moment buffers live in ServerState.opt."""
+
+    lr: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-3
+
+    def init(self, params: PyTree) -> PyTree:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return {"m": zeros(), "v": zeros()}
+
+    def __call__(self, server_params, stacked_msgs, nk, key, opt_state):
+        delta = _pseudo_gradient(server_params, stacked_msgs, nk)
+        m = jax.tree.map(
+            lambda mi, d: self.beta1 * mi + (1 - self.beta1) * d,
+            opt_state["m"], delta,
+        )
+        v = jax.tree.map(
+            lambda vi, d: self.beta2 * vi + (1 - self.beta2) * d * d,
+            opt_state["v"], delta,
+        )
+        new = jax.tree.map(
+            lambda p, mi, vi: (
+                p.astype(jnp.float32) - self.lr * mi / (jnp.sqrt(vi) + self.eps)
+            ).astype(p.dtype),
+            server_params, m, v,
+        )
+        return new, {"m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+_SAMPLERS = {
+    "uniform": UniformSampler,
+    "weighted": WeightedSampler,
+    "fixed": FixedCohortSampler,
+}
+
+
+def make_aggregator(kind: str, *, lr: float | None = None,
+                    momentum: float | None = None,
+                    beta2: float | None = None, eps: float | None = None,
+                    server_opt_cfg: ServerOptConfig | None = None):
+    """Name -> Aggregator — the ONE factory every entry point (FedConfig,
+    ``launch/train.py --server-opt``, examples) maps CLI/config names
+    through. ``None`` keyword = that aggregator's own class default
+    (FedAvgM lr 1.0, FedAdam lr 0.1)."""
+    if kind == "mean":
+        return MeanAggregator()
+    if kind == "server_opt":
+        return ServerOptAggregator(
+            server_opt_cfg if server_opt_cfg is not None else ServerOptConfig()
+        )
+    kw = {}
+    if lr is not None:
+        kw["lr"] = lr
+    if kind == "fedavgm":
+        if momentum is not None:
+            kw["momentum"] = momentum
+        return FedAvgM(**kw)
+    if kind == "fedadam":
+        if momentum is not None:
+            kw["beta1"] = momentum
+        if beta2 is not None:
+            kw["beta2"] = beta2
+        if eps is not None:
+            kw["eps"] = eps
+        return FedAdam(**kw)
+    raise ValueError(f"unknown aggregator {kind!r}")
+
+
+def _stages_from_config(cfg: FedConfig):
+    """Map FedConfig knobs to default stage objects."""
+    P = cfg.clients_per_round
+    sampler = _SAMPLERS[cfg.sampler](cfg.n_clients, P)
+    d_fmt, d_mode = cfg.resolved_down
+    u_fmt, u_mode = cfg.resolved_up
+    link = WireLink(down_fmt=d_fmt, up_fmt=u_fmt,
+                    down_mode=d_mode, up_mode=u_mode)
+    executor = ChunkedExecutor(cfg.chunk) if cfg.chunk else VmapExecutor()
+    aggregator = make_aggregator(
+        cfg.resolved_aggregator, lr=cfg.server_lr,
+        momentum=cfg.server_momentum, beta2=cfg.server_beta2,
+        eps=cfg.server_eps, server_opt_cfg=cfg.server_opt,
+    )
+    return sampler, link, executor, aggregator
+
+
+class RoundEngine:
+    """One communication round, composed from the four stages.
+
+    Stages default from ``cfg`` (matching the legacy round bit-for-bit on
+    legacy configs) and can each be overridden with an explicit object.
+    ``round_fn`` is jit-compatible with the signature
+    ``(server_state, data, labels, nk, key) -> (server_state, metrics)``.
+    """
+
+    def __init__(
+        self,
+        loss_fn: LossFn,
+        optimizer: Optimizer,
+        cfg: FedConfig,
+        *,
+        sampler=None,
+        link=None,
+        executor=None,
+        aggregator=None,
+    ):
+        self.cfg = cfg
+        d_sampler, d_link, d_executor, d_aggregator = _stages_from_config(cfg)
+        self.sampler = sampler if sampler is not None else d_sampler
+        self.link = link if link is not None else d_link
+        self.executor = executor if executor is not None else d_executor
+        self.aggregator = aggregator if aggregator is not None else d_aggregator
+        # the cohort size follows the SAMPLER (an override may select a
+        # different cohort than cfg.participation implies); key fan-out,
+        # the executor, and byte accounting must all agree with it
+        self.cohort = getattr(self.sampler, "cohort", cfg.clients_per_round)
+        self._local_update = make_local_update(loss_fn, optimizer, cfg)
+        self.round_fn = self._build_round()
+
+    def init(self, params: PyTree) -> ServerState:
+        return ServerState(params=params, opt=self.aggregator.init(params))
+
+    def stateless(self) -> bool:
+        """True when the aggregator threads no state (opt is empty)."""
+        return not jax.tree_util.tree_leaves(
+            self.aggregator.init(jnp.zeros(()))
+        )
+
+    def round_bytes(self, params: PyTree) -> int:
+        """Static per-round wire bytes: P x (down leg + up leg), each leg at
+        its real payload size."""
+        spec = wire.make_wire_spec(params)
+        P = self.cohort
+        return P * (self.link.down_bytes(spec) + self.link.up_bytes(spec))
+
+    def _build_round(self):
+        cfg = self.cfg
+        P = self.cohort
+        sampler, link, executor, aggregator = (
+            self.sampler, self.link, self.executor, self.aggregator
+        )
+        local_update = self._local_update
+
+        def round_fn(state: ServerState, data: Array, labels: Array,
+                     nk: Array, key: Array):
+            server_params = state.params
+            # key-splitting order matches the legacy round exactly, so the
+            # fedavg shim (and any same-key replay) is bit-identical
+            k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
+
+            spec = wire.make_wire_spec(server_params)
+
+            # --- stage 1: cohort selection -------------------------------
+            idx = sampler(nk, k_sel)
+            nk_sel = nk[idx]
+
+            # --- stage 2a: downlink --------------------------------------
+            down = link.down(server_params, spec, k_down)
+
+            # --- stage 3: local QAT training over the cohort -------------
+            loc_keys = jax.random.split(k_loc, P)
+            client_params, losses = executor(
+                local_update, down, data[idx], labels[idx], loc_keys
+            )
+
+            # --- stage 2b: uplink ----------------------------------------
+            msgs = link.up(client_params, spec, k_up, P)
+
+            # --- stage 4: server aggregation -----------------------------
+            new_params, new_opt = aggregator(
+                server_params, msgs, nk_sel, k_srv, state.opt
+            )
+
+            # --- exact byte accounting (static at trace time) ------------
+            round_total = P * (link.down_bytes(spec) + link.up_bytes(spec))
+            # int32 keeps the count EXACT (f32 rounds integers above
+            # 2^24 ~ 16.7 MB, well inside the simulator's round sizes)
+            if round_total >= 2 ** 31:
+                raise ValueError(
+                    f"round moves {round_total} bytes — exceeds the int32 "
+                    "wire_bytes metric; this simulator targets sub-GiB rounds"
+                )
+            return ServerState(new_params, new_opt), {
+                "local_loss": jnp.mean(losses),
+                # exact bytes moved this round: P uplink payloads + P
+                # downlink copies of the broadcast (Figure 1 accounting),
+                # each leg charged at its own payload size
+                "wire_bytes": jnp.asarray(round_total, jnp.int32),
+            }
+
+        return round_fn

@@ -1,89 +1,37 @@
-"""FP8FedAvg-UQ — Algorithm 1 of the paper, as composable pure functions.
+"""FP8FedAvg-UQ — Algorithm 1 of the paper (back-compat surface).
 
-The pieces:
+The round itself now lives in :mod:`repro.core.engine` as a composable
+``RoundEngine`` built from four pluggable stages (ClientSampler, Link,
+ClientExecutor, Aggregator). This module keeps the original API:
 
-* :func:`make_local_update` — ``LocalUpdate`` in Algorithm 1: hard-reset the
-  FP32 master weights to the dequantized downlink model, run ``U`` local
-  QAT-SGD steps (deterministic quantizer ``Q_det`` in the forward pass; the
-  clipping values alpha/beta are learnable leaves of the param tree and are
-  updated by the same optimizer).
-* :func:`make_round` — one full communication round: client sampling,
-  downlink ``Q_rand``, vmapped local updates, uplink ``Q_rand``, and the
-  server aggregation (plain federated average for UQ, ServerOptimize for
-  UQ+).
+* :class:`FedConfig` / :func:`make_local_update` — re-exported from the
+  engine unchanged.
+* :func:`make_round` — a thin shim over the engine with the legacy
+  signature ``(server_params, data, labels, nk, key) ->
+  (new_server_params, metrics)``. On legacy configurations (uniform
+  sampling, full-cohort vmap, symmetric link, stateless tail) it is
+  bit-identical to the pre-engine round: the engine splits the round key
+  in the same order and runs the same ops.
 
-All functions are jit-compatible; the simulator in ``fedsim.py`` and the
-production launcher in ``launch/train.py`` both build on them.
+Stateful server optimizers (FedAvgM/FedAdam) need their momentum threaded
+across rounds, which the params-in/params-out legacy signature cannot
+express — use the engine (or ``FedSim``, which threads ``ServerState``)
+for those.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from . import wire
-from .fp8 import E4M3, FP8Format
-from .qat import QATConfig
-from .server_opt import ServerOptConfig, server_optimize, weighted_mean
-from ..optim.base import Optimizer, apply_updates
+# Back-compat re-exports: `from repro.core.fedavg import FedConfig` (and
+# make_local_update) keep working for every pre-engine caller.
+from .engine import FedConfig, RoundEngine, make_local_update  # noqa: F401
+from ..optim.base import Optimizer
 
 Array = jax.Array
 PyTree = Any
 LossFn = Callable[..., Array]  # (params, x, y, qat_cfg, key) -> scalar
-
-
-@dataclasses.dataclass(frozen=True)
-class FedConfig:
-    n_clients: int = 100          # K
-    participation: float = 0.1    # C
-    local_steps: int = 50         # U (local gradient updates per round)
-    batch_size: int = 50          # B
-    comm_mode: str = "rand"       # 'rand' (UQ) | 'det' (biased ablation) | 'none' (FP32)
-    qat: QATConfig = QATConfig()
-    server_opt: ServerOptConfig = ServerOptConfig(enabled=False)
-    fmt: FP8Format = E4M3
-
-    @property
-    def clients_per_round(self) -> int:
-        return max(1, int(round(self.n_clients * self.participation)))
-
-
-def make_local_update(
-    loss_fn: LossFn,
-    optimizer: Optimizer,
-    cfg: FedConfig,
-):
-    """Build ``LocalUpdate(w_t, Q_det; alpha_t, beta_t, D_k)``.
-
-    Returned fn signature: ``(params0, data, labels, key) -> (params_U, mean_loss)``
-    where ``params0`` is the (dequantized) downlink model — the hard master
-    reset is implicit in starting from it. Optimizer state is re-initialized
-    every round, as is standard for FedAvg local solvers.
-    """
-
-    def local_update(params0: PyTree, data: Array, labels: Array, key: Array):
-        opt_state = optimizer.init(params0)
-        n = data.shape[0]
-
-        def step(carry, k):
-            params, opt_state, i = carry
-            k_batch, k_q = jax.random.split(k)
-            idx = jax.random.randint(k_batch, (cfg.batch_size,), 0, n)
-            xb, yb = data[idx], labels[idx]
-            loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, cfg.qat, k_q)
-            updates, opt_state = optimizer.update(grads, opt_state, params, i)
-            params = apply_updates(params, updates)
-            return (params, opt_state, i + 1), loss
-
-        keys = jax.random.split(key, cfg.local_steps)
-        (params, _, _), losses = jax.lax.scan(
-            step, (params0, opt_state, jnp.zeros((), jnp.int32)), keys
-        )
-        return params, jnp.mean(losses)
-
-    return local_update
 
 
 def make_round(
@@ -96,77 +44,25 @@ def make_round(
     ``data``/``labels`` carry a leading client axis ``(K, n_per, ...)``;
     ``nk`` is the per-client example count (aggregation weights).
     Returns ``(new_server_params, metrics_dict)``.
+
+    This is the legacy stateless entry point: it wraps a
+    :class:`repro.core.engine.RoundEngine` and drops the (empty) server
+    state. Configurations resolving to a stateful aggregator are rejected —
+    their state would silently reset every round.
     """
-    local_update = make_local_update(loss_fn, optimizer, cfg)
-    P = cfg.clients_per_round
+    engine = RoundEngine(loss_fn, optimizer, cfg)
+    if not engine.stateless():
+        raise ValueError(
+            f"aggregator {cfg.resolved_aggregator!r} carries server state; "
+            "the legacy make_round signature cannot thread it across "
+            "rounds — drive RoundEngine (or FedSim) directly instead"
+        )
 
     def round_fn(server_params: PyTree, data: Array, labels: Array,
                  nk: Array, key: Array):
-        k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
-
-        # Static wire layout for this model (trace-time): the SAME uint8
-        # payload format is used for both directions, so byte accounting
-        # below reads off the actual transmitted buffer.
-        spec = wire.make_wire_spec(server_params)
-        on_wire = cfg.comm_mode != "none" and bool(spec.q_slots)
-
-        # --- sample P_t (uniform, without replacement; stragglers simply
-        # fall out of P_t — FedAvg's native dropout tolerance) ------------
-        idx = jax.random.permutation(k_sel, cfg.n_clients)[:P]
-        nk_sel = nk[idx]
-
-        # --- downlink: one broadcast payload (single fused encode), one
-        # dequantize-unpack on receipt --------------------------------------
-        if on_wire:
-            payload = wire.encode(server_params, spec, k_down,
-                                  fmt=cfg.fmt, mode=cfg.comm_mode)
-            down = wire.decode(payload, spec, fmt=cfg.fmt)
-        else:
-            down = server_params
-
-        # --- vmapped local QAT training ------------------------------------
-        loc_keys = jax.random.split(k_loc, P)
-        client_params, losses = jax.vmap(
-            local_update, in_axes=(None, 0, 0, 0)
-        )(down, data[idx], labels[idx], loc_keys)
-
-        # --- uplink: per-client independent payloads ------------------------
-        if on_wire:
-            up_keys = jax.random.split(k_up, P)
-            payloads = jax.vmap(
-                lambda p, k: wire.encode(p, spec, k,
-                                         fmt=cfg.fmt, mode=cfg.comm_mode)
-            )(client_params, up_keys)
-            msgs = jax.vmap(lambda pl: wire.decode(pl, spec, fmt=cfg.fmt))(
-                payloads
-            )
-        else:
-            msgs = client_params
-
-        # --- server aggregation (Algorithm 1 tail) ---------------------------
-        if cfg.server_opt.enabled and cfg.comm_mode != "none":
-            new_params = server_optimize(msgs, nk_sel, k_srv, cfg.server_opt)
-        else:
-            new_params = weighted_mean(msgs, nk_sel)
-
-        per_model = (
-            wire.payload_nbytes(spec) if on_wire
-            else 4 * (spec.total + spec.n_other_elems)
+        state, m = engine.round_fn(
+            engine.init(server_params), data, labels, nk, key
         )
-        round_total = 2 * P * per_model
-        # static python int at trace time; int32 keeps the count EXACT
-        # (f32 rounds integers above 2^24 ~ 16.7 MB, well inside the
-        # simulator's round sizes)
-        if round_total >= 2 ** 31:
-            raise ValueError(
-                f"round moves {round_total} bytes — exceeds the int32 "
-                "wire_bytes metric; this simulator targets sub-GiB rounds"
-            )
-        return new_params, {
-            "local_loss": jnp.mean(losses),
-            # exact bytes moved this round: P uplink payloads + P downlink
-            # copies of the broadcast payload (Figure 1 accounting)
-            "wire_bytes": jnp.asarray(round_total, jnp.int32),
-        }
+        return state.params, m
 
     return round_fn

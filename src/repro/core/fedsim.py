@@ -1,13 +1,16 @@
 """Paper-faithful federated simulator (K clients on one host).
 
-Drives :func:`repro.core.fedavg.make_round` for ``R`` rounds, tracking the
-exact uplink+downlink wire bytes (``repro.core.metrics``) and the
-centralized test accuracy of the *quantized* server model — the quantities
-in the paper's Table 1 / Figure 2.
+Drives a :class:`repro.core.engine.RoundEngine` for ``R`` rounds, threading
+the full server state (model + any stateful-aggregator momentum) and
+tracking the exact uplink+downlink wire bytes (``repro.core.metrics``) and
+the centralized test accuracy of the *quantized* server model — the
+quantities in the paper's Table 1 / Figure 2.
 
 Scale target: LeNet/MLP/MatchboxNet/KWT-class models with K in the
-hundreds on CPU. Pod-scale federated training of the assigned LM
-architectures lives in ``repro.launch.train`` instead.
+hundreds on CPU — or thousands with ``FedConfig.chunk`` set, which swaps
+the full-cohort vmap for the O(chunk)-memory chunked executor. Pod-scale
+federated training of the assigned LM architectures lives in
+``repro.launch.train`` instead.
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import metrics
-from .fedavg import FedConfig, make_round
+from .engine import FedConfig, RoundEngine, ServerState
 from ..optim.base import Optimizer
 
 Array = jax.Array
@@ -43,7 +46,12 @@ class FedHistory:
 
 
 class FedSim:
-    """Federated training loop with exact byte accounting."""
+    """Federated training loop with exact byte accounting.
+
+    Engine stages (sampler / link / executor / aggregator) default from
+    ``cfg`` and can be overridden individually via the keyword arguments,
+    e.g. ``FedSim(..., executor=ChunkedExecutor(64))``.
+    """
 
     def __init__(
         self,
@@ -55,9 +63,13 @@ class FedSim:
         client_data: Array,          # (K, n_per, ...)
         client_labels: Array,        # (K, n_per)
         nk: Array | None = None,
+        *,
+        sampler=None,
+        link=None,
+        executor=None,
+        aggregator=None,
     ):
         self.cfg = cfg
-        self.params = params
         self.predict_fn = predict_fn
         self.client_data = client_data
         self.client_labels = client_labels
@@ -66,34 +78,60 @@ class FedSim:
             if nk is not None
             else jnp.full((cfg.n_clients,), client_data.shape[1], jnp.float32)
         )
-        self._round = jax.jit(make_round(loss_fn, optimizer, cfg))
-        quantized = cfg.comm_mode != "none"
-        self.bytes_per_round = metrics.round_bytes(
-            params, cfg.clients_per_round, quantized
+        self.engine = RoundEngine(
+            loss_fn, optimizer, cfg,
+            sampler=sampler, link=link, executor=executor,
+            aggregator=aggregator,
         )
+        self.state: ServerState = self.engine.init(params)
+        self._round = jax.jit(self.engine.round_fn)
+        # static estimate, honoring per-direction link modes; asserted equal
+        # to the traced wire_bytes in tests/test_fedsim_accounting.py
+        self.bytes_per_round = self.engine.round_bytes(params)
 
         @jax.jit
-        def _eval(params, x, y):
+        def _eval(params, x, y, n_valid):
             # Deployment evaluation: the model the server ships is on the FP8
             # grid; evaluate with QAT quantizers active (matches E[F(Q(w))]).
+            # ``x``/``y`` arrive padded to a fixed batch shape; rows at index
+            # >= n_valid are padding and masked out of the correct-count.
             logits = predict_fn(params, x, cfg.qat)
-            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+            ok = (jnp.argmax(logits, -1) == y) & (
+                jnp.arange(x.shape[0]) < n_valid
+            )
+            return jnp.sum(ok.astype(jnp.float32))
 
         self._eval = _eval
+
+    # --- back-compat: the server model as a plain attribute ----------------
+    @property
+    def params(self) -> PyTree:
+        return self.state.params
+
+    @params.setter
+    def params(self, value: PyTree) -> None:
+        self.state = self.state._replace(params=value)
 
     def evaluate(self, x: Array, y: Array, batch: int = 500) -> float:
         """Centralized test accuracy, exact over ragged batches.
 
         Accumulates correct-counts rather than averaging per-batch
-        accuracies: an unweighted mean would over-weight a smaller final
-        batch (e.g. 1200 examples at batch 500 -> the 200-example tail
-        counts 2.5x per example).
+        accuracies (an unweighted mean would over-weight a smaller final
+        batch), and pads the ragged tail batch up to ``batch`` with the
+        padding masked out of the count — so ``_eval`` sees ONE batch shape
+        and compiles once per dataset, not once per distinct tail size.
         """
         correct = 0.0
+        params = self.state.params
         for i in range(0, x.shape[0], batch):
-            correct += float(
-                self._eval(self.params, x[i : i + batch], y[i : i + batch])
-            )
+            xb, yb = x[i : i + batch], y[i : i + batch]
+            n_valid = xb.shape[0]
+            if n_valid < batch:
+                pad = batch - n_valid
+                xb = jnp.concatenate([xb, jnp.zeros((pad,) + xb.shape[1:],
+                                                    xb.dtype)])
+                yb = jnp.concatenate([yb, jnp.zeros((pad,), yb.dtype)])
+            correct += float(self._eval(params, xb, yb, n_valid))
         return correct / x.shape[0]
 
     def run(
@@ -109,15 +147,17 @@ class FedSim:
         traced_bytes: int | None = None
         for r in range(1, rounds + 1):
             key, k_round = jax.random.split(key)
-            self.params, m = self._round(
-                self.params, self.client_data, self.client_labels, self.nk, k_round
+            self.state, m = self._round(
+                self.state, self.client_data, self.client_labels, self.nk,
+                k_round,
             )
-            # charge the bytes the traced round actually moved (fedavg's
-            # wire_bytes reads the real payload layout at trace time) — the
-            # static estimate in self.bytes_per_round is kept for planning
-            # and is asserted equal in tests/test_fedsim_accounting.py.
-            # It is a trace-time constant, so fetch it ONCE: an int() every
-            # round would block async dispatch on device completion.
+            # charge the bytes the traced round actually moved (the engine's
+            # wire_bytes reads the real payload layout of each link leg at
+            # trace time) — the static estimate in self.bytes_per_round is
+            # kept for planning and is asserted equal in
+            # tests/test_fedsim_accounting.py. It is a trace-time constant,
+            # so fetch it ONCE: an int() every round would block async
+            # dispatch on device completion.
             if traced_bytes is None:
                 traced_bytes = int(m["wire_bytes"])
             total_bytes += traced_bytes

@@ -29,6 +29,9 @@ def payload_bytes(params: PyTree, quantized: bool) -> int:
     (``core.wire.WireSpec``): the uint8 codes buffer is exactly
     ``spec.total`` bytes — 1 byte per quantized element, no padding on the
     wire — and every other element (biases, norms, clip values) rides FP32.
+    All FP8 formats (E4M3, E5M2, ...) are one byte per element, so only
+    *whether* a direction is quantized changes its size, not which format
+    it uses.
     """
     from . import wire
 
@@ -38,10 +41,36 @@ def payload_bytes(params: PyTree, quantized: bool) -> int:
     return wire.payload_nbytes(spec)
 
 
-def round_bytes(params: PyTree, n_clients: int, quantized: bool) -> int:
-    """Uplink + downlink bytes for one communication round with P clients."""
-    per_model = payload_bytes(params, quantized)
-    return 2 * n_clients * per_model
+def round_bytes(params: PyTree, n_clients: int, quantized: bool = True,
+                up_quantized: bool | None = None) -> int:
+    """Uplink + downlink bytes for one communication round with P clients.
+
+    ``quantized`` governs the downlink; ``up_quantized`` the uplink and
+    defaults to the downlink setting (the symmetric legacy call). An
+    asymmetric link (e.g. FP32 down / FP8 up) charges each direction at
+    its real payload size — matching the engine's traced ``wire_bytes``.
+    """
+    down = payload_bytes(params, quantized)
+    up = payload_bytes(
+        params, quantized if up_quantized is None else up_quantized
+    )
+    return n_clients * (down + up)
+
+
+def round_bytes_for(params: PyTree, cfg: Any) -> int:
+    """Static round-byte estimate for a :class:`repro.core.engine.FedConfig`,
+    honoring its per-direction link modes."""
+    from . import wire
+
+    spec = wire.make_wire_spec(params)
+    has_q = bool(spec.q_slots)
+    _, down_mode = cfg.resolved_down
+    _, up_mode = cfg.resolved_up
+    return round_bytes(
+        params, cfg.clients_per_round,
+        quantized=down_mode != "none" and has_q,
+        up_quantized=up_mode != "none" and has_q,
+    )
 
 
 def param_count(params: PyTree) -> int:

@@ -211,45 +211,142 @@ def make_train_step(model: Model, opt: Optimizer, qcfg: QATConfig,
     return train_step
 
 
+def aggregator_state_specs(aggregator, param_specs: PyTree) -> PyTree:
+    """Sharding specs for a built-in Aggregator's server state.
+
+    FedAvgM's momentum mirrors the param tree (shard like the params);
+    FedAdam carries two mirrored moment trees; stateless aggregators
+    carry ``()``. A custom STATEFUL aggregator has a state structure this
+    helper cannot know — pass ``state_specs`` to ``make_comm_round``
+    explicitly (a silent ``()`` would die as an opaque shard_map pytree
+    mismatch instead).
+    """
+    from ..core import engine as fed_engine
+
+    if isinstance(aggregator, fed_engine.FedAvgM):
+        return param_specs
+    if isinstance(aggregator, fed_engine.FedAdam):
+        return {"m": param_specs, "v": param_specs}
+    if not jax.tree_util.tree_leaves(aggregator.init(jnp.zeros(()))):
+        return ()   # stateless: opt state is empty
+    raise ValueError(
+        f"cannot derive state sharding specs for custom stateful "
+        f"aggregator {type(aggregator).__name__}; pass state_specs to "
+        "make_comm_round explicitly"
+    )
+
+
 def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
                     qcfg: QATConfig, mode: str = "rand",
-                    wire: str = "fp8"):
+                    wire: str = "fp8", aggregator=None,
+                    state_specs: PyTree | None = None):
     """FedAvg round boundary over ``fl_axes`` as a shard_map'd collective.
 
     ``wire='fp8'`` moves uint8 codes (the paper's 4x compression as actual
     collective bytes); ``wire='f32'`` quantizes values but reduces in f32
     (the conservative variant); ``mode='none'`` + wire='f32' is the FP32
     FedAvg baseline.
+
+    ``aggregator=None`` keeps the fused in-collective mean and the legacy
+    ``(params, key) -> params`` signature. Passing a ``core.engine``
+    Aggregator instead gathers the per-silo models (still ONE u8 payload
+    each on the fp8 wire — ``compression.fp8_wire_allgather``) and applies
+    the aggregator's tail, threading its server state:
+    ``(params, comm_state, key) -> (params, comm_state)`` with
+    ``comm_state = {"prev": previous_global_model, "opt": agg opt state}``
+    (build the initial one with :func:`comm_round_state`). ``prev`` is the
+    FedOpt baseline: every silo's LOCAL params have diverged through local
+    training, so a pseudo-gradient taken against them would give each silo
+    a different "global" update that compounds round over round — the
+    previous boundary's output is identical on every silo, so the
+    aggregator output is too. That is how FedAvgM/FedAdam momentum lives
+    at a production round boundary.
     """
     from jax.experimental.shard_map import shard_map
 
-    def body(params, key):
+    def _perturb(params):
         # In the dry-run, params enter pod-replicated; real FL silos hold
         # DISTINCT weights. Make them formally distinct per silo so the
         # partitioner cannot fold the aggregation collectives away —
         # otherwise the lowering (and its measured bytes) is vacuous.
         idx = sum(jax.lax.axis_index(a) for a in fl_axes).astype(jnp.float32)
         eps = jnp.float32(1e-30) * idx  # non-foldable, numerically nil
-        params = jax.tree.map(
+        return jax.tree.map(
             lambda x: (x + eps.astype(x.dtype)) if jnp.issubdtype(
                 x.dtype, jnp.floating) else x,
             params,
         )
-        if wire == "fp8" and mode != "none":
-            return compression.fp8_wire_allreduce_mean(
-                params, key, fl_axes, qcfg.fmt
+
+    if aggregator is None:
+        def body(params, key):
+            params = _perturb(params)
+            if wire == "fp8" and mode != "none":
+                return compression.fp8_wire_allreduce_mean(
+                    params, key, fl_axes, qcfg.fmt
+                )
+            return compression.quantized_allreduce_mean(
+                params, key, fl_axes, qcfg.fmt, mode=mode
             )
-        return compression.quantized_allreduce_mean(
-            params, key, fl_axes, qcfg.fmt, mode=mode
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(param_specs, P()),
+            out_specs=param_specs,
+            check_rep=False,
         )
 
+    import numpy as np
+
+    if wire != "fp8":
+        # the aggregator path gathers stacked per-silo trees through the u8
+        # wire codec (values identical to an f32 gather of the quantized
+        # tree — the codec is exact); a separate f32-wire variant would be
+        # indistinguishable except in bytes, so reject rather than silently
+        # substitute
+        raise ValueError(
+            "make_comm_round(aggregator=...) supports wire='fp8' only; "
+            f"got wire={wire!r}"
+        )
+    n_silos = int(np.prod([mesh.shape[a] for a in fl_axes]))
+    if state_specs is None:
+        state_specs = aggregator_state_specs(aggregator, param_specs)
+    comm_specs = {"prev": param_specs, "opt": state_specs}
+
+    def body_agg(params, comm_state, key):
+        params = _perturb(params)
+        k_wire, k_srv = jax.random.split(key)
+        # mode passes through: 'rand' (unbiased), 'det' (biased ablation),
+        # 'none' (f32 gather — the FP32 baseline)
+        stacked = compression.fp8_wire_allgather(
+            params, k_wire, fl_axes, qcfg.fmt, mode=mode
+        )
+        nk = jnp.ones((n_silos,), jnp.float32)
+        # baseline = the previous GLOBAL model (replicated across silos),
+        # never the silo's diverged local params — see docstring
+        new_params, new_opt = aggregator(
+            comm_state["prev"], stacked, nk, k_srv, comm_state["opt"]
+        )
+        return new_params, {"prev": new_params, "opt": new_opt}
+
     return shard_map(
-        body,
+        body_agg,
         mesh=mesh,
-        in_specs=(param_specs, P()),
-        out_specs=param_specs,
+        in_specs=(param_specs, comm_specs, P()),
+        out_specs=(param_specs, comm_specs),
         check_rep=False,
     )
+
+
+def comm_round_state(aggregator, params: PyTree) -> dict:
+    """Initial threaded state for ``make_comm_round(aggregator=...)``: the
+    global model every silo starts from + the aggregator's opt state.
+
+    ``prev`` is a COPY, not an alias: trainers donate their param buffers
+    to the jitted step (``donate_argnums``), which would delete an aliased
+    ``prev`` out from under the next boundary / checkpoint."""
+    return {"prev": jax.tree.map(lambda x: jnp.array(x), params),
+            "opt": aggregator.init(params)}
 
 
 def make_prefill_step(model: Model, qcfg: QATConfig):

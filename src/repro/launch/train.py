@@ -71,6 +71,14 @@ def main() -> None:
     ap.add_argument("--no-qat", action="store_true")
     ap.add_argument("--comm-mode", default="rand",
                     choices=["rand", "det", "none"])
+    ap.add_argument("--server-opt", default="mean",
+                    choices=["mean", "fedavgm", "fedadam"],
+                    help="aggregator at the round boundary (core.engine); "
+                         "fedavgm/fedadam thread server momentum across "
+                         "rounds (and through checkpoints)")
+    ap.add_argument("--server-lr", type=float, default=None,
+                    help="server step size; default = the aggregator's own "
+                         "default (FedAvgM 1.0, FedAdam 0.1)")
     ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -97,6 +105,19 @@ def main() -> None:
     mgr = CheckpointManager(args.ckpt_dir, keep=3, every=args.ckpt_every)
     params = model.init(jax.random.PRNGKey(args.seed))
     opt_state = opt.init(params)
+
+    # server-side aggregator at the round boundary (core.engine): mean is
+    # the stateless FedAvg tail; fedavgm/fedadam carry momentum that must
+    # thread through rounds AND checkpoints
+    from ..core import engine as fed_engine
+
+    aggregator = None if args.server_opt == "mean" else \
+        fed_engine.make_aggregator(args.server_opt, lr=args.server_lr)
+    agg_state = ()
+    if aggregator is not None:
+        from .steps import comm_round_state
+        agg_state = comm_round_state(aggregator, params)
+
     start = 0
     if args.resume:
         from ..checkpoint.manager import latest_step, load_checkpoint
@@ -107,6 +128,24 @@ def main() -> None:
             params, opt_state = tree["params"], tree["opt"]
             params = jax.device_put(params, policy.params(params))
             opt_state = jax.device_put(opt_state, policy.params(opt_state))
+            if aggregator is not None:
+                # server state is absent from checkpoints written with
+                # --server-opt mean (or pre-engine runs); restart the
+                # momentum fresh rather than KeyError deep in np.load
+                try:
+                    srv, _ = load_checkpoint(args.ckpt_dir,
+                                             {"srv": agg_state})
+                    agg_state = jax.device_put(
+                        jax.tree.map(jnp.asarray, srv["srv"]),
+                        policy.params(srv["srv"]),
+                    )
+                except KeyError:
+                    # rebuild from the RESTORED params: the pseudo-gradient
+                    # baseline must anchor to the checkpointed model, not
+                    # the fresh random init agg_state was first built from
+                    agg_state = comm_round_state(aggregator, params)
+                    print("checkpoint has no server-optimizer state; "
+                          "starting momentum fresh")
             start = manifest["step"]
             print(f"resumed at step {start}")
 
@@ -121,7 +160,7 @@ def main() -> None:
 
         comm_round = jax.jit(make_comm_round(
             mesh, pspec_to_pspecs(policy.params(params)), fl_axes,
-            qcfg, mode=args.comm_mode,
+            qcfg, mode=args.comm_mode, aggregator=aggregator,
         ))
 
     with mesh, sharding_rules(policy.activation_rules()):
@@ -132,18 +171,27 @@ def main() -> None:
                 params, opt_state, batch, jnp.asarray(step, jnp.int32)
             )
             if comm_round is not None and (step + 1) % args.local_steps == 0:
-                # federated round boundary: quantized all-reduce across silos
-                params = comm_round(params, jax.random.PRNGKey(step))
+                # federated round boundary: quantized collective across silos
+                if aggregator is None:
+                    params = comm_round(params, jax.random.PRNGKey(step))
+                else:
+                    params, agg_state = comm_round(
+                        params, agg_state, jax.random.PRNGKey(step)
+                    )
             if (step + 1) % 10 == 0 or step == start:
                 print(
                     f"step {step+1:5d}  loss {float(m['loss']):.4f}  "
                     f"{(step + 1 - start) / (time.time() - t0):.2f} it/s",
                     flush=True,
                 )
-            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state},
-                           extra={"arch": args.arch})
-        mgr.maybe_save(args.steps, {"params": params, "opt": opt_state},
-                       extra={"arch": args.arch}, force=True)
+            tree = {"params": params, "opt": opt_state}
+            if aggregator is not None:
+                tree["srv"] = agg_state
+            mgr.maybe_save(step + 1, tree, extra={"arch": args.arch})
+        tree = {"params": params, "opt": opt_state}
+        if aggregator is not None:
+            tree["srv"] = agg_state
+        mgr.maybe_save(args.steps, tree, extra={"arch": args.arch}, force=True)
     print("done")
 
 

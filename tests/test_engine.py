@@ -1,0 +1,324 @@
+"""Composable round engine (ISSUE 3): stage parity, chunked-executor
+bit-identity, stateful server optimizers, and the legacy shim contract.
+
+The two load-bearing invariants:
+
+* ``ChunkedExecutor`` must be BIT-identical to the full-cohort vmap under
+  the same key — chunking is a schedule change, never a numerics change.
+* ``fedavg.make_round`` (the legacy shim) must be bit-identical to an
+  explicitly-assembled ``RoundEngine`` on the default configuration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import engine as eng
+from repro.core.engine import (
+    ChunkedExecutor,
+    FedAdam,
+    FedAvgM,
+    FedConfig,
+    FixedCohortSampler,
+    MeanAggregator,
+    RoundEngine,
+    UniformSampler,
+    VmapExecutor,
+    WeightedSampler,
+    WireLink,
+)
+from repro.core.fedavg import make_round
+from repro.core.fedsim import FedSim
+from repro.core.fp8 import E4M3, E5M2
+from repro.core.qat import (
+    DISABLED,
+    QATConfig,
+    clip_value_mask,
+    weight_decay_mask,
+)
+from repro.core.server_opt import ServerOptConfig
+from repro.data import partition_iid, synthetic_classification
+from repro.models import small
+
+
+def _mlp_setup(k=6, n=600, d=16, n_classes=4):
+    xall, yall = synthetic_classification(0, n + 300, d=d, n_classes=n_classes)
+    cx, cy, nk = partition_iid(xall[:n], yall[:n], k=k, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=d, n_classes=n_classes)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    evald = (jnp.asarray(xall[n:]), jnp.asarray(yall[n:]))
+    return (params, loss, apply, opt,
+            (jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(nk)), evald)
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Executor parity: chunked == full vmap, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_executor_bit_identical():
+    """Same key => bit-identical round output for every chunking: chunk=1
+    (fully sequential), chunk=2 (does not divide the P=3 cohort — padding
+    path), chunk=7 (> cohort, clamped). The full-vmap reference is
+    compiled once and every chunking must reproduce it exactly."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=2,
+                    batch_size=8, comm_mode="rand", qat=QATConfig())
+    full = RoundEngine(loss, opt, cfg, executor=VmapExecutor())
+    key = jax.random.PRNGKey(7)
+    s_full, m_full = jax.jit(full.round_fn)(full.init(params), *data, key)
+    for chunk in (1, 2, 7):
+        chunked = RoundEngine(loss, opt, cfg, executor=ChunkedExecutor(chunk))
+        s_chunk, m_chunk = jax.jit(chunked.round_fn)(
+            chunked.init(params), *data, key
+        )
+        _assert_trees_equal(s_full.params, s_chunk.params,
+                            f"chunk={chunk} diverged from full vmap")
+        np.testing.assert_array_equal(np.asarray(m_full["local_loss"]),
+                                      np.asarray(m_chunk["local_loss"]))
+        assert int(m_full["wire_bytes"]) == int(m_chunk["wire_bytes"])
+
+
+def test_chunked_fedsim_history_bit_identical():
+    """End-to-end determinism: FedSim driven with cfg.chunk set produces a
+    bit-identical FedHistory to the full-vmap run under the same key."""
+    params, loss, apply, opt_a, data, evald = _mlp_setup()
+    _, _, _, opt_b, _, _ = _mlp_setup()
+    base = dict(n_clients=6, participation=0.5, local_steps=3, batch_size=8,
+                comm_mode="rand", qat=QATConfig())
+    sim_full = FedSim(params, loss, apply, opt_a,
+                      FedConfig(**base), *data)
+    sim_chunk = FedSim(params, loss, apply, opt_b,
+                       FedConfig(chunk=2, **base), *data)
+    h_full = sim_full.run(2, jax.random.PRNGKey(11), eval_data=evald,
+                          eval_every=1)
+    h_chunk = sim_chunk.run(2, jax.random.PRNGKey(11), eval_data=evald,
+                            eval_every=1)
+    assert h_full.rounds == h_chunk.rounds
+    assert h_full.accuracy == h_chunk.accuracy        # bitwise float equality
+    assert h_full.loss == h_chunk.loss
+    assert h_full.cumulative_bytes == h_chunk.cumulative_bytes
+    _assert_trees_equal(sim_full.params, sim_chunk.params)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim parity: make_round == explicit engine
+# ---------------------------------------------------------------------------
+
+
+def test_make_round_shim_matches_explicit_engine():
+    """The back-compat shim and an explicitly assembled engine (uniform
+    sampler, symmetric E4M3 rand link, full vmap, mean tail) must agree
+    bit-for-bit on the default configuration."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=3,
+                    batch_size=8, comm_mode="rand", qat=QATConfig())
+    legacy = jax.jit(make_round(loss, opt, cfg))
+    explicit = RoundEngine(
+        loss, opt, cfg,
+        sampler=UniformSampler(cfg.n_clients, cfg.clients_per_round),
+        link=WireLink(down_fmt=E4M3, up_fmt=E4M3,
+                      down_mode="rand", up_mode="rand"),
+        executor=VmapExecutor(),
+        aggregator=MeanAggregator(),
+    )
+    key = jax.random.PRNGKey(3)
+    p_legacy, m_legacy = legacy(params, *data, key)
+    s_new, m_new = jax.jit(explicit.round_fn)(explicit.init(params), *data, key)
+    _assert_trees_equal(p_legacy, s_new.params, "shim != explicit engine")
+    np.testing.assert_array_equal(np.asarray(m_legacy["local_loss"]),
+                                  np.asarray(m_new["local_loss"]))
+    assert int(m_legacy["wire_bytes"]) == int(m_new["wire_bytes"])
+
+
+def test_make_round_rejects_stateful_aggregators():
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=1,
+                    batch_size=8, aggregator="fedavgm")
+    with pytest.raises(ValueError, match="server state"):
+        make_round(loss, opt, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Samplers
+# ---------------------------------------------------------------------------
+
+
+def test_samplers_select_valid_cohorts():
+    nk = jnp.asarray([1.0, 100.0, 1.0, 100.0, 1.0, 100.0, 1.0, 100.0])
+    key = jax.random.PRNGKey(0)
+    for sampler in (UniformSampler(8, 4), WeightedSampler(8, 4),
+                    FixedCohortSampler(8, 4)):
+        idx = np.asarray(sampler(nk, key))
+        assert idx.shape == (4,)
+        assert len(set(idx.tolist())) == 4, "cohort must be w/o replacement"
+        assert all(0 <= i < 8 for i in idx)
+    assert np.asarray(FixedCohortSampler(8, 4)(nk, key)).tolist() == [0, 1, 2, 3]
+    assert np.asarray(
+        FixedCohortSampler(8, 2, indices=(5, 3))(nk, key)
+    ).tolist() == [5, 3]
+    # fewer indices than the declared cohort would crash the executor's
+    # vmap downstream — rejected at construction
+    with pytest.raises(ValueError, match="indices"):
+        FixedCohortSampler(8, 4, indices=(5, 3))
+
+
+def test_sampler_override_with_different_cohort():
+    """A sampler override selecting a different cohort than participation
+    implies must drive key fan-out, the executor AND byte accounting — the
+    engine follows sampler.cohort, not cfg.clients_per_round."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=1,
+                    batch_size=8, comm_mode="rand", qat=QATConfig())
+    assert cfg.clients_per_round == 3
+    e = RoundEngine(loss, opt, cfg, sampler=FixedCohortSampler(6, 2))
+    assert e.cohort == 2
+    s, m = jax.jit(e.round_fn)(e.init(params), *data, jax.random.PRNGKey(0))
+    assert int(m["wire_bytes"]) == e.round_bytes(params)
+    spec_bytes = e.round_bytes(params) // 2
+    assert int(m["wire_bytes"]) == 2 * spec_bytes  # P=2, not 3
+
+
+def test_weighted_sampler_prefers_heavy_clients():
+    """nk-weighted sampling: clients with 100x the data must appear in the
+    cohort far more often than the light ones."""
+    nk = jnp.asarray([1.0, 100.0] * 4)
+    sampler = WeightedSampler(8, 2)
+    heavy = 0
+    for i in range(200):
+        idx = np.asarray(sampler(nk, jax.random.PRNGKey(i)))
+        heavy += sum(1 for j in idx if j % 2 == 1)
+    assert heavy / 400 > 0.8, f"heavy-client rate {heavy/400:.2f}"
+
+
+# ---------------------------------------------------------------------------
+# Links: per-direction formats
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_link_round_runs_and_differs_from_symmetric():
+    """E4M3-down / E5M2-up is a different wire than E4M3 both ways (E5M2 has
+    a coarser mantissa) but costs identical bytes (both are 8-bit)."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    base = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8,
+                comm_mode="det", qat=QATConfig())  # det: isolate fmt effect
+    sym = RoundEngine(loss, opt, FedConfig(**base))
+    hyb = RoundEngine(loss, opt, FedConfig(up_fmt=E5M2, **base))
+    key = jax.random.PRNGKey(5)
+    s_sym, m_sym = jax.jit(sym.round_fn)(sym.init(params), *data, key)
+    s_hyb, m_hyb = jax.jit(hyb.round_fn)(hyb.init(params), *data, key)
+    assert int(m_sym["wire_bytes"]) == int(m_hyb["wire_bytes"])
+    diffs = [
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(s_sym.params),
+                        jax.tree.leaves(s_hyb.params))
+    ]
+    assert max(diffs) > 0, "uplink format change had no effect"
+    for leaf in jax.tree.leaves(s_hyb.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# Stateful server optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_fedavgm_reduces_to_mean_at_identity_settings():
+    """lr=1, momentum=0 makes FedAvgM literally the weighted mean."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    base = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8,
+                comm_mode="rand", qat=QATConfig())
+    mean_e = RoundEngine(loss, opt, FedConfig(**base))
+    m_e = RoundEngine(loss, opt, FedConfig(aggregator="fedavgm",
+                                           server_lr=1.0, server_momentum=0.0,
+                                           **base))
+    key = jax.random.PRNGKey(2)
+    s_mean, _ = jax.jit(mean_e.round_fn)(mean_e.init(params), *data, key)
+    s_m, _ = jax.jit(m_e.round_fn)(m_e.init(params), *data, key)
+    for a, b in zip(jax.tree.leaves(s_mean.params), jax.tree.leaves(s_m.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6)
+
+
+def test_stateful_aggregator_state_threads_through_rounds():
+    """FedAvgM's momentum buffer must be nonzero after a round and must
+    CHANGE the second round's output vs a fresh state (i.e. the state is
+    genuinely threaded, not reset)."""
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=2,
+                    batch_size=8, comm_mode="rand", qat=QATConfig(),
+                    aggregator="fedavgm", server_lr=1.0, server_momentum=0.9)
+    e = RoundEngine(loss, opt, cfg)
+    rf = jax.jit(e.round_fn)
+    s0 = e.init(params)
+    assert not jax.tree.leaves(jax.tree.map(
+        lambda x: bool(jnp.any(x != 0)), s0.opt))[0]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    s1, _ = rf(s0, *data, k1)
+    assert any(bool(jnp.any(x != 0)) for x in jax.tree.leaves(s1.opt)), \
+        "momentum stayed zero after a round"
+    # threaded state vs reset state must produce different params
+    s2_threaded, _ = rf(s1, *data, k2)
+    s2_reset, _ = rf(s1._replace(opt=e.init(params).opt), *data, k2)
+    diffs = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(s2_threaded.params),
+                        jax.tree.leaves(s2_reset.params))
+    ]
+    assert max(diffs) > 0, "momentum state had no effect on round 2"
+
+
+def test_fedadam_state_shapes_and_update():
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=2,
+                    batch_size=8, comm_mode="rand", qat=QATConfig(),
+                    aggregator="fedadam", server_lr=0.05)
+    e = RoundEngine(loss, opt, cfg)
+    s0 = e.init(params)
+    assert set(s0.opt.keys()) == {"m", "v"}
+    s1, m = jax.jit(e.round_fn)(s0, *data, jax.random.PRNGKey(6))
+    assert any(bool(jnp.any(x != 0)) for x in jax.tree.leaves(s1.opt["v"]))
+    for leaf in jax.tree.leaves(s1.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    diffs = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params))
+    ]
+    assert max(diffs) > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("aggregator,server_lr", [
+    ("fedavgm", 1.0),
+    ("fedadam", 0.05),
+])
+def test_stateful_aggregators_converge(aggregator, server_lr):
+    """Mini federated sweep: FedAvgM/FedAdam with FP8 UQ communication must
+    learn the synthetic task (within 7 points of what the plain-mean UQ run
+    reaches under the same budget — they are accelerators, not stabilizers,
+    on this easy task)."""
+    params, loss, apply, opt, data, evald = _mlp_setup(k=10, n=3000)
+    base = dict(n_clients=10, participation=0.3, local_steps=15,
+                batch_size=32, comm_mode="rand", qat=QATConfig())
+    sim_mean = FedSim(params, loss, apply, opt, FedConfig(**base), *data)
+    h_mean = sim_mean.run(25, jax.random.PRNGKey(5), eval_data=evald,
+                          eval_every=5)
+    sim_s = FedSim(params, loss, apply, opt,
+                   FedConfig(aggregator=aggregator, server_lr=server_lr,
+                             server_momentum=0.9, **base), *data)
+    h_s = sim_s.run(25, jax.random.PRNGKey(5), eval_data=evald, eval_every=5)
+    assert h_mean.best_accuracy() > 0.6, "mean baseline failed to learn"
+    assert h_s.best_accuracy() > h_mean.best_accuracy() - 0.07, (
+        f"{aggregator} best={h_s.best_accuracy():.3f} vs "
+        f"mean={h_mean.best_accuracy():.3f}"
+    )

@@ -1,11 +1,15 @@
-"""FedSim measurement correctness (ISSUE 2 bugfixes).
+"""FedSim measurement correctness (ISSUE 2 bugfixes, ISSUE 3 links).
 
 * ``FedSim.evaluate`` must weight ragged batches by size — an unweighted
-  mean of per-batch accuracies over-weights a smaller final batch.
+  mean of per-batch accuracies over-weights a smaller final batch — and
+  must compile ONCE per dataset (the tail batch is padded + masked, not
+  retraced at its own shape).
 * The bytes ``FedSim.run`` charges must be the bytes the traced round
-  actually moved: ``metrics.round_bytes`` (static estimate) and fedavg's
-  ``wire_bytes`` (read off the traced payload) must agree for quantized
-  (rand/det) and FP32 (``comm_mode='none'``) configs.
+  actually moved: ``metrics.round_bytes`` (static estimate) and the
+  engine's ``wire_bytes`` (read off the traced payload) must agree for
+  every link variant — symmetric rand/det/none AND asymmetric
+  per-direction links (FP32 down / FP8 up and vice versa, hybrid
+  E4M3/E5M2 formats).
 """
 import jax
 import jax.numpy as jnp
@@ -14,8 +18,9 @@ import pytest
 
 from repro import optim
 from repro.core import metrics
-from repro.core.fedavg import FedConfig, make_round
+from repro.core.engine import FedConfig
 from repro.core.fedsim import FedSim
+from repro.core.fp8 import E4M3, E5M2
 from repro.core.qat import (
     DISABLED,
     QATConfig,
@@ -54,20 +59,59 @@ def test_evaluate_exact_on_ragged_batches():
     assert abs(got - 1.0 / 3.0) > 0.2
 
 
-@pytest.mark.parametrize("comm_mode,qat_cfg", [
-    ("rand", QATConfig()),
-    ("det", QATConfig()),
-    ("none", DISABLED),
-])
-def test_static_and_traced_round_bytes_agree(comm_mode, qat_cfg):
+def test_evaluate_compiles_once_per_dataset():
+    """The ragged tail batch must NOT trigger a second trace: it is padded
+    to the head batch shape and masked. One dataset -> one compile."""
     cfg = FedConfig(n_clients=2, participation=1.0, local_steps=1,
-                    batch_size=8, comm_mode=comm_mode, qat=qat_cfg)
+                    batch_size=4, comm_mode="none", qat=DISABLED)
+    sim, apply, params = _sim(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (70, 8))
+    y = jnp.zeros((70,), jnp.int32)
+    traces = []
+    orig = sim._eval
+    inner = orig.__wrapped__
+
+    def counting(params, xb, yb, n_valid):
+        traces.append(tuple(xb.shape))
+        return inner(params, xb, yb, n_valid)
+
+    sim._eval = jax.jit(counting)
+    sim.evaluate(x, y, batch=32)   # 32/32/6 -> padded tail, one shape
+    assert set(traces) == {(32, 8)}, traces
+    assert len(traces) == 1, f"re-traced on the ragged tail: {traces}"
+    sim._eval = orig
+
+
+LINK_VARIANTS = [
+    # (id, cfg kwargs, down quantized?, up quantized?)
+    ("rand", dict(comm_mode="rand", qat=QATConfig()), True, True),
+    ("det", dict(comm_mode="det", qat=QATConfig()), True, True),
+    ("none", dict(comm_mode="none", qat=DISABLED), False, False),
+    ("fp32_down_fp8_up",
+     dict(comm_mode="rand", qat=QATConfig(), down_mode="none"), False, True),
+    ("fp8_down_fp32_up",
+     dict(comm_mode="rand", qat=QATConfig(), up_mode="none"), True, False),
+    ("hybrid_e4m3_e5m2",
+     dict(comm_mode="rand", qat=QATConfig(), down_fmt=E4M3, up_fmt=E5M2),
+     True, True),
+]
+
+
+@pytest.mark.parametrize(
+    "kwargs,down_q,up_q",
+    [v[1:] for v in LINK_VARIANTS],
+    ids=[v[0] for v in LINK_VARIANTS],
+)
+def test_static_and_traced_round_bytes_agree(kwargs, down_q, up_q):
+    cfg = FedConfig(n_clients=2, participation=1.0, local_steps=1,
+                    batch_size=8, **kwargs)
     sim, _, params = _sim(cfg)
-    _, m = sim._round(sim.params, sim.client_data, sim.client_labels,
+    _, m = sim._round(sim.state, sim.client_data, sim.client_labels,
                       sim.nk, jax.random.PRNGKey(0))
     static = metrics.round_bytes(params, cfg.clients_per_round,
-                                 quantized=comm_mode != "none")
+                                 quantized=down_q, up_quantized=up_q)
     assert static == sim.bytes_per_round
+    assert static == metrics.round_bytes_for(params, cfg)
     assert int(m["wire_bytes"]) == static, (int(m["wire_bytes"]), static)
     # and FedSim.run must charge exactly that per round (same jitted round,
     # so this costs no extra compile)
@@ -75,3 +119,16 @@ def test_static_and_traced_round_bytes_agree(comm_mode, qat_cfg):
     y = jax.random.randint(jax.random.PRNGKey(5), (24,), 0, 4)
     hist = sim.run(2, jax.random.PRNGKey(6), eval_data=(x, y), eval_every=1)
     assert hist.cumulative_bytes == [static, 2 * static]
+
+
+def test_asymmetric_links_differ_from_symmetric():
+    """FP32-down/FP8-up must charge MORE than symmetric FP8 and LESS than
+    symmetric FP32 — the per-direction accounting is real, not collapsed
+    onto one flag."""
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    both = metrics.round_bytes(params, 2, quantized=True)
+    neither = metrics.round_bytes(params, 2, quantized=False)
+    mixed = metrics.round_bytes(params, 2, quantized=False, up_quantized=True)
+    assert both < mixed < neither
+    assert mixed == (both + neither) // 2

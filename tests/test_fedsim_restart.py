@@ -38,16 +38,16 @@ def test_checkpoint_restart_continues_identically(tmp_path):
     key = jax.random.PRNGKey(9)
     for r in range(4):
         key, k = jax.random.split(key)
-        sim_a.params, _ = sim_a._round(sim_a.params, sim_a.client_data,
-                                       sim_a.client_labels, sim_a.nk, k)
+        sim_a.state, _ = sim_a._round(sim_a.state, sim_a.client_data,
+                                      sim_a.client_labels, sim_a.nk, k)
 
     # run 2: 2 rounds, checkpoint, restore into a FRESH sim, 2 more rounds
     sim_b = _sim(params0)
     key = jax.random.PRNGKey(9)
     for r in range(2):
         key, k = jax.random.split(key)
-        sim_b.params, _ = sim_b._round(sim_b.params, sim_b.client_data,
-                                       sim_b.client_labels, sim_b.nk, k)
+        sim_b.state, _ = sim_b._round(sim_b.state, sim_b.client_data,
+                                      sim_b.client_labels, sim_b.nk, k)
     save_checkpoint(str(tmp_path), 2, {"params": sim_b.params},
                     extra={"key": np.asarray(key).tolist()})
 
@@ -57,8 +57,8 @@ def test_checkpoint_restart_continues_identically(tmp_path):
     key = jnp.asarray(manifest["extra"]["key"], jnp.uint32)
     for r in range(2):
         key, k = jax.random.split(key)
-        sim_c.params, _ = sim_c._round(sim_c.params, sim_c.client_data,
-                                       sim_c.client_labels, sim_c.nk, k)
+        sim_c.state, _ = sim_c._round(sim_c.state, sim_c.client_data,
+                                      sim_c.client_labels, sim_c.nk, k)
 
     for a, b in zip(jax.tree.leaves(sim_a.params), jax.tree.leaves(sim_c.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -62,6 +62,60 @@ def test_fp8_wire_collective_moves_uint8():
     assert not f32, f"weights must not cross the wire in f32: {f32}"
 
 
+def test_fp8_wire_allgather_stacks_silo_trees():
+    """The gather variant must return stacked per-silo trees whose mean is
+    the allreduce_mean result — same wire, aggregator-shaped output."""
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    params = _params()
+    key = jax.random.PRNGKey(4)
+    gathered = jax.jit(shard_map(
+        lambda p, k: compression.fp8_wire_allgather(p, k, ("pod",)),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+    ))(params, key)
+    reduced = jax.jit(shard_map(
+        lambda p, k: compression.fp8_wire_allreduce_mean(p, k, ("pod",)),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+    ))(params, key)
+    assert gathered["w"].shape == (1,) + params["w"].shape
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(gathered["w"], axis=0)),
+        np.asarray(reduced["w"]), rtol=0, atol=1e-6,
+    )
+
+
+def test_make_comm_round_with_stateful_aggregator():
+    """make_comm_round(aggregator=FedAvgM) must thread server momentum
+    through the round boundary: state nonzero after one boundary and the
+    collective still moves u8."""
+    from repro.core.engine import FedAvgM
+    from repro.launch.steps import comm_round_state, make_comm_round
+    from repro.core.qat import QATConfig
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    params = _params()
+    agg = FedAvgM(lr=1.0, momentum=0.9)
+    comm_state = comm_round_state(agg, params)
+    fn = make_comm_round(mesh, P(), ("pod",), QATConfig(),
+                         mode="rand", wire="fp8", aggregator=agg,
+                         state_specs=P())
+    new_params, new_state = jax.jit(fn)(params, comm_state,
+                                        jax.random.PRNGKey(0))
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+    assert any(bool(jnp.any(x != 0))
+               for x in jax.tree.leaves(new_state["opt"])), \
+        "server momentum stayed zero across the boundary"
+    # the threaded baseline must be the NEW global model (next round's
+    # pseudo-gradient anchor), identical on every silo
+    np.testing.assert_array_equal(np.asarray(new_state["prev"]["w"]),
+                                  np.asarray(new_params["w"]))
+    txt = jax.jit(fn).lower(params, comm_state,
+                            jax.random.PRNGKey(0)).compile().as_text()
+    u8_gathers = [ln for ln in txt.splitlines()
+                  if re.search(r"=\s*u8\[", ln)
+                  and re.search(r"all-gather(-start)?\(", ln)]
+    assert u8_gathers, "aggregator path lost the u8 wire"
+
+
 def test_fp8_wire_single_collective_for_whole_model():
     """Flat codec collapses O(n_tensors) collectives into exactly one."""
     mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
