@@ -20,6 +20,11 @@ trajectory:
   full-cohort vmap at K=512 LeNet clients — XLA compiled temp-buffer size
   (the live-memory envelope) and wall-clock. The chunked executor's temps
   must scale with the chunk size, not the cohort size.
+* the sharded cohort executor (ISSUE 4): the same K=512 round spread over
+  a 1- vs 8-virtual-device ``clients`` mesh (this module forces 8 CPU
+  host devices when it is the entry point). ``memory_analysis`` of the
+  per-shard SPMD executable is the per-DEVICE executor envelope — it must
+  shrink ~Dx with device count while the round stays one u8 gather.
 
 Interpret-mode absolute numbers are NOT TPU predictions — the interpreter
 executes kernel bodies op-by-op, so true fusion only materializes on a
@@ -40,7 +45,10 @@ import time
 # to cancel co-tenant load drift either way.
 os.environ.setdefault(
     "XLA_FLAGS",
-    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1",
+    # 8 virtual host devices for the sharded-cohort rows (dryrun-style);
+    # single-device benches still run on device 0, unaffected
+    "--xla_force_host_platform_device_count=8 "
+    "--xla_cpu_multi_thread_eigen=false",
 )
 
 import jax
@@ -366,6 +374,76 @@ def _fed_executor_benches(rows):
         })
 
 
+def _fed_sharded_benches(rows):
+    """ShardedExecutor at K=512 LeNet over a 1- vs 8-device client mesh
+    (ISSUE 4): per-DEVICE executor temp buffers and end-to-end round
+    wall-clock. The SPMD executable is per-device, so memory_analysis of
+    the jitted executor stage reads each device's live training envelope
+    directly — it must shrink ~Dx while outputs (the cohort stack every
+    device holds for the server tail) stay O(K) by design. Wall-clock on
+    virtual CPU devices is sequential-ish (all shards share the host);
+    the structural row is the memory ratio."""
+    import jax
+
+    from repro import optim
+    from repro.core.engine import FedConfig, RoundEngine, ShardedExecutor
+    from repro.core.qat import DISABLED
+    from repro.launch.mesh import make_client_mesh
+
+    n_avail = len(jax.devices())
+    if n_avail < 2:
+        rows.append({
+            "bench": "fed", "name": "fed_round_sharded_skipped",
+            "us_per_call": 0.0,
+            "derived": f"needs multi-device ({n_avail} present) — run this "
+                       "module as the entry point to force 8 virtual CPUs",
+        })
+        return
+
+    K = 512
+    init, _ = small.REGISTRY["lenet"]
+    params = init(jax.random.PRNGKey(0), n_classes=10)
+    loss = small.make_loss(small.REGISTRY["lenet"][1])
+    opt = optim.sgd(0.05, momentum=0.9)
+    base = dict(n_clients=K, participation=1.0, local_steps=1,
+                batch_size=4, comm_mode="none", qat=DISABLED)
+    data = jax.random.normal(jax.random.PRNGKey(1), (K, 4, 32, 32, 3),
+                             jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (K, 4), 0, 10)
+    nk = jnp.full((K,), 4.0)
+    key = jax.random.PRNGKey(3)
+
+    temps = {}
+    for D in (1, min(8, n_avail)):
+        mesh = make_client_mesh(D)
+        eng = RoundEngine(loss, opt, FedConfig(mesh=mesh, **base))
+        assert isinstance(eng.executor, ShardedExecutor)
+        lu = eng._local_update
+        ex = jax.jit(lambda d, l, k: eng.executor(lu, params, d, l, k))
+        keys = jax.random.split(key, K)
+        ma = ex.lower(data, labels, keys).compile().memory_analysis()
+        temp_mb = (ma.temp_size_in_bytes / 1e6) if ma is not None else None
+        temps[D] = temp_mb
+        rf = jax.jit(eng.round_fn)
+        state = eng.init(params)
+        t = _time(rf, state, data, labels, nk, key, n=2, reps=2)
+        _row(rows, f"fed_round_sharded_D{D}_K{K}_lenet", t,
+             f"one round over a {D}-device clients mesh, U=1, B=4; "
+             + (f"per-device executor XLA temp {temp_mb:.0f} MB"
+                if temp_mb is not None else "temp n/a"))
+    Ds = sorted(temps)
+    if all(temps[d] is not None for d in Ds) and len(Ds) == 2:
+        ratio = temps[Ds[0]] / max(temps[Ds[1]], 1e-9)
+        rows.append({
+            "bench": "fed", "name": f"fed_sharded_temp_ratio_K{K}",
+            "us_per_call": round(ratio, 2),
+            "derived": f"D={Ds[0]} / D={Ds[1]} per-device executor "
+                       f"temp-buffer ratio ({temps[Ds[0]]:.0f} MB vs "
+                       f"{temps[Ds[1]]:.0f} MB) — the cohort axis "
+                       "spreading across the client mesh",
+        })
+
+
 def run(out_rows=None):
     rows = out_rows if out_rows is not None else []
     _quantizer_benches(rows)
@@ -373,6 +451,7 @@ def run(out_rows=None):
     _codec_benches(rows)
     _plane_benches(rows)
     _fed_executor_benches(rows)
+    _fed_sharded_benches(rows)
     with open("BENCH_kernels.json", "w") as f:
         json.dump(rows, f, indent=1)
     return rows

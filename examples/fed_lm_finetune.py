@@ -8,8 +8,15 @@ server tail is a ``core.engine`` Aggregator — ``--server-opt fedavgm`` or
 ``fedadam`` threads server momentum across rounds, the same objects
 ``FedSim`` and the production ``launch.steps.make_comm_round`` use.
 
+``--mesh D`` switches from the didactic per-client Python loop to the full
+``RoundEngine`` with the cohort sharded over a D-device ``clients`` mesh
+(``ShardedExecutor``): every device fine-tunes cohort/D clients and ships
+one uint8 payload per round leg — the engine path FedSim and the tests
+drive, at example scale. Needs D devices; on a CPU host force virtual
+ones: ``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 8``.
+
     PYTHONPATH=src python examples/fed_lm_finetune.py [--rounds N]
-        [--server-opt {mean,fedavgm,fedadam}]
+        [--server-opt {mean,fedavgm,fedadam}] [--mesh D]
 """
 import argparse
 
@@ -38,14 +45,25 @@ def main():
     ap.add_argument("--server-lr", type=float, default=None,
                     help="server step size; default = the aggregator's own "
                          "default (FedAvgM 1.0, FedAdam 0.1)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="drive the RoundEngine with the cohort sharded "
+                         "over this many devices ('clients' axis); see the "
+                         "module docstring for virtual CPU devices")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get("tinyllama_1_1b"))
     model = get_model(cfg)
     qcfg = DISABLED if args.no_qat else QATConfig()
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_client_mesh
+
+        mesh = make_client_mesh(args.mesh)
     fed = FedConfig(n_clients=args.clients, participation=args.active / args.clients,
                     local_steps=args.local_steps, batch_size=4,
-                    comm_mode="none" if args.no_qat else "rand", qat=qcfg)
+                    comm_mode="none" if args.no_qat else "rand", qat=qcfg,
+                    mesh=mesh, aggregator=args.server_opt,
+                    server_lr=args.server_lr)
 
     # per-client disjoint token streams (different Markov structures)
     streams = [synthetic_lm_tokens(c, 40_000, cfg.vocab) for c in range(args.clients)]
@@ -54,10 +72,41 @@ def main():
         return model.train_loss(params, {"tokens": xb, "labels": yb}, qat_cfg)
 
     opt = optim.adamw(1e-3, weight_decay=0.01)
-    local_update = jax.jit(make_local_update(loss_fn, opt, fed))
-
     params = model.init(jax.random.PRNGKey(0))
     per_model = metrics.payload_bytes(params, quantized=fed.comm_mode != "none")
+
+    def client_batches_for(c, n):
+        w = streams[c][: n * 4 * (args.seq + 1)].reshape(n, 4, args.seq + 1)
+        return jnp.asarray(w[..., :-1]), jnp.asarray(w[..., 1:])
+
+    if mesh is not None:
+        # engine path: tensorized client streams, cohort sharded over the
+        # client mesh — the exact round FedSim/tests drive, LM-sized
+        from repro.core.engine import RoundEngine
+
+        pairs = [client_batches_for(c, fed.local_steps)
+                 for c in range(args.clients)]
+        cdata = jnp.stack([x.reshape(-1, args.seq) for x, _ in pairs])
+        clabels = jnp.stack([y.reshape(-1, args.seq) for _, y in pairs])
+        nk = jnp.ones((args.clients,), jnp.float32)
+        eng = RoundEngine(loss_fn, opt, fed)
+        state = eng.init(params)
+        round_fn = jax.jit(eng.round_fn)
+        key = jax.random.PRNGKey(1)
+        total_bytes = 0
+        for r in range(args.rounds):
+            key, kr = jax.random.split(key)
+            state, m = round_fn(state, cdata, clabels, nk, kr)
+            total_bytes += int(m["wire_bytes"])
+            print(f"round {r+1}: mean local loss "
+                  f"{float(m['local_loss']):.4f}  "
+                  f"cum MB {total_bytes/1e6:.1f}  "
+                  f"({args.mesh}-device cohort mesh)")
+        print(f"payload/model: {per_model/1e6:.2f} MB "
+              f"({'FP8' if fed.comm_mode != 'none' else 'FP32'})")
+        return
+
+    local_update = jax.jit(make_local_update(loss_fn, opt, fed))
     key = jax.random.PRNGKey(1)
     total_bytes = 0
 
@@ -65,10 +114,6 @@ def main():
     # stateful ones carry momentum in agg_state between rounds
     aggregator = make_aggregator(args.server_opt, lr=args.server_lr)
     agg_state = aggregator.init(params)
-
-    def client_batches(stream, n):
-        w = stream[: n * 4 * (args.seq + 1)].reshape(n, 4, args.seq + 1)
-        return jnp.asarray(w[..., :-1]), jnp.asarray(w[..., 1:])
 
     for r in range(args.rounds):
         key, k_sel, k_up, k_down, k_loc, k_srv = jax.random.split(key, 6)
@@ -78,7 +123,7 @@ def main():
         down = comm_quantize(params, k_down, fed.fmt, fed.comm_mode)
         msgs, losses = [], []
         for i, c in enumerate(active):
-            xb, yb = client_batches(streams[int(c)], fed.local_steps)
+            xb, yb = client_batches_for(int(c), fed.local_steps)
             # tensorize one big "client dataset" and run U local steps
             flat_x = xb.reshape(-1, args.seq)
             flat_y = yb.reshape(-1, args.seq)

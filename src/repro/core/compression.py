@@ -111,6 +111,65 @@ def fp8_wire_allgather(
     )(codes_g, other_g)
 
 
+def fp8_wire_allgather_clients(
+    stacked: PyTree,
+    keys: Array,
+    axis_names: tuple[str, ...],
+    fmt: FP8Format = E4M3,
+    mode: str = "rand",
+    n_keep: int | None = None,
+) -> PyTree:
+    """Gather a cohort of client models sharded over mesh axes — u8 wire.
+
+    The cross-device sibling of :func:`fp8_wire_allgather`, for the
+    *simulated cohort* instead of silos: each device holds a stacked
+    ``(L, ...)`` tree of locally-trained client models (the output of a
+    per-shard ClientExecutor) plus one uplink key per client. Every client
+    encodes on its OWN clipping grid — no ``sync_alphas``: unlike the silo
+    collectives above, the per-client clip values are *trained state* that
+    must survive the wire, so they ride FP32 with the other leaves — and
+    the device's whole contribution crosses the wire as a single
+    contiguous ``(L, total)`` uint8 codes buffer in ONE all-gather.
+    The global ``(D*L, ...)`` stack is decoded locally in cohort order
+    (device-major, matching an unsharded vmap over the same cohort), which
+    is exactly what a server receiving every client's payload observes.
+
+    ``n_keep`` slices the gathered cohort before decode — the sharded
+    executor pads the cohort up to a multiple of the axis size and the
+    wrapped padding rows carry no information. ``mode='none'`` falls back
+    to an FP32 all-gather (the uncompressed leg), as does a tree with no
+    quantized leaves.
+    """
+    from . import wire
+
+    def gather(x):
+        g = jax.lax.all_gather(x, axis_names)
+        return g.reshape((-1,) + x.shape[1:])
+
+    def keep(tree):
+        if n_keep is None:
+            return tree
+        return jax.tree.map(lambda x: x[:n_keep], tree)
+
+    if mode == "none":
+        return keep(jax.tree.map(gather, stacked))
+    spec = wire.make_wire_spec(jax.tree.map(lambda x: x[0], stacked))
+    if not spec.q_slots:
+        return keep(jax.tree.map(gather, stacked))
+    payloads = jax.vmap(
+        lambda p, k: wire.encode(p, spec, k, fmt=fmt, mode=mode)
+    )(stacked, keys)
+    # the single compressed collective: (L, total) u8 per device
+    codes_g = gather(payloads["codes"])
+    other_g = tuple(gather(o) for o in payloads["other"])
+    if n_keep is not None:
+        codes_g = codes_g[:n_keep]
+        other_g = tuple(o[:n_keep] for o in other_g)
+    return jax.vmap(
+        lambda c, o: wire.decode({"codes": c, "other": o}, spec, fmt=fmt)
+    )(codes_g, other_g)
+
+
 def fp8_wire_allreduce_mean(
     params: PyTree,
     key: Array,

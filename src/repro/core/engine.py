@@ -20,9 +20,14 @@ be swapped independently:
   is the original full-cohort vmap; ``ChunkedExecutor(chunk)`` scans over
   chunks-of-vmap so peak live memory (per-client optimizer state,
   activations, scan residuals) is O(chunk) instead of O(P) — this is what
-  lets cohort sizes reach the thousands on fixed memory. The two are
-  bit-identical under the same key: every client sees the same
-  ``(params, data, key)`` triple either way.
+  lets cohort sizes reach the thousands on fixed memory.
+  ``ShardedExecutor(mesh, axis)`` spreads the cohort axis across a named
+  device mesh axis with ``shard_map`` — each device trains P/D clients
+  (optionally chunk-scanned, so per-device live memory is O(chunk)) and
+  contributes its shard of the uplink as ONE contiguous uint8 payload to a
+  single compressed all-gather (``compression.fp8_wire_allgather_clients``).
+  All three are bit-identical under the same key: every client sees the
+  same ``(params, data, key)`` triple regardless of the schedule.
 * **Aggregator** — the server tail, now allowed to carry *state* across
   rounds. ``MeanAggregator`` (weighted mean), ``ServerOptAggregator``
   (UQ+ ``server_optimize``), and the stateful ``FedAvgM`` / ``FedAdam``
@@ -96,6 +101,11 @@ class FedConfig:
     down_mode: str | None = None        # None -> comm_mode
     up_mode: str | None = None          # None -> comm_mode
     aggregator: str = "auto"      # 'auto'|'mean'|'server_opt'|'fedavgm'|'fedadam'
+    # cohort device mesh: shard the sampled-client axis over `client_axis`
+    # of this jax.sharding.Mesh (ShardedExecutor; composes with `chunk` —
+    # each shard scans chunks). None = legacy single-device execution.
+    mesh: Any = None
+    client_axis: str = "clients"
     # stateful-aggregator hyperparameters; None = that aggregator's own
     # class default (FedAvgM lr 1.0 / beta 0.9; FedAdam lr 0.1, beta2
     # 0.99, tau 1e-3) — so config and CLI paths agree on the defaults
@@ -274,6 +284,21 @@ class WireLink:
             lambda pl: wire.decode(pl, spec, fmt=self.up_fmt)
         )(payloads)
 
+    def up_gather(self, client_params: PyTree, keys: Array, axis: str,
+                  n_keep: int) -> PyTree:
+        """Uplink for the sharded executor (called INSIDE shard_map): this
+        device's ``(L, ...)`` client stack encodes with the same per-client
+        keys :meth:`up` would use, crosses the wire as a single u8 payload
+        buffer in one all-gather, and decodes replicated — the global
+        ``(n_keep, ...)`` stack every device then holds is bit-identical to
+        what the unsharded :meth:`up` emits for the same cohort."""
+        from .compression import fp8_wire_allgather_clients
+
+        return fp8_wire_allgather_clients(
+            client_params, keys, (axis,), fmt=self.up_fmt,
+            mode=self.up_mode, n_keep=n_keep,
+        )
+
     def _leg_bytes(self, mode: str, spec: wire.WireSpec) -> int:
         if self._on_wire(mode, spec):
             return wire.payload_nbytes(spec)
@@ -305,6 +330,35 @@ def hybrid_link(mode: str = "rand") -> WireLink:
 # ---------------------------------------------------------------------------
 
 
+def _run_width_two(run, data: Array, labels: Array, keys: Array):
+    """Run a width-1 client batch at width 2: duplicate the client, run,
+    slice the copy back off. XLA collapses a batch-1 dot to an unbatched
+    GEMM whose accumulation order differs from the batched lowering, so a
+    degenerate schedule (``chunk=1``, or more devices than clients) would
+    silently break the executors' bitwise schedule-invariance contract;
+    widths >= 2 lower to the same per-slice GEMM. The ONE owner of this
+    workaround — every executor path routes its width-1 case here."""
+    dup = lambda x: jnp.concatenate([x, x], axis=0)
+    out = run(dup(data), dup(labels), dup(keys))
+    return jax.tree.map(lambda x: x[:1], out)
+
+
+def _client_vmap(local_update, down: PyTree, data: Array, labels: Array,
+                 keys: Array, *, min_width_two: bool = False):
+    """vmap ``local_update`` over the client axis.
+
+    ``min_width_two`` routes a width-1 batch through :func:`_run_width_two`.
+    Callers set it only when the FULL cohort is wider than 1 — a true
+    single-client cohort must keep the width-1 lowering to match
+    :class:`VmapExecutor` on the same cohort.
+    """
+    v = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
+    run = lambda d, l, k: v(down, d, l, k)
+    if min_width_two and data.shape[0] == 1:
+        return _run_width_two(run, data, labels, keys)
+    return run(data, labels, keys)
+
+
 class VmapExecutor:
     """Full-cohort vmap (the original path): every client trains
     simultaneously, replicating per-client optimizer state and activations
@@ -312,9 +366,7 @@ class VmapExecutor:
 
     def __call__(self, local_update, down: PyTree, data: Array,
                  labels: Array, keys: Array):
-        return jax.vmap(local_update, in_axes=(None, 0, 0, 0))(
-            down, data, labels, keys
-        )
+        return _client_vmap(local_update, down, data, labels, keys)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -348,9 +400,8 @@ class ChunkedExecutor:
 
         def body(_, args):
             d, l, k = args
-            out = jax.vmap(local_update, in_axes=(None, 0, 0, 0))(
-                down, d, l, k
-            )
+            out = _client_vmap(local_update, down, d, l, k,
+                               min_width_two=P > 1)
             return None, out
 
         _, (stacked, losses) = jax.lax.scan(
@@ -358,6 +409,92 @@ class ChunkedExecutor:
         )
         unstack = lambda x: x.reshape((n_chunks * C,) + x.shape[2:])[:P]
         return jax.tree.map(unstack, stacked), unstack(losses)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedExecutor:
+    """Shard the cohort axis over a named mesh axis with ``shard_map``.
+
+    Each of the D devices on ``mesh.shape[axis]`` trains ``ceil(P / D)``
+    clients — through the *inner* executor: a full local vmap, or a
+    :class:`ChunkedExecutor` scan when ``chunk`` is set, so per-device
+    live training memory is O(chunk) regardless of both P and D. A ragged
+    cohort (P not a multiple of D) is padded by wrapping the first cohort
+    rows, exactly like the chunked schedule pads its tail; padded outputs
+    are sliced off after the gather, so the result is bit-identical to
+    :class:`VmapExecutor` under the same key.
+
+    Called standalone (the plain executor protocol), the per-shard outputs
+    are all-gathered in FP32 — that is the benchmarking/measurement path.
+    Inside a :class:`RoundEngine` round the engine instead fuses the uplink
+    INTO the shard (``WireLink.up_gather``): each device's clients encode
+    their wire payloads locally and the only cohort-sized collective moves
+    uint8 codes, one contiguous buffer per device — the
+    ``compression.fp8_wire_allreduce_mean`` wire discipline applied to the
+    simulated cohort.
+    """
+
+    mesh: Any                     # jax.sharding.Mesh with `axis` in axis_names
+    axis: str = "clients"
+    chunk: int | None = None      # inner ChunkedExecutor; None = local vmap
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh has axes {self.mesh.axis_names}, no {self.axis!r}"
+            )
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def _inner(self):
+        return ChunkedExecutor(self.chunk) if self.chunk else VmapExecutor()
+
+    def pad_to_shards(self, cohort: int) -> tuple[int, int]:
+        """(clients per shard, padded cohort) for a cohort of P clients."""
+        local = -(-cohort // self.n_shards)
+        return local, local * self.n_shards
+
+    def run_shard(self, local_update, down: PyTree, d: Array, l: Array,
+                  k: Array, cohort: int):
+        """The inner executor over ONE shard's clients. A single-client
+        shard of a wider cohort runs through :func:`_run_width_two` so the
+        vmap keeps the batched-GEMM lowering — more devices than clients
+        must stay bitwise equal to the width->=2 schedules."""
+        inner = self._inner()
+        run = lambda d_, l_, k_: inner(local_update, down, d_, l_, k_)
+        if d.shape[0] == 1 and cohort > 1:
+            return _run_width_two(run, d, l, k)
+        return run(d, l, k)
+
+    def __call__(self, local_update, down: PyTree, data: Array,
+                 labels: Array, keys: Array):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        P = data.shape[0]
+        _, padded = self.pad_to_shards(P)
+        pad_idx = jnp.arange(padded, dtype=jnp.int32) % P
+        axis = self.axis
+
+        def shard_fn(dn, d, l, k):
+            out = self.run_shard(local_update, dn, d, l, k, P)
+
+            def gather(x):
+                # (L, ...) per shard -> (D, L, ...) -> cohort order -> [:P]
+                g = jax.lax.all_gather(x, axis)
+                return g.reshape((-1,) + x.shape[1:])[:P]
+
+            return jax.tree.map(gather, out)
+
+        sh = PartitionSpec(axis)
+        return shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(PartitionSpec(), sh, sh, sh),
+            out_specs=(PartitionSpec(), PartitionSpec()),
+            check_rep=False,
+        )(down, data[pad_idx], labels[pad_idx], keys[pad_idx])
 
 
 # ---------------------------------------------------------------------------
@@ -481,6 +618,19 @@ _SAMPLERS = {
 }
 
 
+def _exact_round_bytes(link: WireLink, spec: wire.WireSpec, cohort: int) -> int:
+    """P x (down leg + up leg), each leg at its real payload size — static
+    at trace time. int32 keeps the count EXACT (f32 rounds integers above
+    2^24 ~ 16.7 MB, well inside the simulator's round sizes)."""
+    total = cohort * (link.down_bytes(spec) + link.up_bytes(spec))
+    if total >= 2 ** 31:
+        raise ValueError(
+            f"round moves {total} bytes — exceeds the int32 "
+            "wire_bytes metric; this simulator targets sub-GiB rounds"
+        )
+    return total
+
+
 def make_aggregator(kind: str, *, lr: float | None = None,
                     momentum: float | None = None,
                     beta2: float | None = None, eps: float | None = None,
@@ -521,7 +671,12 @@ def _stages_from_config(cfg: FedConfig):
     u_fmt, u_mode = cfg.resolved_up
     link = WireLink(down_fmt=d_fmt, up_fmt=u_fmt,
                     down_mode=d_mode, up_mode=u_mode)
-    executor = ChunkedExecutor(cfg.chunk) if cfg.chunk else VmapExecutor()
+    if cfg.mesh is not None:
+        executor = ShardedExecutor(cfg.mesh, cfg.client_axis, chunk=cfg.chunk)
+    elif cfg.chunk:
+        executor = ChunkedExecutor(cfg.chunk)
+    else:
+        executor = VmapExecutor()
     aggregator = make_aggregator(
         cfg.resolved_aggregator, lr=cfg.server_lr,
         momentum=cfg.server_momentum, beta2=cfg.server_beta2,
@@ -575,11 +730,15 @@ class RoundEngine:
     def round_bytes(self, params: PyTree) -> int:
         """Static per-round wire bytes: P x (down leg + up leg), each leg at
         its real payload size."""
-        spec = wire.make_wire_spec(params)
-        P = self.cohort
-        return P * (self.link.down_bytes(spec) + self.link.up_bytes(spec))
+        return _exact_round_bytes(self.link, wire.make_wire_spec(params),
+                                  self.cohort)
 
     def _build_round(self):
+        if isinstance(self.executor, ShardedExecutor):
+            return self._build_sharded_round()
+        return self._build_local_round()
+
+    def _build_local_round(self):
         cfg = self.cfg
         P = self.cohort
         sampler, link, executor, aggregator = (
@@ -608,6 +767,14 @@ class RoundEngine:
             client_params, losses = executor(
                 local_update, down, data[idx], labels[idx], loc_keys
             )
+            # pin the stage boundary: without the barrier XLA fuses the
+            # training tail into the uplink encode and the fused lowering
+            # (and hence the last-ULP accumulation order) would depend on
+            # the CONSUMER — the executor contract is that every schedule
+            # computes the same client params, so materialize them here
+            client_params, losses = jax.lax.optimization_barrier(
+                (client_params, losses)
+            )
 
             # --- stage 2b: uplink ----------------------------------------
             msgs = link.up(client_params, spec, k_up, P)
@@ -617,21 +784,116 @@ class RoundEngine:
                 server_params, msgs, nk_sel, k_srv, state.opt
             )
 
-            # --- exact byte accounting (static at trace time) ------------
-            round_total = P * (link.down_bytes(spec) + link.up_bytes(spec))
-            # int32 keeps the count EXACT (f32 rounds integers above
-            # 2^24 ~ 16.7 MB, well inside the simulator's round sizes)
-            if round_total >= 2 ** 31:
-                raise ValueError(
-                    f"round moves {round_total} bytes — exceeds the int32 "
-                    "wire_bytes metric; this simulator targets sub-GiB rounds"
-                )
             return ServerState(new_params, new_opt), {
                 "local_loss": jnp.mean(losses),
                 # exact bytes moved this round: P uplink payloads + P
                 # downlink copies of the broadcast (Figure 1 accounting),
                 # each leg charged at its own payload size
-                "wire_bytes": jnp.asarray(round_total, jnp.int32),
+                "wire_bytes": jnp.asarray(
+                    _exact_round_bytes(link, spec, P), jnp.int32
+                ),
+            }
+
+        return round_fn
+
+    def _build_sharded_round(self):
+        """The :class:`ShardedExecutor` round: executor + uplink fused into
+        one ``shard_map`` so the cohort-sized collective moves uint8.
+
+        Same key-split order and per-client ``(params, data, key)`` triples
+        as the local round — the only changes are WHERE each client trains
+        (device ``i * D // P_pad``) and HOW its payload reaches the server
+        (one u8 all-gather instead of a local vmap), so the result is
+        bit-identical to :class:`VmapExecutor` under the same key. The
+        downlink broadcast and the aggregator tail run replicated outside
+        the shard: every device holds the same server params and, after the
+        gather, the same cohort stack, so those stages are device-count
+        invariant by construction.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        P = self.cohort
+        ex: ShardedExecutor = self.executor
+        mesh, axis = ex.mesh, ex.axis
+        _, padded = ex.pad_to_shards(P)
+        sampler, link, aggregator = self.sampler, self.link, self.aggregator
+        local_update = self._local_update
+
+        def round_fn(state: ServerState, data: Array, labels: Array,
+                     nk: Array, key: Array):
+            server_params = state.params
+            k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
+
+            spec = wire.make_wire_spec(server_params)
+
+            # --- stage 1: cohort selection (replicated) ------------------
+            idx = sampler(nk, k_sel)
+            nk_sel = nk[idx]
+
+            # --- stage 2a: downlink (replicated: ONE encode+decode) ------
+            down = link.down(server_params, spec, k_down)
+
+            # same fan-out as the local round; the pad wraps cohort rows
+            # (keys included) so padded clients are exact duplicates whose
+            # outputs are sliced off inside the shard
+            loc_keys = jax.random.split(k_loc, P)
+            up_keys = jax.random.split(k_up, P)
+            pad_idx = jnp.arange(padded, dtype=jnp.int32) % P
+            sel = idx[pad_idx]
+
+            # --- stages 3 + 2b: per-shard training, u8 uplink gather -----
+            def shard_fn(dn, d, l, lk, uk):
+                client_params, losses = ex.run_shard(
+                    local_update, dn, d, l, lk, P
+                )
+                # same stage-boundary pin as the local round: the per-shard
+                # training must not fuse into the encode it feeds
+                client_params, losses = jax.lax.optimization_barrier(
+                    (client_params, losses)
+                )
+                msgs = link.up_gather(client_params, uk, axis, n_keep=P)
+                g = jax.lax.all_gather(losses, axis)
+                return msgs, g.reshape(-1)[:P]
+
+            sh = PartitionSpec(axis)
+            msgs, losses = shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(PartitionSpec(), sh, sh, sh, sh),
+                out_specs=(PartitionSpec(), PartitionSpec()),
+                check_rep=False,
+            )(down, data[sel], labels[sel], loc_keys[pad_idx],
+              up_keys[pad_idx])
+
+            # --- stage 4: server aggregation (replicated) ----------------
+            # inside its own fully-replicated shard_map: left to GSPMD, the
+            # partitioner shards the (P, ...) client axis whenever D
+            # divides P and the cross-device psum REASSOCIATES the
+            # aggregator's float reductions (weighted_mean, moments) — a
+            # silent mesh-size-dependent drift. Manual mode pins every
+            # reduction to the same local, sequential lowering the
+            # single-device round uses.
+            rep = PartitionSpec()
+
+            def tail_fn(sp, m, w, k, st, ls):
+                new_p, new_o = aggregator(sp, m, w, k, st)
+                return new_p, new_o, jnp.mean(ls)
+
+            new_params, new_opt, mean_loss = shard_map(
+                tail_fn, mesh=mesh,
+                in_specs=(rep, rep, rep, rep, rep, rep),
+                out_specs=(rep, rep, rep),
+                check_rep=False,
+            )(server_params, msgs, nk_sel, k_srv, state.opt, losses)
+
+            return ServerState(new_params, new_opt), {
+                "local_loss": mean_loss,
+                # logical round bytes are schedule-invariant: P clients
+                # still exchange one model copy per leg (the u8 gather IS
+                # the uplink payloads, merely batched per device)
+                "wire_bytes": jnp.asarray(
+                    _exact_round_bytes(link, spec, P), jnp.int32
+                ),
             }
 
         return round_fn

@@ -8,9 +8,14 @@ quantities in the paper's Table 1 / Figure 2.
 
 Scale target: LeNet/MLP/MatchboxNet/KWT-class models with K in the
 hundreds on CPU — or thousands with ``FedConfig.chunk`` set, which swaps
-the full-cohort vmap for the O(chunk)-memory chunked executor. Pod-scale
-federated training of the assigned LM architectures lives in
-``repro.launch.train`` instead.
+the full-cohort vmap for the O(chunk)-memory chunked executor. With
+``FedConfig.mesh`` set the cohort additionally spreads over a named
+``clients`` device mesh axis (``engine.ShardedExecutor``): the simulator
+places the per-client dataset stacks across the mesh
+(``sharding.policy.cohort_sharding``), every device trains P/D clients
+(chunk-scanned when both knobs are set) and ships one uint8 payload per
+round leg. Pod-scale federated training of the assigned LM architectures
+lives in ``repro.launch.train`` instead.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import metrics
-from .engine import FedConfig, RoundEngine, ServerState
+from .engine import FedConfig, RoundEngine, ServerState, ShardedExecutor
 from ..optim.base import Optimizer
 
 Array = jax.Array
@@ -83,6 +88,18 @@ class FedSim:
             sampler=sampler, link=link, executor=executor,
             aggregator=aggregator,
         )
+        ex = self.engine.executor
+        if isinstance(ex, ShardedExecutor):
+            # spread the per-client dataset stacks over the client mesh axis
+            # (each device holds K/D clients' data); nk and the model stay
+            # replicated — the sampler and aggregator run on every device
+            from ..sharding.policy import cohort_sharding
+
+            self.client_data, self.client_labels = jax.device_put(
+                (self.client_data, self.client_labels),
+                cohort_sharding(ex.mesh, ex.axis,
+                                (self.client_data, self.client_labels)),
+            )
         self.state: ServerState = self.engine.init(params)
         self._round = jax.jit(self.engine.round_fn)
         # static estimate, honoring per-direction link modes; asserted equal

@@ -22,6 +22,26 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_client_mesh(n: int | None = None,
+                     axis: str = "clients") -> jax.sharding.Mesh:
+    """The first ``n`` local devices (default: all) on ONE named axis — the
+    mesh ``repro.core.engine.ShardedExecutor`` spreads the federated cohort
+    over. On a CPU host, force virtual devices the dryrun way
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, before jax
+    initializes) to exercise the multi-device path without hardware."""
+    import numpy as np
+
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"requested a {n}-device client mesh but only {len(devs)} "
+            "devices exist (set xla_force_host_platform_device_count?)"
+        )
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))
+
+
 # Hardware constants for the roofline model (TPU v5e per chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

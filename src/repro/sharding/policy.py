@@ -203,6 +203,33 @@ class ShardingPolicy:
         }
 
 
+def cohort_spec(shape: tuple, axis: str) -> P:
+    """Leading-axis (client) sharding for cohort/dataset-stacked arrays."""
+    if len(shape) == 0:
+        return P()
+    return P(axis, *([None] * (len(shape) - 1)))
+
+
+def cohort_sharding(mesh: Mesh, axis: str, tree: PyTree) -> PyTree:
+    """NamedShardings spreading the leading (client) axis of every leaf
+    over ``axis`` — how ``FedSim`` places the per-client dataset stacks
+    when driving a ``ShardedExecutor``, so each device holds K/D clients'
+    data instead of all K. Falls back to replication when the axis size
+    does not divide the leading dim (same rule as ``ShardingPolicy._fit``:
+    jit rejects ragged explicit shardings)."""
+    n = int(mesh.shape[axis])
+
+    def one(leaf):
+        spec = (
+            cohort_spec(leaf.shape, axis)
+            if leaf.ndim and leaf.shape[0] % n == 0
+            else P()
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, tree)
+
+
 def param_sharding(mesh: Mesh, tree: PyTree) -> PyTree:
     return ShardingPolicy(mesh).params(tree)
 

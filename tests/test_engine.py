@@ -189,6 +189,74 @@ def test_sampler_override_with_different_cohort():
     assert int(m["wire_bytes"]) == 2 * spec_bytes  # P=2, not 3
 
 
+def test_weighted_sampler_inclusion_proportional_to_nk():
+    """Gumbel top-1 IS the Gumbel-max trick: client i's inclusion
+    probability is exactly nk_i / sum(nk). 4000 seeded draws, chi-squared
+    against the proportional expectation — the statistic must sit far
+    below the p=0.001 critical value (df=5 -> 20.5). A broken perturbation
+    (wrong scale, shared gumbel, missing log) inflates it by orders of
+    magnitude."""
+    nk = jnp.asarray([1.0, 2.0, 3.0, 6.0, 12.0, 24.0])
+    sampler = WeightedSampler(6, 1)
+    n_draws = 4000
+    keys = jax.random.split(jax.random.PRNGKey(123), n_draws)
+    picks = np.asarray(jax.vmap(lambda k: sampler(nk, k)[0])(keys))
+    counts = np.bincount(picks, minlength=6)
+    expected = np.asarray(nk) / float(np.sum(np.asarray(nk))) * n_draws
+    chi2 = float(np.sum((counts - expected) ** 2 / expected))
+    assert chi2 < 20.5, (chi2, counts.tolist(), expected.tolist())
+
+
+def test_weighted_sampler_without_replacement_statistics():
+    """Cohorts of 2 of 6: never a duplicate in any draw, and the heaviest
+    client's inclusion frequency dominates the lightest's by roughly the
+    weight ratio direction (PPSWOR monotonicity)."""
+    nk = jnp.asarray([1.0, 2.0, 3.0, 6.0, 12.0, 24.0])
+    sampler = WeightedSampler(6, 2)
+    keys = jax.random.split(jax.random.PRNGKey(7), 1500)
+    cohorts = np.asarray(jax.vmap(lambda k: sampler(nk, k))(keys))
+    assert all(len(set(row.tolist())) == 2 for row in cohorts), \
+        "weighted cohort drew a client twice"
+    incl = np.bincount(cohorts.reshape(-1), minlength=6) / len(cohorts)
+    assert np.all(np.diff(incl) > 0), f"inclusion not monotone in nk: {incl}"
+    assert incl[5] > 5 * incl[0]
+
+
+def test_uniform_sampler_statistics():
+    """Uniform without replacement: unique indices every draw and marginal
+    inclusion uniform at cohort/n (chi-squared, p=0.001 critical for df=7
+    is 24.3)."""
+    nk = jnp.ones((8,))
+    sampler = UniformSampler(8, 3)
+    n_draws = 2000
+    keys = jax.random.split(jax.random.PRNGKey(31), n_draws)
+    cohorts = np.asarray(jax.vmap(lambda k: sampler(nk, k))(keys))
+    assert all(len(set(row.tolist())) == 3 for row in cohorts)
+    counts = np.bincount(cohorts.reshape(-1), minlength=8)
+    expected = np.full(8, n_draws * 3 / 8)
+    chi2 = float(np.sum((counts - expected) ** 2 / expected))
+    assert chi2 < 24.3, (chi2, counts.tolist())
+    # nk must be IGNORED: skewed weights give the same cohort per key
+    skew = jnp.asarray([1.0, 100.0] * 4)
+    for k in keys[:10]:
+        np.testing.assert_array_equal(np.asarray(sampler(nk, k)),
+                                      np.asarray(sampler(skew, k)))
+
+
+def test_fixed_cohort_sampler_deterministic():
+    """The cross-silo cohort must not depend on the round key or nk."""
+    nk = jnp.asarray([3.0, 1.0, 4.0, 1.0, 5.0, 9.0])
+    for sampler, want in (
+        (FixedCohortSampler(6, 3), [0, 1, 2]),
+        (FixedCohortSampler(6, 3, indices=(4, 0, 5)), [4, 0, 5]),
+    ):
+        seen = {
+            tuple(np.asarray(sampler(nk, jax.random.PRNGKey(s))).tolist())
+            for s in range(25)
+        }
+        assert seen == {tuple(want)}, seen
+
+
 def test_weighted_sampler_prefers_heavy_clients():
     """nk-weighted sampling: clients with 100x the data must appear in the
     cohort far more often than the light ones."""

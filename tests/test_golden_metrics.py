@@ -1,0 +1,149 @@
+"""Golden-metrics regression: one seeded round per engine variant.
+
+Every stage combination from the engine grid (sampler x link x executor x
+aggregator) runs ONE deterministic round and is pinned against the
+checked-in goldens in ``tests/goldens/engine_goldens.json``:
+
+* ``wire_bytes`` — exact integer equality (any cohort/link/payload drift
+  fails immediately);
+* ``local_loss`` and per-leaf ``(mean, l2)`` fingerprints of the new
+  server model — tight relative tolerance (2e-5). A semantic regression
+  (key-split reorder, stage rewiring, rounding-mode confusion, changed
+  sampler) shifts these by orders of magnitude more; last-ULP platform
+  noise (different SIMD widths re-tiling XLA:CPU's GEMMs) sits ~100x
+  below it. Numeric drift in any stage therefore fails THIS fast unit
+  test instead of surfacing as a slow-lane convergence flake.
+
+Regenerating the goldens (after an INTENDED numerics change — review the
+diff of the JSON, it is the contract):
+
+    PYTHONPATH=src python tests/test_golden_metrics.py --regen
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core.engine import FedConfig, RoundEngine
+from repro.core.qat import (
+    DISABLED,
+    QATConfig,
+    clip_value_mask,
+    weight_decay_mask,
+)
+from repro.core.fp8 import E5M2
+from repro.core.server_opt import ServerOptConfig
+from repro.data import partition_iid, synthetic_classification
+from repro.models import small
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "engine_goldens.json")
+
+_BASE = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8)
+
+# id -> FedConfig kwargs beyond _BASE; one variant per engine knob value
+VARIANTS = {
+    "uniform_rand_mean": dict(comm_mode="rand", qat=QATConfig()),
+    "weighted_rand_mean": dict(comm_mode="rand", qat=QATConfig(),
+                               sampler="weighted"),
+    "fixed_det_mean": dict(comm_mode="det", qat=QATConfig(),
+                           sampler="fixed"),
+    "uniform_fp32_mean": dict(comm_mode="none", qat=DISABLED),
+    "hybrid_rand_mean": dict(comm_mode="rand", qat=QATConfig(),
+                             up_fmt=E5M2),
+    "fp32down_fp8up_mean": dict(comm_mode="rand", qat=QATConfig(),
+                                down_mode="none"),
+    "chunked_rand_mean": dict(comm_mode="rand", qat=QATConfig(), chunk=2),
+    "uniform_rand_fedavgm": dict(comm_mode="rand", qat=QATConfig(),
+                                 aggregator="fedavgm", server_lr=1.0,
+                                 server_momentum=0.9),
+    "uniform_rand_fedadam": dict(comm_mode="rand", qat=QATConfig(),
+                                 aggregator="fedadam", server_lr=0.05),
+    "uniform_rand_serveropt": dict(
+        comm_mode="rand", qat=QATConfig(),
+        server_opt=ServerOptConfig(enabled=True, gd_steps=2, lr=0.1,
+                                   n_grid=5),
+    ),
+}
+
+
+def _setup():
+    xall, yall = synthetic_classification(0, 900, d=16, n_classes=4)
+    cx, cy, nk = partition_iid(xall[:600], yall[:600], k=6, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=16, n_classes=4)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    return params, loss, opt, (jnp.asarray(cx), jnp.asarray(cy),
+                               jnp.asarray(nk))
+
+
+def _round_metrics(variant: str) -> dict:
+    params, loss, opt, data = _setup()
+    cfg = FedConfig(**_BASE, **VARIANTS[variant])
+    eng = RoundEngine(loss, opt, cfg)
+    state, m = jax.jit(eng.round_fn)(eng.init(params), *data,
+                                     jax.random.PRNGKey(42))
+    flat = jax.tree_util.tree_flatten_with_path(state.params)[0]
+    leaves = {}
+    for path, leaf in flat:
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        arr = np.asarray(leaf, np.float64)
+        leaves[name] = [float(arr.mean()), float(np.linalg.norm(arr))]
+    return {
+        "wire_bytes": int(m["wire_bytes"]),
+        "local_loss": float(m["local_loss"]),
+        "leaves": leaves,
+    }
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_golden_metrics(variant):
+    with open(GOLDEN_PATH) as f:
+        goldens = json.load(f)
+    assert variant in goldens["variants"], (
+        f"no golden for {variant!r} — regenerate: "
+        "PYTHONPATH=src python tests/test_golden_metrics.py --regen"
+    )
+    want = goldens["variants"][variant]
+    got = _round_metrics(variant)
+    assert got["wire_bytes"] == want["wire_bytes"], (
+        variant, got["wire_bytes"], want["wire_bytes"])
+    np.testing.assert_allclose(
+        got["local_loss"], want["local_loss"], rtol=2e-5,
+        err_msg=f"{variant}: local_loss drifted")
+    assert got["leaves"].keys() == want["leaves"].keys(), variant
+    for name, (mean, l2) in got["leaves"].items():
+        wm, wl = want["leaves"][name]
+        np.testing.assert_allclose(
+            [mean, l2], [wm, wl], rtol=2e-5, atol=1e-7,
+            err_msg=f"{variant}/{name}: params fingerprint drifted "
+                    "(intended? regen via tests/test_golden_metrics.py)")
+
+
+def _regen():
+    out = {
+        "_regen": "PYTHONPATH=src python tests/test_golden_metrics.py --regen",
+        "_seed": 42,
+        "_jax": jax.__version__,
+        "variants": {v: _round_metrics(v) for v in sorted(VARIANTS)},
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(out['variants'])} goldens to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

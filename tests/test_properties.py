@@ -1,4 +1,5 @@
-"""Property-based tests of the paper's theoretical claims (Appendix A-C).
+"""Property-based tests of the paper's theoretical claims (Appendix A-C)
+and of the flat-buffer wire codec (``core.wire``).
 
 Each lemma/remark that the convergence proof leans on is checked
 executably with hypothesis-generated inputs:
@@ -12,6 +13,16 @@ executably with hypothesis-generated inputs:
 * Grid structure — symmetric around zero, bin sizes monotonically
              non-decreasing away from zero (the property Lemma 5's proof
              requires of FP8).
+
+The wire-codec suite (bottom half) generates arbitrary param pytrees —
+ragged/odd leaf shapes straddling the LANE width, stacked per-layer alpha
+slabs, FP32 ride-along leaves — and checks the codec's load-bearing
+invariants for every (format, mode) pair: the payload is EXACTLY 1 byte
+per quantized element, encode->decode lands on the format's grid and is a
+fixed point (re-encoding a decoded model reproduces it bitwise — grid
+points quantize to themselves in both det and rand modes), riders pass
+through untouched, and the fused fake-quant ``roundtrip`` observes the
+same values a payload receiver would decode.
 """
 import jax
 import jax.numpy as jnp
@@ -23,7 +34,7 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
-from repro.core import fp8
+from repro.core import fp8, wire
 from repro.core.fp8 import E4M3, E5M2
 
 FMTS = [E4M3, E5M2]
@@ -144,6 +155,150 @@ def test_rand_quant_lands_on_grid():
     full = np.concatenate([-grid[::-1], grid])
     dist = np.min(np.abs(q[:, None] - full[None, :]), axis=1)
     assert dist.max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Wire codec properties (core/wire.py): arbitrary pytrees on the payload
+# ---------------------------------------------------------------------------
+
+# ragged/odd leaf dims, deliberately straddling the LANE (1024) tile width
+_dims = st.integers(min_value=1, max_value=67)
+_wide = st.integers(min_value=1, max_value=1300)
+
+
+@st.composite
+def wire_trees(draw):
+    """A params-like pytree: 1-2 quantized (w, w_qa) pairs with ragged
+    shapes, optionally a stacked-alpha slab (L, r, c) whose clipping value
+    is per-layer (L, 1, 1), plus FP32 ride-along leaves (a bias and an
+    odd-size 1-D vector that must cross the wire untouched)."""
+    from repro.core.qat import alpha_like
+
+    seed = draw(st.integers(0, 2**31 - 1))
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    n_q = draw(st.integers(1, 2))
+    for i in range(n_q):
+        r, c = draw(_dims), draw(_wide)
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (r, c)) * draw(
+            st.floats(0.01, 10.0, allow_nan=False, width=32)
+        )
+        tree[f"w{i}"] = w
+        tree[f"w{i}_qa"] = alpha_like(w)
+    if draw(st.booleans()):
+        L, r, c = draw(st.integers(2, 3)), draw(_dims), draw(_dims)
+        key, k = jax.random.split(key)
+        slab = jax.random.normal(k, (L, r, c))
+        tree["slab"] = slab
+        tree["slab_qa"] = alpha_like(slab, stacked=True)
+    key, k = jax.random.split(key)
+    tree["b"] = jax.random.normal(k, (draw(_dims),))
+    return tree, seed
+
+
+_MODES = ["det", "rand"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(tr=wire_trees(), fmt_i=st.integers(0, 1), mode_i=st.integers(0, 1))
+def test_wire_payload_exact_bytes(tr, fmt_i, mode_i):
+    """codes is EXACTLY 1 byte per quantized element — no tile padding on
+    the wire, for any ragged shape — and payload_nbytes counts codes + 4
+    bytes per FP32 rider element."""
+    params, seed = tr
+    spec = wire.make_wire_spec(params)
+    payload = wire.encode(params, spec, jax.random.PRNGKey(seed),
+                          fmt=FMTS[fmt_i], mode=_MODES[mode_i])
+    n_q = sum(v.size for k, v in params.items()
+              if not k.endswith("_qa") and v.ndim >= 2)
+    n_other = sum(v.size for k, v in params.items()
+                  if k.endswith("_qa") or v.ndim < 2)
+    assert payload["codes"].dtype == jnp.uint8
+    assert payload["codes"].shape == (n_q,)
+    assert spec.total == n_q
+    assert wire.payload_nbytes(spec) == n_q + 4 * n_other
+    assert sum(o.size for o in payload["other"]) == n_other
+
+
+@settings(max_examples=15, deadline=None)
+@given(tr=wire_trees(), fmt_i=st.integers(0, 1), mode_i=st.integers(0, 1))
+def test_wire_roundtrip_idempotent(tr, fmt_i, mode_i):
+    """decode(encode(x)) is a fixed point of the codec: re-encoding the
+    decoded model reproduces the SAME codes and values bitwise, in det AND
+    rand mode (a grid point straddles no bin, so stochastic rounding has
+    nothing to randomize) — the invariant that makes multi-hop FP8 relays
+    drift-free."""
+    params, seed = tr
+    fmt, mode = FMTS[fmt_i], _MODES[mode_i]
+    spec = wire.make_wire_spec(params)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p1 = wire.encode(params, spec, k1, fmt=fmt, mode=mode)
+    once = wire.decode(p1, spec, fmt=fmt)
+    p2 = wire.encode(once, spec, k2, fmt=fmt, mode=mode)  # fresh key!
+    twice = wire.decode(p2, spec, fmt=fmt)
+    np.testing.assert_array_equal(np.asarray(p1["codes"]),
+                                  np.asarray(p2["codes"]))
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(tr=wire_trees(), fmt_i=st.integers(0, 1), mode_i=st.integers(0, 1))
+def test_wire_decode_on_grid_riders_untouched(tr, fmt_i, mode_i):
+    """Decoded weights are finite, clipped to their own clipping value
+    (within a few ULPs — the decoder recomputes the scale after bin-edge
+    renormalization, so the top grid point can sit ~1e-6 relative above
+    alpha) and (per-tensor-alpha leaves) land on the format's grid; FP32
+    riders — the clipping values themselves and every sub-2D leaf — cross
+    the wire bitwise."""
+    params, seed = tr
+    fmt, mode = FMTS[fmt_i], _MODES[mode_i]
+    spec = wire.make_wire_spec(params)
+    payload = wire.encode(params, spec, jax.random.PRNGKey(seed),
+                          fmt=fmt, mode=mode)
+    out = wire.decode(payload, spec, fmt=fmt)
+    for name, v in out.items():
+        if name.endswith("_qa") or v.ndim < 2:
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(params[name]),
+                                          err_msg=f"rider {name} changed")
+            continue
+        alpha = float(np.max(np.asarray(params[name + "_qa"])))
+        arr = np.asarray(v)
+        assert np.all(np.isfinite(arr)), name
+        assert np.max(np.abs(arr)) <= alpha * (1 + 1e-5), name
+        if params[name + "_qa"].size == 1:  # per-tensor grid
+            grid = fp8.quantization_grid(alpha, fmt)
+            full = np.concatenate([-grid[::-1], grid])
+            dist = np.min(np.abs(arr.reshape(-1)[:, None] - full[None, :]),
+                          axis=1)
+            assert dist.max() < 1e-5 * max(alpha, 1.0), name
+
+
+@settings(max_examples=10, deadline=None)
+@given(tr=wire_trees(), fmt_i=st.integers(0, 1), mode_i=st.integers(0, 1))
+def test_wire_roundtrip_matches_decode_of_encode(tr, fmt_i, mode_i):
+    """``wire.roundtrip`` (the fused fake-quant the simulator uses to avoid
+    materializing codes) must observe what a receiver of the real payload
+    decodes — same key, same grid point, within 1 f32 ULP *at the clipping
+    scale* (the two recompute the dequant scale in different orders);
+    riders pass through both bitwise."""
+    params, seed = tr
+    fmt, mode = FMTS[fmt_i], _MODES[mode_i]
+    spec = wire.make_wire_spec(params)
+    key = jax.random.PRNGKey(seed)
+    via_wire = wire.decode(wire.encode(params, spec, key, fmt=fmt, mode=mode),
+                           spec, fmt=fmt)
+    fused = wire.roundtrip(params, key, fmt=fmt, mode=mode, spec=spec)
+    for name in via_wire:
+        a, b = np.asarray(via_wire[name]), np.asarray(fused[name])
+        if name.endswith("_qa") or a.ndim < 2:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+            continue
+        alpha = float(np.max(np.asarray(params[name + "_qa"])))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=4e-7 * alpha,
+                                   err_msg=name)
 
 
 def test_pack_unpack_roundtrip_both_formats():
