@@ -203,6 +203,36 @@ def _codec_benches(rows):
     mbps = (q.size / (t_pack / 1e6)) / 1e6
     _row(rows, "wire_pack_uint8", t_pack, f"{mbps:.0f} Melem/s")
 
+    # packed sub-byte codec (core.codec.PackedFpCodec): fused FP4
+    # encode/decode on the same (R, LANE) plane as the FP8 wire —
+    # 2 codes/byte, so the payload (and the u8 collective) halves
+    from repro.core.fp8 import FP4_E2M1
+
+    R = 512
+    x2 = jax.random.normal(jax.random.PRNGKey(7), (R, fp8_quant.WIRE_LANE),
+                           jnp.float32)
+    a2 = jnp.full((R, 1), 2.5, jnp.float32)
+    key2 = jnp.asarray([1, 2], jnp.uint32)
+    t8 = _time(lambda: fp8_quant.quant_pack_tiles(
+        x2, a2, key2, interpret=True))
+    t4 = _time(lambda: fp8_quant.quant_pack_sub_tiles(
+        x2, a2, key2, fmt=FP4_E2M1, interpret=True))
+    n = R * fp8_quant.WIRE_LANE
+    _row(rows, "wire_encode_fp8_tiles_0p5M", t8,
+         f"fused quantize+pack, {n} B payload")
+    _row(rows, "wire_encode_fp4_packed_0p5M", t4,
+         f"fused quantize+pack at 2 codes/byte, {n // 2} B payload "
+         "(half the FP8 wire)")
+    c8 = fp8_quant.quant_pack_tiles(x2, a2, key2, interpret=True)
+    c4 = fp8_quant.quant_pack_sub_tiles(x2, a2, key2, fmt=FP4_E2M1,
+                                        interpret=True)
+    t8d = _time(lambda: fp8_quant.unpack_tiles(c8, a2, interpret=True))
+    t4d = _time(lambda: fp8_quant.unpack_sub_tiles(c4, a2, fmt=FP4_E2M1,
+                                                   interpret=True))
+    _row(rows, "wire_decode_fp8_tiles_0p5M", t8d, "fused unpack-dequantize")
+    _row(rows, "wire_decode_fp4_packed_0p5M", t4d,
+         "fused unfold+dequantize from the half-size payload")
+
 
 def _interleaved(fn_a, fn_b, *args, n=20, outer=8):
     """min-of-interleaved wall-clocks (us) so load drift cancels."""

@@ -90,6 +90,13 @@ def main():
         "uq+m":  FedConfig(comm_mode="rand", qat=QATConfig(),
                            aggregator="fedavgm", server_lr=1.0,
                            server_momentum=0.9, **base),
+        # first-class wire codecs (core.codec): sub-byte FP4 halves the
+        # quantized legs; a delta uplink ships the quantized residual
+        # against the round's broadcast (unbiased — SR of the delta)
+        "uq4":   FedConfig(comm_mode="rand", qat=QATConfig(),
+                           down_codec="fp4", up_codec="fp4", **base),
+        "uq-d":  FedConfig(comm_mode="rand", qat=QATConfig(),
+                           up_codec="delta:e4m3", **base),
     }
     for name, cfg in methods.items():
         sim = FedSim(params, loss, apply, optim.sgd(0.05, weight_decay=1e-3,

@@ -25,9 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs, optim
-from repro.core import metrics
-from repro.core.engine import FedConfig, make_aggregator, make_local_update
-from repro.core.qat import DISABLED, QATConfig, comm_quantize
+from repro.core import metrics, wire
+from repro.core.engine import (
+    FedConfig,
+    WireLink,
+    make_aggregator,
+    make_local_update,
+)
+from repro.core.qat import DISABLED, QATConfig
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.models.registry import get_model
 
@@ -49,6 +54,12 @@ def main():
                     help="drive the RoundEngine with the cohort sharded "
                          "over this many devices ('clients' axis); see the "
                          "module docstring for virtual CPU devices")
+    ap.add_argument("--codec", default=None,
+                    help="wire codec registry name for the model exchange "
+                         "(e.g. e4m3, e5m2_det, fp4, delta:e4m3); default "
+                         "= the paper's E4M3 wire. delta:* applies to the "
+                         "uplink only (its reference is the round's "
+                         "broadcast, which the downlink receiver lacks)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get("tinyllama_1_1b"))
@@ -59,11 +70,18 @@ def main():
         from repro.launch.mesh import make_client_mesh
 
         mesh = make_client_mesh(args.mesh)
+    codec_kw = {}
+    if args.codec:
+        # delta codecs ride the uplink only: the downlink receiver holds no
+        # reference model (WireLink rejects delta-down)
+        codec_kw["up_codec"] = args.codec
+        if not args.codec.startswith("delta"):
+            codec_kw["down_codec"] = args.codec
     fed = FedConfig(n_clients=args.clients, participation=args.active / args.clients,
                     local_steps=args.local_steps, batch_size=4,
                     comm_mode="none" if args.no_qat else "rand", qat=qcfg,
                     mesh=mesh, aggregator=args.server_opt,
-                    server_lr=args.server_lr)
+                    server_lr=args.server_lr, **codec_kw)
 
     # per-client disjoint token streams (different Markov structures)
     streams = [synthetic_lm_tokens(c, 40_000, cfg.vocab) for c in range(args.clients)]
@@ -73,7 +91,13 @@ def main():
 
     opt = optim.adamw(1e-3, weight_decay=0.01)
     params = model.init(jax.random.PRNGKey(0))
-    per_model = metrics.payload_bytes(params, quantized=fed.comm_mode != "none")
+    # both legs of the exchange as first-class wire codecs (core.codec);
+    # byte accounting delegates to each codec's exact payload layout
+    link = WireLink(down_codec=fed.resolved_down_codec,
+                    up_codec=fed.resolved_up_codec)
+    per_down = metrics.payload_bytes(params, codec=link.down_c)
+    per_up = metrics.payload_bytes(params, codec=link.up_c)
+    wire_desc = f"{link.down_c.tag} down / {link.up_c.tag} up"
 
     def client_batches_for(c, n):
         w = streams[c][: n * 4 * (args.seq + 1)].reshape(n, 4, args.seq + 1)
@@ -102,13 +126,23 @@ def main():
                   f"{float(m['local_loss']):.4f}  "
                   f"cum MB {total_bytes/1e6:.1f}  "
                   f"({args.mesh}-device cohort mesh)")
-        print(f"payload/model: {per_model/1e6:.2f} MB "
-              f"({'FP8' if fed.comm_mode != 'none' else 'FP32'})")
+        print(f"payload/model: {per_down/1e6:.2f} MB down, "
+              f"{per_up/1e6:.2f} MB up ({wire_desc})")
         return
 
     local_update = jax.jit(make_local_update(loss_fn, opt, fed))
     key = jax.random.PRNGKey(1)
     total_bytes = 0
+
+    # the didactic per-client loop rides the SAME codec/link API as the
+    # engine: link.down is the fused broadcast transit, and each client's
+    # uplink observes its codec's fake_quant (decode∘encode without
+    # materializing the payload) — delta codecs take the round's broadcast
+    # as their reference
+    spec = wire.make_wire_spec(params)
+    up_transit = jax.jit(
+        lambda p, k, ref: link.up_c.fake_quant(p, spec, k, ref=ref)
+    )
 
     # the server tail: same Aggregator objects the engine/simulator use;
     # stateful ones carry momentum in agg_state between rounds
@@ -120,7 +154,7 @@ def main():
         active = np.asarray(
             jax.random.permutation(k_sel, args.clients)[: args.active]
         )
-        down = comm_quantize(params, k_down, fed.fmt, fed.comm_mode)
+        down = link.down(params, spec, k_down)
         msgs, losses = [], []
         for i, c in enumerate(active):
             xb, yb = client_batches_for(int(c), fed.local_steps)
@@ -129,18 +163,17 @@ def main():
             flat_y = yb.reshape(-1, args.seq)
             p_c, l_c = local_update(down, flat_x, flat_y,
                                     jax.random.fold_in(k_loc, i))
-            msgs.append(comm_quantize(p_c, jax.random.fold_in(k_up, i),
-                                      fed.fmt, fed.comm_mode))
+            msgs.append(up_transit(p_c, jax.random.fold_in(k_up, i), down))
             losses.append(float(l_c))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *msgs)
         params, agg_state = aggregator(
             params, stacked, jnp.ones((len(active),)), k_srv, agg_state
         )
-        total_bytes += 2 * len(active) * per_model
+        total_bytes += len(active) * (per_down + per_up)
         print(f"round {r+1}: mean local loss {np.mean(losses):.4f}  "
               f"cum MB {total_bytes/1e6:.1f}")
-    print(f"payload/model: {per_model/1e6:.2f} MB "
-          f"({'FP8' if fed.comm_mode != 'none' else 'FP32'})")
+    print(f"payload/model: {per_down/1e6:.2f} MB down, "
+          f"{per_up/1e6:.2f} MB up ({wire_desc})")
 
 
 if __name__ == "__main__":

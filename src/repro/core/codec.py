@@ -1,0 +1,580 @@
+"""First-class wire codecs — pluggable compression for the federated wire.
+
+The communication layer used to thread a ``(FP8Format, mode-string)`` pair
+through ``WireLink`` / ``FedConfig`` / ``core.wire`` with a "quantized ==
+exactly 1 byte/element" assumption baked into ``core.metrics``. This module
+promotes *how bytes cross the wire* to a first-class object:
+
+``WireCodec`` protocol
+======================
+* ``encode(params, spec, key, ref=None)``  -> ``{"codes": u8[n], "other":
+  (leaf, ...)}`` — the exact payload a transmitter ships. ``codes`` is the
+  compressed weight buffer (its length is the codec's business); ``other``
+  holds the FP32 ride-along leaves.
+* ``decode(payload, spec, ref=None)``      -> the param pytree a receiver
+  reconstructs.
+* ``fake_quant(params, spec, key, ref=None)`` -> what a receiver *observes*
+  (decode∘encode) without materializing the codes — the simulator's
+  one-launch transit.
+* ``payload_nbytes(spec)`` / ``code_nbytes(spec)`` — exact static wire
+  bytes of one model copy / of the codes buffer alone. The engine's traced
+  ``wire_bytes`` metric and ``core.metrics`` both delegate here, so static
+  == traced stays exact per codec (including sub-byte and delta payloads).
+* ``tag`` — registry name; ``quantized`` — False only for the FP32 leg.
+
+``ref`` is the round's *reference model* (known to both ends of a leg);
+only :class:`DeltaCodec` uses it. Implementations:
+
+* :class:`Fp8Codec`    — today's flat-buffer FP8 wire (``core.wire``),
+  bit-for-bit: 1 byte/element, ``rounding`` 'rand' (the paper's unbiased
+  SR, Lemma 3) or 'det' (the biased Table-2 ablation).
+* :class:`Fp32Codec`   — the 'none' leg: 4 bytes/element passthrough.
+* :class:`PackedFpCodec` — sub-byte ExMy formats (Noune et al.): FP4
+  E2M1/E3M0 at 2 codes/byte through the fused pack/unpack kernels
+  (``kernels.fp8_quant.quant_pack_sub_tiles``). Halves the quantized-leg
+  payload vs FP8.
+* :class:`DeltaCodec(inner)` — transmits the quantized *residual* against
+  ``ref``; with a stochastic inner rounding the leg stays unbiased (SR of
+  the delta — the Lemma 3 machinery applied to ``params - ref``). Each
+  leaf's fresh residual clipping value rides as one extra FP32 scalar.
+* :class:`CodecSchedule` — per-round codec (e.g. E5M2 -> E4M3 -> FP4
+  precision annealing), resolved inside the jitted round via a
+  round-index operand (``lax.switch``); see ``engine.WireLink``.
+
+Registry: :func:`get_codec` maps names (``e4m3``, ``e5m2_det``, ``fp4``,
+``fp4_e3m0``, ``delta:e4m3``, ``fp32``/``none``, ...) to codec objects;
+:func:`codec_for` is the deprecation shim from the legacy ``(fmt, mode)``
+knobs. All codecs are frozen dataclasses — hashable, usable as static
+config fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8, wire
+from .fp8 import E4M3, E5M2, FP4_E2M1, FP4_E3M0, FP8Format
+from .plane import LANE, f32 as _f32, nelem as _nelem, tiles as _tiles
+from ..kernels import dispatch
+from ..kernels.fp8_quant import codes_per_byte
+
+Array = jax.Array
+PyTree = Any
+
+
+def _fp32_nbytes(spec: wire.WireSpec) -> int:
+    """Bytes of one uncompressed model copy (every element at 4 bytes)."""
+    return 4 * (spec.total + spec.n_other_elems)
+
+
+def _key_words(key: Array) -> Array:
+    """(2,) u32 words seeding the in-kernel counter RNG (same derivation as
+    ``wire._prep_tiles`` so codec and wire draws agree)."""
+    kd = key if key.dtype == jnp.uint32 else jax.random.key_data(key)
+    return kd.reshape(-1)[:2]
+
+
+def _slice_rows(buf2: Array, spec: wire.WireSpec, sizes) -> Array:
+    """Per-leaf row blocks -> one flat buffer of exactly ``sum(sizes)``.
+
+    ``buf2`` is a (n_rows, width) tile buffer whose leaf ``qi`` occupies
+    rows ``q_row_offsets[qi] .. +q_rows[qi]``; ``sizes[qi]`` is the number
+    of real entries to keep from that block (tile padding sliced off)."""
+    return jnp.concatenate([
+        buf2[r0:r0 + rows].reshape(-1)[:n]
+        for r0, rows, n in zip(spec.q_row_offsets, spec.q_rows, sizes)
+    ])
+
+
+def _rows_from_flat(flat: Array, spec: wire.WireSpec, sizes,
+                    width: int) -> Array:
+    """Inverse of :func:`_slice_rows`: flat buffer -> (n_rows, width) tiles
+    (zero padding in the tile tails, exactly where encode sliced it off)."""
+    pieces = []
+    off = 0
+    for rows, n in zip(spec.q_rows, sizes):
+        piece = flat[off:off + n]
+        off += n
+        pad = rows * width - n
+        if pad:
+            piece = jnp.concatenate(
+                [piece, jnp.zeros((pad,), piece.dtype)]
+            )
+        pieces.append(piece.reshape(rows, width))
+    return jnp.concatenate(pieces, axis=0)
+
+
+def _leaf_alpha_column(alphas: Array, spec: wire.WireSpec) -> Array:
+    """(n_q_leaves,) per-leaf scalars -> (n_rows, 1) per-row column."""
+    cols = [
+        jnp.broadcast_to(alphas[qi].reshape(()), (rows, 1))
+        for qi, rows in enumerate(spec.q_rows)
+    ]
+    return jnp.concatenate(cols, axis=0)
+
+
+class WireCodec:
+    """Protocol base: one leg's wire compression (see module docstring).
+
+    Subclasses are frozen dataclasses. ``ref`` (the round's reference
+    model) is accepted everywhere and ignored by every codec except
+    :class:`DeltaCodec`.
+    """
+
+    # NOTE: deliberately un-annotated — an annotated class attribute here
+    # would become a dataclass *field* in every frozen subclass and clash
+    # with their `tag` properties.
+    tag = "?"
+    quantized: ClassVar[bool] = True
+
+    def encode(self, params: PyTree, spec: wire.WireSpec, key: Array,
+               ref: PyTree | None = None) -> dict:
+        raise NotImplementedError
+
+    def decode(self, payload: dict, spec: wire.WireSpec,
+               ref: PyTree | None = None) -> PyTree:
+        raise NotImplementedError
+
+    def fake_quant(self, params: PyTree, spec: wire.WireSpec, key: Array,
+                   ref: PyTree | None = None) -> PyTree:
+        raise NotImplementedError
+
+    def payload_nbytes(self, spec: wire.WireSpec) -> int:
+        raise NotImplementedError
+
+    def code_nbytes(self, spec: wire.WireSpec) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp32Codec(WireCodec):
+    """FP32 passthrough — the FedAvg baseline leg (legacy ``mode='none'``).
+
+    ``encode`` ships every leaf as an FP32 rider (``codes`` is empty) so
+    the payload schema stays uniform for gather-based collectives; links
+    skip the transit entirely (``quantized`` is False)."""
+
+    quantized: ClassVar[bool] = False
+
+    @property
+    def tag(self) -> str:
+        return "fp32"
+
+    def encode(self, params, spec, key, ref=None):
+        return {
+            "codes": jnp.zeros((0,), jnp.uint8),
+            "other": tuple(jax.tree_util.tree_leaves(params)),
+        }
+
+    def decode(self, payload, spec, ref=None):
+        return jax.tree_util.tree_unflatten(
+            spec.treedef, list(payload["other"])
+        )
+
+    def fake_quant(self, params, spec, key, ref=None):
+        return params
+
+    def payload_nbytes(self, spec):
+        return _fp32_nbytes(spec)
+
+    def code_nbytes(self, spec):
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8Codec(WireCodec):
+    """The paper's FP8 wire (1 byte/element + FP32 riders) — a thin,
+    bit-for-bit delegation to the flat-buffer codec in ``core.wire``.
+    ``rounding='rand'`` is the unbiased SR uplink/downlink quantizer
+    (Lemma 3); ``'det'`` the biased Table-2 ablation."""
+
+    fmt: FP8Format = E4M3
+    rounding: str = "rand"
+
+    def __post_init__(self):
+        if self.rounding not in ("rand", "det"):
+            raise ValueError(f"rounding {self.rounding!r}: 'rand' or 'det'"
+                             " (the FP32 leg is Fp32Codec, not a mode)")
+        if self.fmt.bits != 8:
+            raise ValueError(
+                f"Fp8Codec packs 1 code/byte; {self.fmt.bits}-bit formats "
+                "go through PackedFpCodec"
+            )
+
+    @property
+    def tag(self) -> str:
+        t = f"e{self.fmt.exp}m{self.fmt.mant}"
+        return t if self.rounding == "rand" else t + "_det"
+
+    def encode(self, params, spec, key, ref=None):
+        return wire.encode(params, spec, key, fmt=self.fmt,
+                           mode=self.rounding)
+
+    def decode(self, payload, spec, ref=None):
+        return wire.decode(payload, spec, fmt=self.fmt)
+
+    def fake_quant(self, params, spec, key, ref=None):
+        return wire.roundtrip(params, key, fmt=self.fmt,
+                              mode=self.rounding, spec=spec)
+
+    def payload_nbytes(self, spec):
+        return spec.total + 4 * spec.n_other_elems
+
+    def code_nbytes(self, spec):
+        return spec.total
+
+    # --- tile-level hooks (DeltaCodec composes over these) ---------------
+    def _encode_tiles(self, x2, a2, key2):
+        return dispatch.quant_pack_tiles(x2, a2, key2, fmt=self.fmt)
+
+    def _decode_tiles(self, c2, a2):
+        return dispatch.unpack_tiles(c2, a2, fmt=self.fmt)
+
+    def _leaf_code_sizes(self, spec):
+        return [_nelem(s) for s in spec.q_shapes]
+
+    def _code_width(self) -> int:
+        return LANE
+
+    def _slice_codes(self, codes2, spec):
+        return _slice_rows(codes2, spec, self._leaf_code_sizes(spec))
+
+    def _codes_to_tiles(self, codes, spec):
+        return _rows_from_flat(codes, spec, self._leaf_code_sizes(spec),
+                               self._code_width())
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedFpCodec(Fp8Codec):
+    """Sub-byte ExMy wire: ``8 // fmt.bits`` codes per payload byte.
+
+    FP4 (E2M1 or E3M0) packs 2 codes/byte — half the quantized-leg payload
+    of FP8 — through the fused pack/unpack kernels
+    (``kernels.fp8_quant.quant_pack_sub_tiles`` / ``unpack_sub_tiles``),
+    which reuse the SAME parametric (exp, mant) grid and per-element
+    counter RNG as the FP8 wire. A leaf of n elements occupies exactly
+    ``ceil(n * bits / 8)`` wire bytes (an odd tail element shares its byte
+    with a zero-code pad nibble — deterministic in both rounding modes, so
+    payloads stay bitwise reproducible across backends)."""
+
+    fmt: FP8Format = FP4_E2M1
+    rounding: str = "rand"
+
+    def __post_init__(self):
+        if self.rounding not in ("rand", "det"):
+            raise ValueError(f"rounding {self.rounding!r}: 'rand' or 'det'")
+        codes_per_byte(self.fmt)  # validates bits | 8
+        if self.fmt.bits >= 8:
+            raise ValueError("PackedFpCodec is for sub-byte formats; "
+                             "8-bit formats are Fp8Codec")
+
+    @property
+    def tag(self) -> str:
+        t = f"fp{self.fmt.bits}_e{self.fmt.exp}m{self.fmt.mant}"
+        return t if self.rounding == "rand" else t + "_det"
+
+    def encode(self, params, spec, key, ref=None):
+        leaves, other, x2, a2, key2 = wire._prep_tiles(
+            params, spec, key, self.rounding
+        )
+        if not spec.q_slots:
+            return {"codes": jnp.zeros((0,), jnp.uint8), "other": other}
+        packed2 = dispatch.quant_pack_sub_tiles(x2, a2, key2, fmt=self.fmt)
+        return {"codes": self._slice_codes(packed2, spec), "other": other}
+
+    def decode(self, payload, spec, ref=None):
+        other = tuple(payload["other"])
+        out: list = [None] * spec.n_leaves
+        for slot, leaf in zip(spec.other_slots, other):
+            out[slot] = leaf
+        if spec.q_slots:
+            c2 = self._codes_to_tiles(payload["codes"], spec)
+            a2 = wire._alpha_tiles(other, spec)
+            vals2 = dispatch.unpack_sub_tiles(c2, a2, fmt=self.fmt)
+            for qi, slot in enumerate(spec.q_slots):
+                out[slot] = wire.tiles_to_leaf(vals2, spec, qi)
+        return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+    def fake_quant(self, params, spec, key, ref=None):
+        # wire.roundtrip is format-parametric: the transit math never packs
+        return wire.roundtrip(params, key, fmt=self.fmt,
+                              mode=self.rounding, spec=spec)
+
+    def payload_nbytes(self, spec):
+        return self.code_nbytes(spec) + 4 * spec.n_other_elems
+
+    def code_nbytes(self, spec):
+        return sum(self._leaf_code_sizes(spec))
+
+    def _encode_tiles(self, x2, a2, key2):
+        return dispatch.quant_pack_sub_tiles(x2, a2, key2, fmt=self.fmt)
+
+    def _decode_tiles(self, c2, a2):
+        return dispatch.unpack_sub_tiles(c2, a2, fmt=self.fmt)
+
+    def _leaf_code_sizes(self, spec):
+        k = codes_per_byte(self.fmt)
+        return [-(-_nelem(s) // k) for s in spec.q_shapes]
+
+    def _code_width(self) -> int:
+        return LANE // codes_per_byte(self.fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaCodec(WireCodec):
+    """Residual/delta encoding over an inner grid codec.
+
+    Transmits ``inner(params - ref)`` instead of the weights themselves:
+    ``ref`` is the round's reference model, held by BOTH ends of the leg
+    (on the uplink: the model the server just broadcast and every client
+    started local training from), so only the update crosses the wire.
+    Each quantized leaf gets a fresh residual clipping value
+    ``max|params - ref|`` — one extra FP32 scalar per leaf on the wire —
+    which (a) keeps the residual inside the clipping range, so with
+    ``inner.rounding='rand'`` the leg is exactly unbiased
+    (``E[decode] == params``; SR of the delta, Lemma 3), and (b) shrinks
+    the grid spacing to the residual's scale: late in training
+    ``|params - ref| << |params|``, so the SAME byte count carries far
+    less quantization error (or FP4 carries FP8-grade error at half the
+    bytes). The model's trained clip values ride FP32 untouched, exactly
+    as on the plain wire.
+    """
+
+    inner: WireCodec = Fp8Codec(E4M3, "rand")
+
+    def __post_init__(self):
+        if not isinstance(self.inner, Fp8Codec):  # includes PackedFpCodec
+            raise ValueError(
+                "DeltaCodec composes over a grid codec (Fp8Codec / "
+                f"PackedFpCodec); got {type(self.inner).__name__}"
+            )
+
+    @property
+    def tag(self) -> str:
+        return f"delta:{self.inner.tag}"
+
+    def _residual_tiles(self, params, spec, key, ref):
+        if ref is None:
+            raise ValueError(
+                "DeltaCodec needs the leg's reference model (ref=): the "
+                "receiver must already hold it — use it on the uplink "
+                "(reference = the round's broadcast model) or a stateful "
+                "boundary that threads the previous global model"
+            )
+        leaves = list(jax.tree_util.tree_leaves(params))
+        rleaves = jax.tree_util.tree_leaves(ref)
+        resid = [
+            _f32(leaves[i].reshape(-1)) - _f32(rleaves[i].reshape(-1))
+            for i in spec.q_slots
+        ]
+        d_alpha = jnp.maximum(
+            jnp.stack([jnp.max(jnp.abs(r)) for r in resid]),
+            fp8._ALPHA_FLOOR,
+        )
+        x2 = _tiles(resid, 0.0)
+        a_col = _leaf_alpha_column(d_alpha, spec)
+        key2 = _key_words(key) if self.inner.rounding == "rand" else None
+        return leaves, x2, a_col, d_alpha, key2
+
+    def encode(self, params, spec, key, ref=None):
+        leaves = jax.tree_util.tree_leaves(params)
+        other = tuple(leaves[i] for i in spec.other_slots)
+        if not spec.q_slots:
+            return {"codes": jnp.zeros((0,), jnp.uint8),
+                    "other": other + (jnp.zeros((0,), jnp.float32),)}
+        _, x2, a_col, d_alpha, key2 = self._residual_tiles(
+            params, spec, key, ref
+        )
+        codes2 = self.inner._encode_tiles(x2, a_col, key2)
+        # the residual clipping values ride as ONE extra (n_q,) FP32 rider
+        return {"codes": self.inner._slice_codes(codes2, spec),
+                "other": other + (d_alpha,)}
+
+    def decode(self, payload, spec, ref=None):
+        if ref is None:
+            raise ValueError("DeltaCodec.decode needs ref= (see encode)")
+        other_all = tuple(payload["other"])
+        d_alpha, other = other_all[-1], other_all[:-1]
+        out: list = [None] * spec.n_leaves
+        for slot, leaf in zip(spec.other_slots, other):
+            out[slot] = leaf
+        if spec.q_slots:
+            rleaves = jax.tree_util.tree_leaves(ref)
+            c2 = self.inner._codes_to_tiles(payload["codes"], spec)
+            a_col = _leaf_alpha_column(
+                jnp.maximum(d_alpha, fp8._ALPHA_FLOOR), spec
+            )
+            vals2 = self.inner._decode_tiles(c2, a_col)
+            for qi, slot in enumerate(spec.q_slots):
+                res = wire.tiles_to_leaf(vals2, spec, qi)
+                base = rleaves[slot]
+                out[slot] = (
+                    _f32(base) + _f32(res)
+                ).astype(spec.q_dtypes[qi])
+        return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+    def fake_quant(self, params, spec, key, ref=None):
+        if not spec.q_slots:
+            return params
+        leaves, x2, a_col, _, key2 = self._residual_tiles(
+            params, spec, key, ref
+        )
+        rleaves = jax.tree_util.tree_leaves(ref)
+        vals2 = dispatch.fake_quant_tiles(x2, a_col, key2,
+                                          fmt=self.inner.fmt)
+        for qi, slot in enumerate(spec.q_slots):
+            res = wire.tiles_to_leaf(vals2, spec, qi)
+            leaves[slot] = (
+                _f32(rleaves[slot]) + _f32(res)
+            ).astype(spec.q_dtypes[qi])
+        return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+    def payload_nbytes(self, spec):
+        # inner codes + model riders + one fresh f32 clip scalar per leaf
+        return (self.inner.code_nbytes(spec) + 4 * spec.n_other_elems
+                + 4 * len(spec.q_slots))
+
+    def code_nbytes(self, spec):
+        return self.inner.code_nbytes(spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSchedule:
+    """Piecewise-constant per-round codec (e.g. precision annealing).
+
+    ``codecs[i]`` is active for rounds ``boundaries[i-1] <= r <
+    boundaries[i]`` (``boundaries`` has ``len(codecs) - 1`` strictly
+    increasing round indices). The engine resolves the active codec
+    *inside* the jitted round from a round-index operand
+    (``jax.lax.switch`` over the phases — see ``engine.WireLink``), so a
+    schedule never retraces; byte accounting switches over the same phase
+    index and stays exact per round. Members must be grid codecs (Fp8 /
+    PackedFp): the schedule's branches must agree on payload schema and on
+    needing no reference model.
+    """
+
+    codecs: tuple
+    boundaries: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "codecs", tuple(get_codec(c) for c in self.codecs)
+        )
+        object.__setattr__(self, "boundaries", tuple(self.boundaries))
+        if len(self.boundaries) != len(self.codecs) - 1:
+            raise ValueError(
+                f"{len(self.codecs)} codecs need {len(self.codecs) - 1} "
+                f"boundaries, got {len(self.boundaries)}"
+            )
+        if any(b2 <= b1 for b1, b2 in
+               zip(self.boundaries, self.boundaries[1:])):
+            raise ValueError(f"boundaries must increase: {self.boundaries}")
+        for c in self.codecs:
+            if not isinstance(c, Fp8Codec):  # Fp8Codec or PackedFpCodec
+                raise ValueError(
+                    "CodecSchedule members must be grid codecs (Fp8Codec/"
+                    f"PackedFpCodec); got {type(c).__name__}"
+                )
+
+    quantized: ClassVar[bool] = True
+
+    @property
+    def tag(self) -> str:
+        legs = ",".join(c.tag for c in self.codecs)
+        return f"sched({legs}@{','.join(map(str, self.boundaries))})"
+
+    def phase(self, r: Array) -> Array:
+        """Traced phase index for round ``r`` (int32, in-jit)."""
+        ph = jnp.zeros((), jnp.int32)
+        for b in self.boundaries:
+            ph = ph + (r >= b).astype(jnp.int32)
+        return ph
+
+    def at(self, r: int):
+        """Static (Python) resolution: the codec active at round ``r``."""
+        ph = sum(int(r) >= b for b in self.boundaries)
+        return self.codecs[ph]
+
+
+# ---------------------------------------------------------------------------
+# Registry + legacy-knob shim
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, WireCodec] = {}
+
+
+def register_codec(name: str, codec: WireCodec) -> None:
+    _REGISTRY[name.lower()] = codec
+
+
+for _fmt, _base in ((E4M3, "e4m3"), (E5M2, "e5m2")):
+    register_codec(_base, Fp8Codec(_fmt, "rand"))
+    register_codec(_base + "_det", Fp8Codec(_fmt, "det"))
+for _fmt, _base in ((FP4_E2M1, "fp4_e2m1"), (FP4_E3M0, "fp4_e3m0")):
+    register_codec(_base, PackedFpCodec(_fmt, "rand"))
+    register_codec(_base + "_det", PackedFpCodec(_fmt, "det"))
+register_codec("fp4", _REGISTRY["fp4_e2m1"])
+register_codec("fp4_det", _REGISTRY["fp4_e2m1_det"])
+register_codec("fp32", Fp32Codec())
+register_codec("none", Fp32Codec())
+register_codec("delta", DeltaCodec(Fp8Codec(E4M3, "rand")))
+
+
+def get_codec(c) -> WireCodec:
+    """Resolve a codec spec: a WireCodec/CodecSchedule instance passes
+    through; a string looks up the registry (``delta:<inner>`` composes)."""
+    if isinstance(c, (WireCodec, CodecSchedule)):
+        return c
+    if isinstance(c, str):
+        name = c.lower()
+        if name.startswith("delta:"):
+            return DeltaCodec(get_codec(name[len("delta:"):]))
+        if name in _REGISTRY:
+            return _REGISTRY[name]
+        raise KeyError(
+            f"unknown codec {c!r}; registered: {sorted(_REGISTRY)} "
+            "(or 'delta:<name>')"
+        )
+    raise TypeError(f"cannot resolve a codec from {type(c).__name__}")
+
+
+def registry_tags() -> list[str]:
+    """Distinct registered codecs (one tag per object, aliases folded)."""
+    seen, out = set(), []
+    for codec in _REGISTRY.values():
+        if codec.tag not in seen:
+            seen.add(codec.tag)
+            out.append(codec.tag)
+    return out
+
+
+def codec_for(fmt: FP8Format, mode: str) -> WireCodec:
+    """Deprecation shim: the legacy ``(fmt, mode)`` pair -> codec.
+
+    ``mode='none'`` -> :class:`Fp32Codec`; otherwise the grid codec for
+    ``fmt`` (sub-byte formats route to :class:`PackedFpCodec`) at the
+    requested rounding. This is what ``FedConfig``'s legacy
+    ``fmt/down_fmt/up_fmt/comm_mode/down_mode/up_mode`` knobs resolve
+    through, bit-identically to the pre-codec wire.
+    """
+    if mode == "none":
+        return Fp32Codec()
+    if fmt.bits == 8:
+        return Fp8Codec(fmt, mode)
+    return PackedFpCodec(fmt, mode)
+
+
+def leg_nbytes(codec, spec: wire.WireSpec, r: int = 0) -> int:
+    """Exact static bytes of one model copy on a leg using ``codec``.
+
+    A tree with no quantized leaves rides FP32 whatever the codec says
+    (there is nothing to compress); schedules resolve at round ``r``.
+    """
+    if isinstance(codec, CodecSchedule):
+        codec = codec.at(r)
+    if codec.quantized and spec.q_slots:
+        return codec.payload_nbytes(spec)
+    return _fp32_nbytes(spec)

@@ -76,22 +76,35 @@ def fp8_wire_allgather(
     axis_names: tuple[str, ...],
     fmt: FP8Format = E4M3,
     mode: str = "rand",
+    codec=None,
+    ref: PyTree | None = None,
 ) -> PyTree:
     """All-gather every silo's model as STACKED client trees ``(P, ...)``.
 
-    The collective moves the same single uint8 payload as
+    The collective moves the same single compressed payload as
     :func:`fp8_wire_allreduce_mean` (one fused encode, one u8 all-gather,
     clip values pmax-synced so all silos share a grid), but instead of
     folding the mean in-place it returns what a federated *Aggregator*
     (``core.engine``) consumes: the stacked per-silo trees. This is how
     ``launch.steps.make_comm_round`` runs stateful server optimizers
     (FedAvgM/FedAdam) at the round boundary — aggregate however you like,
-    the wire stays 1 byte/param. Non-quantized leaves (<2% of bytes)
+    the wire stays compressed. Non-quantized leaves (<2% of bytes)
     ride f32 through their own all-gather.
+
+    ``codec`` (a ``core.codec`` WireCodec or registry name) selects the
+    wire compression — FP8, sub-byte packed FP4, or ``DeltaCodec`` with
+    ``ref`` the previous global model every silo holds (the
+    ``make_comm_round`` aggregator state threads it). ``None`` keeps the
+    legacy ``(fmt, mode)`` behavior bit-for-bit.
     """
+    from . import codec as codec_lib
     from . import wire
 
-    if mode == "none":
+    if codec is None:
+        codec = codec_lib.codec_for(fmt, mode)
+    else:
+        codec = codec_lib.get_codec(codec)
+    if not codec.quantized:
         return jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis_names), params
         )
@@ -101,13 +114,13 @@ def fp8_wire_allgather(
         return jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis_names), synced
         )
-    payload = wire.encode(synced, spec, key, fmt=fmt, mode=mode)
-    codes_g = jax.lax.all_gather(payload["codes"], axis_names)   # (P, total)
+    payload = codec.encode(synced, spec, key, ref=ref)
+    codes_g = jax.lax.all_gather(payload["codes"], axis_names)   # (P, nbytes)
     other_g = tuple(
         jax.lax.all_gather(o, axis_names) for o in payload["other"]
     )
     return jax.vmap(
-        lambda c, o: wire.decode({"codes": c, "other": o}, spec, fmt=fmt)
+        lambda c, o: codec.decode({"codes": c, "other": o}, spec, ref=ref)
     )(codes_g, other_g)
 
 
@@ -118,6 +131,8 @@ def fp8_wire_allgather_clients(
     fmt: FP8Format = E4M3,
     mode: str = "rand",
     n_keep: int | None = None,
+    codec=None,
+    ref: PyTree | None = None,
 ) -> PyTree:
     """Gather a cohort of client models sharded over mesh axes — u8 wire.
 
@@ -139,8 +154,22 @@ def fp8_wire_allgather_clients(
     wrapped padding rows carry no information. ``mode='none'`` falls back
     to an FP32 all-gather (the uncompressed leg), as does a tree with no
     quantized leaves.
+
+    ``codec`` (a ``core.codec`` WireCodec or registry name) selects the
+    compression: FP8 (the legacy wire, default via the ``(fmt, mode)``
+    shim), sub-byte packed (each device's buffer is ``(L, total*bits/8)``
+    uint8 — the one-u8-all-gather contract holds for packed payloads too),
+    or ``DeltaCodec`` with ``ref`` the round's broadcast model (replicated
+    on every device; the per-client residual clip scalars ride the FP32
+    rider gather).
     """
+    from . import codec as codec_lib
     from . import wire
+
+    if codec is None:
+        codec = codec_lib.codec_for(fmt, mode)
+    else:
+        codec = codec_lib.get_codec(codec)
 
     def gather(x):
         g = jax.lax.all_gather(x, axis_names)
@@ -151,22 +180,22 @@ def fp8_wire_allgather_clients(
             return tree
         return jax.tree.map(lambda x: x[:n_keep], tree)
 
-    if mode == "none":
+    if not codec.quantized:
         return keep(jax.tree.map(gather, stacked))
     spec = wire.make_wire_spec(jax.tree.map(lambda x: x[0], stacked))
     if not spec.q_slots:
         return keep(jax.tree.map(gather, stacked))
     payloads = jax.vmap(
-        lambda p, k: wire.encode(p, spec, k, fmt=fmt, mode=mode)
+        lambda p, k: codec.encode(p, spec, k, ref=ref)
     )(stacked, keys)
-    # the single compressed collective: (L, total) u8 per device
+    # the single compressed collective: (L, code_nbytes) u8 per device
     codes_g = gather(payloads["codes"])
     other_g = tuple(gather(o) for o in payloads["other"])
     if n_keep is not None:
         codes_g = codes_g[:n_keep]
         other_g = tuple(o[:n_keep] for o in other_g)
     return jax.vmap(
-        lambda c, o: wire.decode({"codes": c, "other": o}, spec, fmt=fmt)
+        lambda c, o: codec.decode({"codes": c, "other": o}, spec, ref=ref)
     )(codes_g, other_g)
 
 

@@ -9,13 +9,18 @@ be swapped independently:
   (uniform without replacement — the paper's setting), ``WeightedSampler``
   (nk-proportional without replacement via Gumbel top-k), and
   ``FixedCohortSampler`` (deterministic cohort, e.g. cross-silo).
-* **Link** — what crosses the wire, per direction. ``WireLink`` rides the
-  flat-buffer codec (``core.wire``) and takes an independent
-  ``(fmt, mode)`` pair for downlink and uplink — e.g. E4M3 down / E5M2 up,
-  the hybrid recipe of Micikevicius et al. (*FP8 Formats for Deep
-  Learning*) — with ``mode`` in ``rand`` (unbiased), ``det`` (biased
-  ablation) or ``none`` (FP32 passthrough). Byte accounting is
-  per-direction: each leg is charged at its real payload size.
+* **Link** — what crosses the wire, per direction. ``WireLink`` is a pair
+  of :mod:`repro.core.codec` ``WireCodec`` objects — FP8 (``Fp8Codec``,
+  today's 1-byte wire), sub-byte packed formats (``PackedFpCodec``, FP4
+  at 2 codes/byte), residual encoding (``DeltaCodec``, uplink-only:
+  the reference is the round's broadcast model), a per-round
+  ``CodecSchedule`` resolved in-jit from the round-index operand, or FP32
+  passthrough (``Fp32Codec``). The legacy per-direction ``(fmt, mode)``
+  knobs survive as deprecation shims that resolve through
+  ``codec.codec_for`` — e.g. E4M3 down / E5M2 up, the hybrid recipe of
+  Micikevicius et al. (*FP8 Formats for Deep Learning*) — bit-identically
+  to the pre-codec wire. Byte accounting is per-direction and delegates
+  to each codec: every leg is charged at its real payload size.
 * **ClientExecutor** — how the cohort's local updates run. ``VmapExecutor``
   is the original full-cohort vmap; ``ChunkedExecutor(chunk)`` scans over
   chunks-of-vmap so peak live memory (per-client optimizer state,
@@ -35,7 +40,9 @@ be swapped independently:
   second-moment state threads through ``ServerState``.
 
 The round signature is ``(server_state, data, labels, nk, key) ->
-(server_state, metrics)`` where ``ServerState = (params, opt)``. The
+(server_state, metrics)`` where ``ServerState = (params, opt, round)``
+(``round`` is the schedule's round-index operand and stays ``()`` — no
+extra leaf — unless the link carries a ``CodecSchedule``). The
 simulator (``core.fedsim``) threads the state; ``fedavg.make_round``
 remains as a thin back-compat shim for stateless configurations; the
 production collective boundary (``launch.steps.make_comm_round``) applies
@@ -49,7 +56,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import codec as codec_lib
 from . import wire
+from .codec import CodecSchedule, DeltaCodec, Fp32Codec, WireCodec
 from .fp8 import E4M3, E5M2, FP8Format
 from .qat import QATConfig
 from .server_opt import ServerOptConfig, server_optimize, weighted_mean
@@ -65,11 +74,15 @@ class ServerState(NamedTuple):
 
     ``opt`` is ``()`` for stateless aggregators, so the state is exactly
     the params pytree plus nothing — checkpoints of stateless runs stay
-    as small as before.
+    as small as before. ``round`` is the round-index operand a per-round
+    :class:`repro.core.codec.CodecSchedule` resolves against inside the
+    jitted round; it stays ``()`` (no extra leaf, unchanged pytree) unless
+    the link carries a schedule.
     """
 
     params: PyTree
     opt: PyTree
+    round: PyTree = ()
 
 
 # ---------------------------------------------------------------------------
@@ -96,10 +109,21 @@ class FedConfig:
     # --- engine knobs (defaults == legacy behavior) ----------------------
     sampler: str = "uniform"      # 'uniform' | 'weighted' | 'fixed'
     chunk: int | None = None      # executor chunk size; None = full vmap
+    # legacy per-direction link knobs — DEPRECATION SHIMS: they resolve to
+    # codec-registry entries via codec.codec_for(fmt, mode) and are ignored
+    # on any leg whose codec knob below is set
     down_fmt: FP8Format | None = None   # None -> fmt
     up_fmt: FP8Format | None = None     # None -> fmt
     down_mode: str | None = None        # None -> comm_mode
     up_mode: str | None = None          # None -> comm_mode
+    # first-class wire codecs (core.codec): a WireCodec / CodecSchedule
+    # instance or a registry name ('e4m3', 'e5m2_det', 'fp4', 'fp4_e3m0',
+    # 'delta:e4m3', 'fp32', ...). `codec_schedule` applies one per-round
+    # CodecSchedule to BOTH legs (precision annealing) and wins over the
+    # per-leg knobs; per-leg knobs win over the legacy (fmt, mode) pairs.
+    down_codec: Any = None
+    up_codec: Any = None
+    codec_schedule: Any = None
     aggregator: str = "auto"      # 'auto'|'mean'|'server_opt'|'fedavgm'|'fedadam'
     # cohort device mesh: shard the sampled-client axis over `client_axis`
     # of this jax.sharding.Mesh (ShardedExecutor; composes with `chunk` —
@@ -118,7 +142,7 @@ class FedConfig:
     def clients_per_round(self) -> int:
         return max(1, int(round(self.n_clients * self.participation)))
 
-    # resolved per-direction link settings
+    # resolved per-direction link settings (legacy (fmt, mode) view)
     @property
     def resolved_down(self) -> tuple[FP8Format, str]:
         return (self.down_fmt or self.fmt, self.down_mode or self.comm_mode)
@@ -127,12 +151,37 @@ class FedConfig:
     def resolved_up(self) -> tuple[FP8Format, str]:
         return (self.up_fmt or self.fmt, self.up_mode or self.comm_mode)
 
+    def _resolved_codec(self, explicit, legacy: tuple[FP8Format, str]):
+        if self.codec_schedule is not None:
+            return codec_lib.get_codec(self.codec_schedule)
+        if explicit is not None:
+            return codec_lib.get_codec(explicit)
+        return codec_lib.codec_for(*legacy)
+
+    @property
+    def resolved_down_codec(self):
+        """The downlink WireCodec (codec knobs win over legacy knobs)."""
+        return self._resolved_codec(self.down_codec, self.resolved_down)
+
+    @property
+    def resolved_up_codec(self):
+        """The uplink WireCodec (codec knobs win over legacy knobs)."""
+        return self._resolved_codec(self.up_codec, self.resolved_up)
+
     @property
     def resolved_aggregator(self) -> str:
         if self.aggregator != "auto":
             return self.aggregator
-        if self.server_opt.enabled and self.comm_mode != "none":
-            return "server_opt"
+        if self.server_opt.enabled:
+            # legacy knobs keep their exact semantics (comm_mode gates the
+            # UQ+ tail); codec knobs gate on the resolved downlink codec
+            quantized = (
+                self.comm_mode != "none"
+                if self.down_codec is None and self.codec_schedule is None
+                else self.resolved_down_codec.quantized
+            )
+            if quantized:
+                return "server_opt"
         return "mean"
 
 
@@ -241,76 +290,176 @@ class FixedCohortSampler:
 # ---------------------------------------------------------------------------
 
 
+def _codec_transit(codec, params: PyTree, spec: wire.WireSpec, key: Array,
+                   ref: PyTree | None = None) -> PyTree:
+    """One leg through ``codec``: what a receiver of the payload observes
+    (encode -> decode). A non-quantized codec (FP32) or a tree with no
+    quantized leaves passes through untouched."""
+    if not (codec.quantized and spec.q_slots):
+        return params
+    payload = codec.encode(params, spec, key, ref=ref)
+    return codec.decode(payload, spec, ref=ref)
+
+
+def _sched_switch(schedule: CodecSchedule, r: Array, leg, *operands):
+    """Resolve a CodecSchedule inside the jitted round: ``lax.switch`` over
+    the phases, each branch the same leg at that phase's codec. ``r`` is
+    the round-index operand (``ServerState.round``)."""
+    if r is None:
+        raise ValueError(
+            "a CodecSchedule needs the round-index operand; drive this "
+            "link through RoundEngine/FedSim (which thread "
+            "ServerState.round), not the stateless shim"
+        )
+    branches = [
+        (lambda *ops, _c=c: leg(_c, *ops)) for c in schedule.codecs
+    ]
+    return jax.lax.switch(schedule.phase(r), branches, *operands)
+
+
 @dataclasses.dataclass(frozen=True)
 class WireLink:
-    """Both legs of the model exchange, each with its own (fmt, mode).
+    """Both legs of the model exchange, each a first-class ``WireCodec``.
 
-    ``mode='rand'`` is the paper's unbiased quantizer, ``'det'`` the biased
-    Table-2 ablation, ``'none'`` FP32 passthrough. ``down``/``up`` emit the
-    tree a *receiver* of the real uint8 payload would observe
-    (encode -> decode through ``core.wire``); byte accounting
-    (:meth:`down_bytes` / :meth:`up_bytes`) reads each leg's actual payload
-    layout, so asymmetric links (e.g. FP32 down / FP8 up) charge each
-    direction at its real size.
+    ``down_codec``/``up_codec`` accept a codec object, a registry name
+    (``'e4m3'``, ``'fp4'``, ``'delta:e4m3'``, ``'fp32'``, ...) or a
+    :class:`~repro.core.codec.CodecSchedule`. The legacy per-direction
+    ``(fmt, mode)`` fields are deprecation shims resolving through
+    ``codec.codec_for`` — ``mode='rand'`` the paper's unbiased quantizer,
+    ``'det'`` the biased Table-2 ablation, ``'none'`` FP32 passthrough —
+    and are ignored on a leg whose codec field is set.
+
+    ``down``/``up`` emit the tree a *receiver* of the real payload would
+    observe (encode -> decode); byte accounting (:meth:`down_bytes` /
+    :meth:`up_bytes`) delegates to each leg's codec, so asymmetric links
+    (FP32 down / FP8 up, FP4 up, delta up...) charge each direction at its
+    real size. ``ref`` is the round's reference model (the broadcast the
+    cohort trained from) — consumed by :class:`DeltaCodec` legs; ``r`` is
+    the round-index operand consumed by schedules.
     """
 
     down_fmt: FP8Format = E4M3
     up_fmt: FP8Format = E4M3
     down_mode: str = "rand"
     up_mode: str = "rand"
+    down_codec: Any = None
+    up_codec: Any = None
 
-    def _on_wire(self, mode: str, spec: wire.WireSpec) -> bool:
-        return mode != "none" and bool(spec.q_slots)
+    def __post_init__(self):
+        down = (codec_lib.get_codec(self.down_codec)
+                if self.down_codec is not None
+                else codec_lib.codec_for(self.down_fmt, self.down_mode))
+        up = (codec_lib.get_codec(self.up_codec)
+              if self.up_codec is not None
+              else codec_lib.codec_for(self.up_fmt, self.up_mode))
+        if isinstance(down, DeltaCodec):
+            raise ValueError(
+                "DeltaCodec cannot run on the downlink: the receiver "
+                "(a client joining the round) holds no reference model. "
+                "Use it on the uplink, where the reference is the round's "
+                "broadcast."
+            )
+        object.__setattr__(self, "_down_c", down)
+        object.__setattr__(self, "_up_c", up)
 
-    def down(self, params: PyTree, spec: wire.WireSpec, key: Array) -> PyTree:
-        """Server -> cohort broadcast: ONE fused encode, one decode."""
-        if not self._on_wire(self.down_mode, spec):
-            return params
-        payload = wire.encode(params, spec, key,
-                              fmt=self.down_fmt, mode=self.down_mode)
-        return wire.decode(payload, spec, fmt=self.down_fmt)
+    # resolved codecs (read-only views)
+    @property
+    def down_c(self):
+        return self._down_c
 
-    def up(self, client_params: PyTree, spec: wire.WireSpec, key: Array,
-           cohort: int) -> PyTree:
-        """Cohort -> server: per-client independent payloads (vmapped)."""
-        if not self._on_wire(self.up_mode, spec):
-            return client_params
-        up_keys = jax.random.split(key, cohort)
-        payloads = jax.vmap(
-            lambda p, k: wire.encode(p, spec, k,
-                                     fmt=self.up_fmt, mode=self.up_mode)
-        )(client_params, up_keys)
-        return jax.vmap(
-            lambda pl: wire.decode(pl, spec, fmt=self.up_fmt)
-        )(payloads)
+    @property
+    def up_c(self):
+        return self._up_c
 
-    def up_gather(self, client_params: PyTree, keys: Array, axis: str,
-                  n_keep: int) -> PyTree:
-        """Uplink for the sharded executor (called INSIDE shard_map): this
-        device's ``(L, ...)`` client stack encodes with the same per-client
-        keys :meth:`up` would use, crosses the wire as a single u8 payload
-        buffer in one all-gather, and decodes replicated — the global
-        ``(n_keep, ...)`` stack every device then holds is bit-identical to
-        what the unsharded :meth:`up` emits for the same cohort."""
-        from .compression import fp8_wire_allgather_clients
-
-        return fp8_wire_allgather_clients(
-            client_params, keys, (axis,), fmt=self.up_fmt,
-            mode=self.up_mode, n_keep=n_keep,
+    @property
+    def has_schedule(self) -> bool:
+        return isinstance(self._down_c, CodecSchedule) or isinstance(
+            self._up_c, CodecSchedule
         )
 
-    def _leg_bytes(self, mode: str, spec: wire.WireSpec) -> int:
-        if self._on_wire(mode, spec):
-            return wire.payload_nbytes(spec)
-        return 4 * (spec.total + spec.n_other_elems)
+    @property
+    def needs_ref(self) -> bool:
+        return isinstance(self._up_c, DeltaCodec)
 
-    def down_bytes(self, spec: wire.WireSpec) -> int:
+    def down(self, params: PyTree, spec: wire.WireSpec, key: Array,
+             r: Array | None = None) -> PyTree:
+        """Server -> cohort broadcast: ONE fused encode, one decode."""
+        c = self._down_c
+        if isinstance(c, CodecSchedule):
+            return _sched_switch(
+                c, r,
+                lambda cc, p, k: _codec_transit(cc, p, spec, k),
+                params, key,
+            )
+        return _codec_transit(c, params, spec, key)
+
+    def up(self, client_params: PyTree, spec: wire.WireSpec, key: Array,
+           cohort: int, ref: PyTree | None = None,
+           r: Array | None = None) -> PyTree:
+        """Cohort -> server: per-client independent payloads (vmapped)."""
+
+        def leg(cc, stacked, k):
+            if not (cc.quantized and spec.q_slots):
+                return stacked
+            up_keys = jax.random.split(k, cohort)
+            payloads = jax.vmap(
+                lambda p, pk: cc.encode(p, spec, pk, ref=ref)
+            )(stacked, up_keys)
+            return jax.vmap(
+                lambda pl: cc.decode(pl, spec, ref=ref)
+            )(payloads)
+
+        c = self._up_c
+        if isinstance(c, CodecSchedule):
+            return _sched_switch(c, r, leg, client_params, key)
+        return leg(c, client_params, key)
+
+    def up_gather(self, client_params: PyTree, keys: Array, axis: str,
+                  n_keep: int, ref: PyTree | None = None,
+                  r: Array | None = None) -> PyTree:
+        """Uplink for the sharded executor (called INSIDE shard_map): this
+        device's ``(L, ...)`` client stack encodes with the same per-client
+        keys :meth:`up` would use, crosses the wire as a single compressed
+        payload buffer in one all-gather, and decodes replicated — the
+        global ``(n_keep, ...)`` stack every device then holds is
+        bit-identical to what the unsharded :meth:`up` emits for the same
+        cohort."""
+        from .compression import fp8_wire_allgather_clients
+
+        def leg(cc, stacked, k):
+            return fp8_wire_allgather_clients(
+                stacked, k, (axis,), codec=cc, n_keep=n_keep, ref=ref,
+            )
+
+        c = self._up_c
+        if isinstance(c, CodecSchedule):
+            return _sched_switch(c, r, leg, client_params, keys)
+        return leg(c, client_params, keys)
+
+    def down_bytes(self, spec: wire.WireSpec, r: int = 0) -> int:
         """Exact bytes of one downlink model copy (static, per receiver)."""
-        return self._leg_bytes(self.down_mode, spec)
+        return codec_lib.leg_nbytes(self._down_c, spec, r)
 
-    def up_bytes(self, spec: wire.WireSpec) -> int:
+    def up_bytes(self, spec: wire.WireSpec, r: int = 0) -> int:
         """Exact bytes of one uplink model copy (static, per client)."""
-        return self._leg_bytes(self.up_mode, spec)
+        return codec_lib.leg_nbytes(self._up_c, spec, r)
+
+    def traced_round_bytes(self, spec: wire.WireSpec, cohort: int,
+                           r: Array) -> Array:
+        """Per-round wire bytes under a CodecSchedule, resolved from the
+        round-index operand: static per-phase tables, one ``take`` per
+        scheduled leg — still exact, still int32."""
+
+        def leg_traced(c):
+            if isinstance(c, CodecSchedule):
+                table = jnp.asarray(
+                    [codec_lib.leg_nbytes(cc, spec) for cc in c.codecs],
+                    jnp.int32,
+                )
+                return jnp.take(table, c.phase(r))
+            return jnp.asarray(codec_lib.leg_nbytes(c, spec), jnp.int32)
+
+        return cohort * (leg_traced(self._down_c) + leg_traced(self._up_c))
 
 
 def fp32_link() -> WireLink:
@@ -618,17 +767,29 @@ _SAMPLERS = {
 }
 
 
-def _exact_round_bytes(link: WireLink, spec: wire.WireSpec, cohort: int) -> int:
-    """P x (down leg + up leg), each leg at its real payload size — static
-    at trace time. int32 keeps the count EXACT (f32 rounds integers above
-    2^24 ~ 16.7 MB, well inside the simulator's round sizes)."""
-    total = cohort * (link.down_bytes(spec) + link.up_bytes(spec))
+def _exact_round_bytes(link: WireLink, spec: wire.WireSpec, cohort: int,
+                       r: int = 0) -> int:
+    """P x (down leg + up leg), each leg at its real payload size (the
+    codec's own accounting) — static at trace time. int32 keeps the count
+    EXACT (f32 rounds integers above 2^24 ~ 16.7 MB, well inside the
+    simulator's round sizes)."""
+    total = cohort * (link.down_bytes(spec, r) + link.up_bytes(spec, r))
     if total >= 2 ** 31:
         raise ValueError(
             f"round moves {total} bytes — exceeds the int32 "
             "wire_bytes metric; this simulator targets sub-GiB rounds"
         )
     return total
+
+
+def _schedule_probe_rounds(link: WireLink) -> list[int]:
+    """One representative round index per schedule phase (both legs),
+    for static byte-accounting guards."""
+    rounds = {0}
+    for c in (link.down_c, link.up_c):
+        if isinstance(c, CodecSchedule):
+            rounds.update(c.boundaries)
+    return sorted(rounds)
 
 
 def make_aggregator(kind: str, *, lr: float | None = None,
@@ -667,10 +828,8 @@ def _stages_from_config(cfg: FedConfig):
     """Map FedConfig knobs to default stage objects."""
     P = cfg.clients_per_round
     sampler = _SAMPLERS[cfg.sampler](cfg.n_clients, P)
-    d_fmt, d_mode = cfg.resolved_down
-    u_fmt, u_mode = cfg.resolved_up
-    link = WireLink(down_fmt=d_fmt, up_fmt=u_fmt,
-                    down_mode=d_mode, up_mode=u_mode)
+    link = WireLink(down_codec=cfg.resolved_down_codec,
+                    up_codec=cfg.resolved_up_codec)
     if cfg.mesh is not None:
         executor = ShardedExecutor(cfg.mesh, cfg.client_axis, chunk=cfg.chunk)
     elif cfg.chunk:
@@ -715,11 +874,18 @@ class RoundEngine:
         # different cohort than cfg.participation implies); key fan-out,
         # the executor, and byte accounting must all agree with it
         self.cohort = getattr(self.sampler, "cohort", cfg.clients_per_round)
+        # a CodecSchedule resolves against the round-index operand in
+        # ServerState.round; only scheduled links thread the counter
+        self.scheduled = bool(getattr(self.link, "has_schedule", False))
         self._local_update = make_local_update(loss_fn, optimizer, cfg)
         self.round_fn = self._build_round()
 
     def init(self, params: PyTree) -> ServerState:
-        return ServerState(params=params, opt=self.aggregator.init(params))
+        return ServerState(
+            params=params,
+            opt=self.aggregator.init(params),
+            round=jnp.zeros((), jnp.int32) if self.scheduled else (),
+        )
 
     def stateless(self) -> bool:
         """True when the aggregator threads no state (opt is empty)."""
@@ -727,11 +893,16 @@ class RoundEngine:
             self.aggregator.init(jnp.zeros(()))
         )
 
-    def round_bytes(self, params: PyTree) -> int:
+    def round_bytes(self, params: PyTree = None, r: int = 0, *,
+                    spec: wire.WireSpec | None = None) -> int:
         """Static per-round wire bytes: P x (down leg + up leg), each leg at
-        its real payload size."""
-        return _exact_round_bytes(self.link, wire.make_wire_spec(params),
-                                  self.cohort)
+        its real payload size (codec accounting). Under a CodecSchedule the
+        count is per-round — pass ``r`` for the round you are costing.
+        Callers costing many rounds pass a prebuilt ``spec`` so the wire
+        layout is derived once, not per round."""
+        if spec is None:
+            spec = wire.make_wire_spec(params)
+        return _exact_round_bytes(self.link, spec, self.cohort, r)
 
     def _build_round(self):
         if isinstance(self.executor, ShardedExecutor):
@@ -745,10 +916,14 @@ class RoundEngine:
             self.sampler, self.link, self.executor, self.aggregator
         )
         local_update = self._local_update
+        scheduled = self.scheduled
 
         def round_fn(state: ServerState, data: Array, labels: Array,
                      nk: Array, key: Array):
             server_params = state.params
+            # the round-index operand: a CodecSchedule resolves its phase
+            # from it in-jit (None on unscheduled links — no counter leaf)
+            r = state.round if scheduled else None
             # key-splitting order matches the legacy round exactly, so the
             # fedavg shim (and any same-key replay) is bit-identical
             k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
@@ -760,7 +935,7 @@ class RoundEngine:
             nk_sel = nk[idx]
 
             # --- stage 2a: downlink --------------------------------------
-            down = link.down(server_params, spec, k_down)
+            down = link.down(server_params, spec, k_down, r=r)
 
             # --- stage 3: local QAT training over the cohort -------------
             loc_keys = jax.random.split(k_loc, P)
@@ -777,21 +952,33 @@ class RoundEngine:
             )
 
             # --- stage 2b: uplink ----------------------------------------
-            msgs = link.up(client_params, spec, k_up, P)
+            # `down` is the round's reference model: every client started
+            # local training from it, so a DeltaCodec uplink quantizes the
+            # residual against a tree both ends hold
+            msgs = link.up(client_params, spec, k_up, P, ref=down, r=r)
 
             # --- stage 4: server aggregation -----------------------------
             new_params, new_opt = aggregator(
                 server_params, msgs, nk_sel, k_srv, state.opt
             )
 
-            return ServerState(new_params, new_opt), {
+            if scheduled:
+                # per-phase static sub-GiB guard, then the traced per-round
+                # count resolved from the round-index operand
+                for pr in _schedule_probe_rounds(link):
+                    _exact_round_bytes(link, spec, P, pr)
+                wire_b = link.traced_round_bytes(spec, P, r)
+            else:
+                wire_b = jnp.asarray(
+                    _exact_round_bytes(link, spec, P), jnp.int32
+                )
+            return ServerState(new_params, new_opt,
+                               (r + 1) if scheduled else ()), {
                 "local_loss": jnp.mean(losses),
                 # exact bytes moved this round: P uplink payloads + P
                 # downlink copies of the broadcast (Figure 1 accounting),
                 # each leg charged at its own payload size
-                "wire_bytes": jnp.asarray(
-                    _exact_round_bytes(link, spec, P), jnp.int32
-                ),
+                "wire_bytes": wire_b,
             }
 
         return round_fn
@@ -819,10 +1006,12 @@ class RoundEngine:
         _, padded = ex.pad_to_shards(P)
         sampler, link, aggregator = self.sampler, self.link, self.aggregator
         local_update = self._local_update
+        scheduled = self.scheduled
 
         def round_fn(state: ServerState, data: Array, labels: Array,
                      nk: Array, key: Array):
             server_params = state.params
+            r = state.round if scheduled else None
             k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
 
             spec = wire.make_wire_spec(server_params)
@@ -832,7 +1021,7 @@ class RoundEngine:
             nk_sel = nk[idx]
 
             # --- stage 2a: downlink (replicated: ONE encode+decode) ------
-            down = link.down(server_params, spec, k_down)
+            down = link.down(server_params, spec, k_down, r=r)
 
             # same fan-out as the local round; the pad wraps cohort rows
             # (keys included) so padded clients are exact duplicates whose
@@ -843,7 +1032,7 @@ class RoundEngine:
             sel = idx[pad_idx]
 
             # --- stages 3 + 2b: per-shard training, u8 uplink gather -----
-            def shard_fn(dn, d, l, lk, uk):
+            def shard_body(dn, d, l, lk, uk, r_op):
                 client_params, losses = ex.run_shard(
                     local_update, dn, d, l, lk, P
                 )
@@ -852,18 +1041,35 @@ class RoundEngine:
                 client_params, losses = jax.lax.optimization_barrier(
                     (client_params, losses)
                 )
-                msgs = link.up_gather(client_params, uk, axis, n_keep=P)
+                msgs = link.up_gather(client_params, uk, axis, n_keep=P,
+                                      ref=dn, r=r_op)
                 g = jax.lax.all_gather(losses, axis)
                 return msgs, g.reshape(-1)[:P]
 
             sh = PartitionSpec(axis)
-            msgs, losses = shard_map(
-                shard_fn, mesh=mesh,
-                in_specs=(PartitionSpec(), sh, sh, sh, sh),
-                out_specs=(PartitionSpec(), PartitionSpec()),
-                check_rep=False,
-            )(down, data[sel], labels[sel], loc_keys[pad_idx],
-              up_keys[pad_idx])
+            rep = PartitionSpec()
+            if scheduled:
+                # the round-index rides replicated into the shard so the
+                # scheduled uplink resolves its phase inside shard_map
+                msgs, losses = shard_map(
+                    shard_body, mesh=mesh,
+                    in_specs=(rep, sh, sh, sh, sh, rep),
+                    out_specs=(rep, rep),
+                    check_rep=False,
+                )(down, data[sel], labels[sel], loc_keys[pad_idx],
+                  up_keys[pad_idx], r)
+            else:
+                # no extra operand on unscheduled links: the lowering (and
+                # its pinned bitwise-parity contract) is unchanged
+                msgs, losses = shard_map(
+                    lambda dn, d, l, lk, uk: shard_body(dn, d, l, lk, uk,
+                                                        None),
+                    mesh=mesh,
+                    in_specs=(rep, sh, sh, sh, sh),
+                    out_specs=(rep, rep),
+                    check_rep=False,
+                )(down, data[sel], labels[sel], loc_keys[pad_idx],
+                  up_keys[pad_idx])
 
             # --- stage 4: server aggregation (replicated) ----------------
             # inside its own fully-replicated shard_map: left to GSPMD, the
@@ -886,14 +1092,21 @@ class RoundEngine:
                 check_rep=False,
             )(server_params, msgs, nk_sel, k_srv, state.opt, losses)
 
-            return ServerState(new_params, new_opt), {
-                "local_loss": mean_loss,
-                # logical round bytes are schedule-invariant: P clients
-                # still exchange one model copy per leg (the u8 gather IS
-                # the uplink payloads, merely batched per device)
-                "wire_bytes": jnp.asarray(
+            if scheduled:
+                for pr in _schedule_probe_rounds(link):
+                    _exact_round_bytes(link, spec, P, pr)
+                wire_b = link.traced_round_bytes(spec, P, r)
+            else:
+                wire_b = jnp.asarray(
                     _exact_round_bytes(link, spec, P), jnp.int32
-                ),
+                )
+            return ServerState(new_params, new_opt,
+                               (r + 1) if scheduled else ()), {
+                "local_loss": mean_loss,
+                # logical round bytes are executor-schedule-invariant: P
+                # clients still exchange one model copy per leg (the u8
+                # gather IS the uplink payloads, merely batched per device)
+                "wire_bytes": wire_b,
             }
 
         return round_fn

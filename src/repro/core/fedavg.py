@@ -57,6 +57,13 @@ def make_round(
             "the legacy make_round signature cannot thread it across "
             "rounds — drive RoundEngine (or FedSim) directly instead"
         )
+    if engine.scheduled:
+        raise ValueError(
+            "the link carries a CodecSchedule, whose round-index counter "
+            "the legacy make_round signature cannot thread across rounds "
+            "(it would reset every call) — drive RoundEngine (or FedSim) "
+            "directly instead"
+        )
 
     def round_fn(server_params: PyTree, data: Array, labels: Array,
                  nk: Array, key: Array):

@@ -162,22 +162,42 @@ class FedSim:
         hist = FedHistory()
         total_bytes = 0
         traced_bytes: int | None = None
+        # under a CodecSchedule the per-round bytes change with the round
+        # index, but piecewise-constantly: resolve them STATICALLY per
+        # round from the schedule (asserted equal to the traced wire_bytes
+        # in tests/test_codec.py) so the loop still never blocks async
+        # dispatch on a device fetch. The wire layout is round-invariant:
+        # derive the spec + per-round counts ONCE, outside the hot loop.
+        scheduled = getattr(self.engine, "scheduled", False)
+        sched_bytes: list[int] = []
+        if scheduled:
+            from . import wire as wire_lib
+
+            r0 = int(self.state.round)
+            spec = wire_lib.make_wire_spec(self.state.params)
+            sched_bytes = [
+                self.engine.round_bytes(r=r0 + i, spec=spec)
+                for i in range(rounds)
+            ]
         for r in range(1, rounds + 1):
             key, k_round = jax.random.split(key)
             self.state, m = self._round(
                 self.state, self.client_data, self.client_labels, self.nk,
                 k_round,
             )
-            # charge the bytes the traced round actually moved (the engine's
-            # wire_bytes reads the real payload layout of each link leg at
-            # trace time) — the static estimate in self.bytes_per_round is
-            # kept for planning and is asserted equal in
-            # tests/test_fedsim_accounting.py. It is a trace-time constant,
-            # so fetch it ONCE: an int() every round would block async
-            # dispatch on device completion.
-            if traced_bytes is None:
-                traced_bytes = int(m["wire_bytes"])
-            total_bytes += traced_bytes
+            if scheduled:
+                total_bytes += sched_bytes[r - 1]
+            else:
+                # charge the bytes the traced round actually moved (the
+                # engine's wire_bytes reads the real payload layout of each
+                # link leg at trace time) — the static estimate in
+                # self.bytes_per_round is kept for planning and is asserted
+                # equal in tests/test_fedsim_accounting.py. It is a
+                # trace-time constant, so fetch it ONCE: an int() every
+                # round would block async dispatch on device completion.
+                if traced_bytes is None:
+                    traced_bytes = int(m["wire_bytes"])
+                total_bytes += traced_bytes
             if eval_data is not None and (r % eval_every == 0 or r == rounds):
                 acc = self.evaluate(*eval_data)
                 hist.rounds.append(r)

@@ -3,14 +3,15 @@
 The paper's headline metric is the *communication gain*: bytes transferred
 by FP32 FedAvg divided by bytes transferred by FP8FedAvg-UQ(+), each
 measured up to the round where the method reaches its comparison accuracy.
-This module computes exact per-round payloads:
 
-* FP8-quantized weight tensor  -> 1 byte / element  (+ 4 bytes per clip value)
-* everything else (biases, norm parameters, clip values themselves)
-                               -> 4 bytes / element
-
-Both uplink (P clients -> server) and downlink (server -> P clients) are
-counted, matching Figure 1 of the paper.
+Payload sizes are owned by the wire codecs (``core.codec``) — every
+function here delegates to ``codec.payload_nbytes``/``leg_nbytes``, so
+the accounting is exact per codec, not hardwired to "quantized == 1
+byte/element": the FP8 wire is 1 byte/element (+ FP32 riders), sub-byte
+packed formats are ``bits/8`` bytes/element, delta legs add one fresh
+FP32 clip scalar per leaf, and FP32 legs are 4 bytes/element. Both uplink
+(P clients -> server) and downlink (server -> P clients) are counted,
+matching Figure 1 of the paper.
 """
 from __future__ import annotations
 
@@ -22,55 +23,59 @@ import numpy as np
 PyTree = Any
 
 
-def payload_bytes(params: PyTree, quantized: bool) -> int:
-    """Bytes to transmit one model copy.
+def payload_bytes(params: PyTree, quantized: bool = True,
+                  codec: Any = None) -> int:
+    """Bytes to transmit one model copy — delegated to the wire codec.
 
-    For the quantized case this reads off the actual wire layout
-    (``core.wire.WireSpec``): the uint8 codes buffer is exactly
-    ``spec.total`` bytes — 1 byte per quantized element, no padding on the
-    wire — and every other element (biases, norms, clip values) rides FP32.
-    All FP8 formats (E4M3, E5M2, ...) are one byte per element, so only
-    *whether* a direction is quantized changes its size, not which format
-    it uses.
+    ``codec`` is a ``core.codec`` WireCodec (or registry name); ``None``
+    keeps the legacy boolean: the default FP8 wire when ``quantized``
+    (every 8-bit format is 1 byte/element + FP32 riders) or the FP32
+    passthrough otherwise. Sub-byte and delta codecs report their own
+    exact payload sizes (``codec.payload_nbytes``), so this matches the
+    engine's traced ``wire_bytes`` per leg for every codec.
     """
+    from . import codec as codec_lib
     from . import wire
 
-    if not quantized:
-        return 4 * param_count(params)
+    if codec is None:
+        codec = codec_lib.get_codec("e4m3" if quantized else "fp32")
+    else:
+        codec = codec_lib.get_codec(codec)
     spec = wire.make_wire_spec(params)
-    return wire.payload_nbytes(spec)
+    return codec_lib.leg_nbytes(codec, spec)
 
 
 def round_bytes(params: PyTree, n_clients: int, quantized: bool = True,
-                up_quantized: bool | None = None) -> int:
+                up_quantized: bool | None = None,
+                down_codec: Any = None, up_codec: Any = None) -> int:
     """Uplink + downlink bytes for one communication round with P clients.
 
     ``quantized`` governs the downlink; ``up_quantized`` the uplink and
-    defaults to the downlink setting (the symmetric legacy call). An
-    asymmetric link (e.g. FP32 down / FP8 up) charges each direction at
-    its real payload size — matching the engine's traced ``wire_bytes``.
+    defaults to the downlink setting (the symmetric legacy call). The
+    ``down_codec``/``up_codec`` knobs override the booleans with explicit
+    wire codecs. Each direction is charged at its real payload size —
+    matching the engine's traced ``wire_bytes``.
     """
-    down = payload_bytes(params, quantized)
+    down = payload_bytes(params, quantized, codec=down_codec)
     up = payload_bytes(
-        params, quantized if up_quantized is None else up_quantized
+        params, quantized if up_quantized is None else up_quantized,
+        codec=up_codec,
     )
     return n_clients * (down + up)
 
 
-def round_bytes_for(params: PyTree, cfg: Any) -> int:
+def round_bytes_for(params: PyTree, cfg: Any, r: int = 0) -> int:
     """Static round-byte estimate for a :class:`repro.core.engine.FedConfig`,
-    honoring its per-direction link modes."""
+    honoring its per-direction codecs (legacy (fmt, mode) knobs resolve
+    through the same registry). ``r`` selects the round for configs with a
+    ``codec_schedule``."""
+    from . import codec as codec_lib
     from . import wire
 
     spec = wire.make_wire_spec(params)
-    has_q = bool(spec.q_slots)
-    _, down_mode = cfg.resolved_down
-    _, up_mode = cfg.resolved_up
-    return round_bytes(
-        params, cfg.clients_per_round,
-        quantized=down_mode != "none" and has_q,
-        up_quantized=up_mode != "none" and has_q,
-    )
+    down = codec_lib.leg_nbytes(cfg.resolved_down_codec, spec, r)
+    up = codec_lib.leg_nbytes(cfg.resolved_up_codec, spec, r)
+    return cfg.clients_per_round * (down + up)
 
 
 def param_count(params: PyTree) -> int:

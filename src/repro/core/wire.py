@@ -33,6 +33,14 @@ weight fake-quant and the UQ+ server optimizer). The wire keeps its own
 ``WireSpec`` layout on top of it: payload codes pack each leaf
 *contiguously* so they slice back to exact wire bytes, whereas the plane
 pads per alpha segment for row/clip-value alignment.
+
+This module is the FP8 (1 code/byte) *implementation layer*. The
+first-class compression API lives in ``core.codec``: ``Fp8Codec``
+delegates here bit-for-bit, and the same ``WireSpec``/tile machinery
+backs the sub-byte packed formats (``PackedFpCodec``), residual encoding
+(``DeltaCodec``) and per-round schedules (``CodecSchedule``). New call
+sites should take a ``WireCodec``; the functions below remain the stable
+FP8 kernel surface they build on.
 """
 from __future__ import annotations
 

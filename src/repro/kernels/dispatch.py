@@ -269,6 +269,13 @@ def quant_pack_tiles(
         return fp8_quant.quant_pack_tiles(
             x2, a2, key2, fmt=fmt, interpret=interp
         )
+    return _quant_codes_jnp(x2, a2, key2, fmt)
+
+
+def _quant_codes_jnp(x2, a2, key2, fmt: FP8Format):
+    """Shared jnp fallback quantize-to-codes: the ONE owner of the
+    counter-RNG derivation that keeps fallback payloads bit-identical to
+    the kernels, for the 1-byte and sub-byte wires alike."""
     if key2 is None:
         q = fp8.quantize_det(x2, a2, fmt)
     else:
@@ -286,6 +293,36 @@ def unpack_tiles(c2: Array, a2: Array, fmt: FP8Format = E4M3) -> Array:
     if use:
         return fp8_quant.unpack_tiles(c2, a2, fmt=fmt, interpret=interp)
     return fp8.unpack_fp8(c2, a2, fmt).astype(jnp.float32)
+
+
+def quant_pack_sub_tiles(
+    x2: Array,                   # (R, LANE) wire tile layout
+    a2: Array,                   # (R, 1) or (R, LANE) clipping values
+    key2: Array | None = None,   # (2,) u32 key -> stochastic; None -> det
+    fmt: FP8Format | None = None,
+) -> Array:
+    """Quantize+pack at ``8 // fmt.bits`` codes per byte (sub-byte formats).
+
+    Same counter-RNG contract as :func:`quant_pack_tiles` — the jnp
+    fallback quantizes with the identical per-element bits and folds the
+    codes with the same little-endian sub-field layout, so packed payloads
+    are bit-identical across backends.
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.quant_pack_sub_tiles(
+            x2, a2, key2, fmt=fmt, interpret=interp
+        )
+    return fp8_quant.fold_codes(_quant_codes_jnp(x2, a2, key2, fmt), fmt)
+
+
+def unpack_sub_tiles(c2: Array, a2: Array, fmt: FP8Format | None = None) -> Array:
+    """Decode sub-byte packed code tiles back to (R, LANE) f32 grid values."""
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.unpack_sub_tiles(c2, a2, fmt=fmt, interpret=interp)
+    code = fp8_quant.unfold_codes(c2, fmt)
+    return fp8.unpack_fp8(code, a2, fmt).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

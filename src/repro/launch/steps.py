@@ -239,7 +239,8 @@ def aggregator_state_specs(aggregator, param_specs: PyTree) -> PyTree:
 def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
                     qcfg: QATConfig, mode: str = "rand",
                     wire: str = "fp8", aggregator=None,
-                    state_specs: PyTree | None = None):
+                    state_specs: PyTree | None = None,
+                    codec=None):
     """FedAvg round boundary over ``fl_axes`` as a shard_map'd collective.
 
     ``wire='fp8'`` moves uint8 codes (the paper's 4x compression as actual
@@ -249,9 +250,9 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
 
     ``aggregator=None`` keeps the fused in-collective mean and the legacy
     ``(params, key) -> params`` signature. Passing a ``core.engine``
-    Aggregator instead gathers the per-silo models (still ONE u8 payload
-    each on the fp8 wire — ``compression.fp8_wire_allgather``) and applies
-    the aggregator's tail, threading its server state:
+    Aggregator instead gathers the per-silo models (still ONE compressed
+    payload each on the coded wire — ``compression.fp8_wire_allgather``)
+    and applies the aggregator's tail, threading its server state:
     ``(params, comm_state, key) -> (params, comm_state)`` with
     ``comm_state = {"prev": previous_global_model, "opt": agg opt state}``
     (build the initial one with :func:`comm_round_state`). ``prev`` is the
@@ -261,6 +262,13 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
     previous boundary's output is identical on every silo, so the
     aggregator output is too. That is how FedAvgM/FedAdam momentum lives
     at a production round boundary.
+
+    ``codec`` (aggregator path only): a ``core.codec`` WireCodec or
+    registry name replacing the legacy ``(qcfg.fmt, mode)`` wire — e.g.
+    ``'fp4'`` for a 2-codes/byte boundary, or ``'delta:e4m3'``, whose
+    reference model is exactly ``comm_state["prev"]``: the previous global
+    model every silo already holds, so only the round's *update* crosses
+    the inter-silo wire.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -278,6 +286,12 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
         )
 
     if aggregator is None:
+        if codec is not None:
+            raise ValueError(
+                "codec= needs the aggregator path (the fused in-collective "
+                "mean is FP8-wire only); pass an Aggregator"
+            )
+
         def body(params, key):
             params = _perturb(params)
             if wire == "fp8" and mode != "none":
@@ -313,13 +327,22 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
         state_specs = aggregator_state_specs(aggregator, param_specs)
     comm_specs = {"prev": param_specs, "opt": state_specs}
 
+    resolved_codec = None
+    if codec is not None:
+        from ..core import codec as codec_lib
+
+        resolved_codec = codec_lib.get_codec(codec)
+
     def body_agg(params, comm_state, key):
         params = _perturb(params)
         k_wire, k_srv = jax.random.split(key)
         # mode passes through: 'rand' (unbiased), 'det' (biased ablation),
-        # 'none' (f32 gather — the FP32 baseline)
+        # 'none' (f32 gather — the FP32 baseline); codec= overrides with a
+        # first-class wire codec, ref = the previous global model (the one
+        # tree every silo is guaranteed to share — see docstring)
         stacked = compression.fp8_wire_allgather(
-            params, k_wire, fl_axes, qcfg.fmt, mode=mode
+            params, k_wire, fl_axes, qcfg.fmt, mode=mode,
+            codec=resolved_codec, ref=comm_state["prev"],
         )
         nk = jnp.ones((n_silos,), jnp.float32)
         # baseline = the previous GLOBAL model (replicated across silos),

@@ -1,0 +1,498 @@
+"""WireCodec API tests (core/codec.py): packed sub-byte wire, delta
+encoding, per-round schedules, registry/legacy-shim equivalence, and the
+exact static==traced byte-accounting contract per codec.
+
+These are the hypothesis-less twins of the property suite in
+``test_properties.py`` (the container may lack hypothesis): the same
+invariants, driven over a fixed grid of ragged pytrees instead of
+generated ones, so the codec contract is enforced by plain ``pytest`` in
+every lane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import codec as codec_lib, fp8, metrics, wire
+from repro.core.codec import (
+    CodecSchedule,
+    DeltaCodec,
+    Fp32Codec,
+    Fp8Codec,
+    PackedFpCodec,
+    codec_for,
+    get_codec,
+)
+from repro.core.engine import FedConfig, RoundEngine, WireLink
+from repro.core.fp8 import E4M3, E5M2, FP4_E2M1, FP4_E3M0
+from repro.core.qat import QATConfig, alpha_like, clip_value_mask, \
+    weight_decay_mask
+from repro.models import small
+
+
+def _tree(seed: int = 0):
+    """Ragged param-like pytree: odd shapes straddling the LANE width, a
+    stacked-alpha slab, and FP32 riders."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    w0 = jax.random.normal(ks[0], (7, 131)) * 2.0          # odd total (917)
+    w1 = jax.random.normal(ks[1], (3, 1025))               # straddles LANE
+    slab = jax.random.normal(ks[2], (2, 5, 33))            # stacked alpha
+    return {
+        "w0": w0, "w0_qa": alpha_like(w0),
+        "w1": w1, "w1_qa": alpha_like(w1),
+        "slab": slab, "slab_qa": alpha_like(slab, stacked=True),
+        "b": jax.random.normal(ks[3], (13,)),
+    }
+
+
+PACKED = [PackedFpCodec(FP4_E2M1, "rand"), PackedFpCodec(FP4_E2M1, "det"),
+          PackedFpCodec(FP4_E3M0, "rand")]
+
+
+@pytest.mark.parametrize("codec", PACKED, ids=lambda c: c.tag)
+def test_packed_exact_payload_bytes(codec):
+    """Sub-byte payloads are EXACTLY ceil(n * bits / 8) per leaf — ragged
+    and stacked-alpha leaves included — and payload_nbytes counts codes +
+    4 bytes per FP32 rider element."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    k = 8 // codec.fmt.bits
+    expect = sum(-(-v.size // k) for n, v in params.items()
+                 if not n.endswith("_qa") and v.ndim >= 2)
+    payload = codec.encode(params, spec, jax.random.PRNGKey(1))
+    assert payload["codes"].dtype == jnp.uint8
+    assert payload["codes"].shape == (expect,)
+    assert codec.code_nbytes(spec) == expect
+    assert codec.payload_nbytes(spec) == expect + 4 * spec.n_other_elems
+    # FP4 is exactly half the FP8 codes for even-size leaves, ceil for odd
+    leaf_sizes = [v.size for n, v in params.items()
+                  if not n.endswith("_qa") and v.ndim >= 2]
+    assert codec.code_nbytes(spec) == sum(-(-s // 2) for s in leaf_sizes)
+
+
+@pytest.mark.parametrize("codec", PACKED, ids=lambda c: c.tag)
+def test_packed_decode_encode_fixed_point(codec):
+    """decode∘encode is a fixed point: re-encoding the decoded tree (fresh
+    key!) reproduces the codes AND values bitwise in det and rand modes —
+    grid points straddle no bin."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    p1 = codec.encode(params, spec, jax.random.PRNGKey(1))
+    once = codec.decode(p1, spec)
+    p2 = codec.encode(once, spec, jax.random.PRNGKey(99))
+    np.testing.assert_array_equal(np.asarray(p1["codes"]),
+                                  np.asarray(p2["codes"]))
+    twice = codec.decode(p2, spec)
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("codec", PACKED, ids=lambda c: c.tag)
+def test_packed_grid_membership_and_riders(codec):
+    """Decoded per-tensor-alpha leaves land on the sub-byte format's grid
+    (the SAME parametric grid as FP8 at (exp, mant)); riders — clip values
+    and sub-2D leaves — cross the wire bitwise."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    payload = codec.encode(params, spec, jax.random.PRNGKey(2))
+    out = codec.decode(payload, spec)
+    for name, v in out.items():
+        if name.endswith("_qa") or v.ndim < 2:
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(params[name]),
+                err_msg=f"rider {name} changed")
+            continue
+        if params[name + "_qa"].size != 1:
+            continue
+        alpha = float(params[name + "_qa"])
+        grid = fp8.quantization_grid(alpha, codec.fmt)
+        full = np.concatenate([-grid[::-1], grid])
+        arr = np.asarray(v).ravel()
+        dist = np.min(np.abs(arr[:, None] - full[None, :]), axis=1)
+        assert dist.max() < 1e-5 * max(alpha, 1.0), name
+
+
+@pytest.mark.parametrize("codec", PACKED, ids=lambda c: c.tag)
+def test_packed_fake_quant_matches_wire(codec):
+    """The fused fake-quant transit observes what a payload receiver
+    decodes (same key, same grid point, 1 f32 ULP at clip scale)."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    key = jax.random.PRNGKey(3)
+    via_wire = codec.decode(codec.encode(params, spec, key), spec)
+    fused = codec.fake_quant(params, spec, key)
+    for name in via_wire:
+        a, b = np.asarray(via_wire[name]), np.asarray(fused[name])
+        if name.endswith("_qa") or a.ndim < 2:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+            continue
+        alpha = float(np.max(np.asarray(params[name + "_qa"])))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=4e-7 * alpha,
+                                   err_msg=name)
+
+
+def test_packed_codes_fit_sub_byte_fields():
+    """Every 4-bit code pair uses only its own nibble (no cross-element
+    bit bleed): unfolding the payload reproduces codes < 2^bits."""
+    from repro.kernels.fp8_quant import unfold_codes
+
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    codec = PackedFpCodec(FP4_E2M1, "rand")
+    payload = codec.encode(params, spec, jax.random.PRNGKey(4))
+    codes = np.asarray(unfold_codes(
+        jnp.asarray(payload["codes"])[None, :], codec.fmt
+    ))
+    assert codes.max() < 2 ** codec.fmt.bits
+
+
+# ---------------------------------------------------------------------------
+# DeltaCodec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "inner", [Fp8Codec(E4M3, "rand"), PackedFpCodec(FP4_E2M1, "rand")],
+    ids=lambda c: c.tag)
+def test_delta_roundtrip_error_scales_with_residual(inner):
+    """Transmitting the residual quantizes on the RESIDUAL's grid: for a
+    small update the absolute error is far below the plain codec's (whose
+    grid spans the whole weight range), at (<=) the same byte count."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    eps = 1e-3
+    ref = {n: (v - eps if not n.endswith("_qa") and v.ndim >= 2 else v)
+           for n, v in params.items()}
+    delta = DeltaCodec(inner)
+    out_d = delta.decode(
+        delta.encode(params, spec, jax.random.PRNGKey(5), ref=ref),
+        spec, ref=ref)
+    out_p = inner.decode(
+        inner.encode(params, spec, jax.random.PRNGKey(5)), spec)
+    for n, v in params.items():
+        if n.endswith("_qa") or v.ndim < 2:
+            np.testing.assert_array_equal(np.asarray(out_d[n]),
+                                          np.asarray(v), err_msg=n)
+            continue
+        err_d = np.max(np.abs(np.asarray(out_d[n]) - np.asarray(v)))
+        err_p = np.max(np.abs(np.asarray(out_p[n]) - np.asarray(v)))
+        # residual grid spacing ~ eps vs weight grid spacing ~ alpha
+        assert err_d <= eps, (n, err_d)
+        assert err_d < err_p / 10, (n, err_d, err_p)
+    assert delta.code_nbytes(spec) == inner.code_nbytes(spec)
+    assert delta.payload_nbytes(spec) == (
+        inner.payload_nbytes(spec) + 4 * len(spec.q_slots))
+
+
+def test_delta_unbiased():
+    """E[decode(encode(w))] == w with a stochastic inner rounding — SR of
+    the delta preserves Lemma 3's unbiasedness (the fresh per-leaf clip
+    value max|residual| guarantees no clipping)."""
+    params = _tree(seed=7)
+    spec = wire.make_wire_spec(params)
+    ref = {n: (v * 0.98 if not n.endswith("_qa") and v.ndim >= 2 else v)
+           for n, v in params.items()}
+    delta = DeltaCodec(Fp8Codec(E4M3, "rand"))
+    fq = jax.jit(lambda k: delta.fake_quant(params, spec, k, ref=ref))
+    n_keys = 400
+    acc = np.zeros_like(np.asarray(params["w0"]))
+    for i in range(n_keys):
+        acc += np.asarray(fq(jax.random.PRNGKey(1000 + i))["w0"])
+    mean = acc / n_keys
+    resid_scale = float(np.max(np.abs(
+        np.asarray(params["w0"]) - np.asarray(ref["w0"]))))
+    # bias of an unbiased SR estimate: ~ S/sqrt(N) with S the bin size
+    bias = np.abs(mean - np.asarray(params["w0"])).mean()
+    assert bias < 5 * resid_scale / np.sqrt(n_keys), (bias, resid_scale)
+
+
+def test_delta_requires_ref_and_rejects_downlink():
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    delta = get_codec("delta:e4m3")
+    assert isinstance(delta, DeltaCodec)
+    with pytest.raises(ValueError, match="reference"):
+        delta.encode(params, spec, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="downlink"):
+        WireLink(down_codec="delta:e4m3")
+
+
+# ---------------------------------------------------------------------------
+# Registry / legacy-shim resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_shim():
+    assert get_codec("e4m3") == Fp8Codec(E4M3, "rand")
+    assert get_codec("e5m2_det") == Fp8Codec(E5M2, "det")
+    assert get_codec("fp4") == PackedFpCodec(FP4_E2M1, "rand")
+    assert get_codec("delta:fp4_e3m0").inner == PackedFpCodec(FP4_E3M0,
+                                                              "rand")
+    assert isinstance(get_codec("none"), Fp32Codec)
+    with pytest.raises(KeyError, match="unknown codec"):
+        get_codec("e9m9")
+    # the legacy-knob deprecation map
+    assert codec_for(E4M3, "rand") == get_codec("e4m3")
+    assert codec_for(E5M2, "det") == get_codec("e5m2_det")
+    assert codec_for(E4M3, "none") == Fp32Codec()
+    assert codec_for(FP4_E2M1, "rand") == get_codec("fp4")
+    # codec objects pass through
+    sched = CodecSchedule(("e5m2", "fp4"), (3,))
+    assert get_codec(sched) is sched
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="boundaries"):
+        CodecSchedule(("e4m3", "e5m2"), ())
+    with pytest.raises(ValueError, match="increase"):
+        CodecSchedule(("e4m3", "e5m2", "fp4"), (5, 5))
+    with pytest.raises(ValueError, match="grid codecs"):
+        CodecSchedule(("e4m3", "fp32"), (2,))
+    s = CodecSchedule(("e5m2", "e4m3", "fp4"), (2, 5))
+    assert [s.at(r).tag for r in (0, 1, 2, 4, 5, 9)] == [
+        "e5m2", "e5m2", "e4m3", "e4m3", "fp4_e2m1", "fp4_e2m1"]
+    assert [int(s.phase(jnp.int32(r))) for r in (0, 2, 5)] == [0, 1, 2]
+
+
+def test_legacy_knobs_resolve_to_codecs():
+    cfg = FedConfig(comm_mode="det", fmt=E5M2)
+    assert cfg.resolved_down_codec == Fp8Codec(E5M2, "det")
+    cfg = FedConfig(comm_mode="rand", down_mode="none", up_fmt=E5M2)
+    assert isinstance(cfg.resolved_down_codec, Fp32Codec)
+    assert cfg.resolved_up_codec == Fp8Codec(E5M2, "rand")
+    # codec knobs win over legacy knobs; schedule wins over both
+    cfg = FedConfig(comm_mode="det", down_codec="fp4")
+    assert cfg.resolved_down_codec == PackedFpCodec(FP4_E2M1, "rand")
+    sched = CodecSchedule(("e4m3", "fp4"), (2,))
+    cfg = FedConfig(down_codec="fp4", codec_schedule=sched)
+    assert cfg.resolved_down_codec is sched
+
+
+def test_wirelink_legacy_kwargs_bit_identical_to_codec_objects():
+    """A link built from legacy (fmt, mode) kwargs and one built from the
+    resolved codec objects run the SAME leg ops — bitwise."""
+    params = _tree()
+    spec = wire.make_wire_spec(params)
+    legacy = WireLink(down_fmt=E4M3, up_fmt=E5M2,
+                      down_mode="rand", up_mode="det")
+    explicit = WireLink(down_codec=Fp8Codec(E4M3, "rand"),
+                        up_codec=Fp8Codec(E5M2, "det"))
+    k = jax.random.PRNGKey(11)
+    a = legacy.down(params, spec, k)
+    b = explicit.down(params, spec, k)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x * 1.01]), params)
+    a = legacy.up(stacked, spec, k, 2)
+    b = explicit.up(stacked, spec, k, 2)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert legacy.down_bytes(spec) == explicit.down_bytes(spec)
+    assert legacy.up_bytes(spec) == explicit.up_bytes(spec)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: engine/FedSim with codec links (static == traced bytes)
+# ---------------------------------------------------------------------------
+
+
+def _sim(cfg):
+    from repro.core.fedsim import FedSim
+
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    k = cfg.n_clients
+    cx = jax.random.normal(jax.random.PRNGKey(1), (k, 16, 8))
+    cy = jax.random.randint(jax.random.PRNGKey(2), (k, 16), 0, 4)
+    return FedSim(params, loss, apply, opt, cfg, cx, cy,
+                  jnp.full((k,), 16.0)), params
+
+
+_BASE = dict(n_clients=4, participation=1.0, local_steps=2, batch_size=8,
+             qat=QATConfig())
+
+CODEC_VARIANTS = [
+    ("fp4_both", dict(down_codec="fp4", up_codec="fp4")),
+    ("fp4_e3m0_det", dict(down_codec="fp4_e3m0_det",
+                          up_codec="fp4_e3m0_det")),
+    ("delta_up", dict(up_codec="delta:e4m3")),
+    ("delta_fp4_up", dict(down_codec="fp4", up_codec="delta:fp4_e2m1")),
+]
+
+
+@pytest.mark.parametrize("kwargs", [v[1] for v in CODEC_VARIANTS],
+                         ids=[v[0] for v in CODEC_VARIANTS])
+def test_codec_static_equals_traced_bytes(kwargs):
+    cfg = FedConfig(**_BASE, **kwargs)
+    sim, params = _sim(cfg)
+    _, m = sim._round(sim.state, sim.client_data, sim.client_labels,
+                      sim.nk, jax.random.PRNGKey(0))
+    static = metrics.round_bytes_for(params, cfg)
+    assert static == sim.bytes_per_round
+    assert int(m["wire_bytes"]) == static, (int(m["wire_bytes"]), static)
+    hist = sim.run(2, jax.random.PRNGKey(6),
+                   eval_data=(jax.random.normal(jax.random.PRNGKey(4),
+                                                (24, 8)),
+                              jnp.zeros((24,), jnp.int32)),
+                   eval_every=1)
+    assert hist.cumulative_bytes == [static, 2 * static]
+
+
+def test_fp4_halves_quantized_leg_payload():
+    """Acceptance: PackedFpCodec FP4 halves the quantized-leg payload (the
+    codes buffer exactly; riders ride FP32 in both) vs the FP8 wire."""
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    spec = wire.make_wire_spec(params)
+    fp8_c, fp4_c = get_codec("e4m3"), get_codec("fp4")
+    # mlp leaves are even-sized -> exactly half
+    assert fp4_c.code_nbytes(spec) * 2 == fp8_c.code_nbytes(spec)
+    assert (fp4_c.payload_nbytes(spec) ==
+            fp8_c.payload_nbytes(spec) - fp8_c.code_nbytes(spec) // 2)
+    cfg8 = FedConfig(**_BASE)
+    cfg4 = FedConfig(**_BASE, down_codec="fp4", up_codec="fp4")
+    b8 = metrics.round_bytes_for(params, cfg8)
+    b4 = metrics.round_bytes_for(params, cfg4)
+    assert b4 < b8
+    assert b8 - b4 == cfg8.clients_per_round * fp8_c.code_nbytes(spec)
+
+
+def test_schedule_end_to_end_per_round_bytes_and_counter():
+    """A CodecSchedule resolves in-jit from the round-index operand: the
+    traced wire_bytes switches at the boundaries, matches the static
+    per-round accounting, ServerState.round threads, and FedSim charges
+    the per-round (not round-0) bytes."""
+    sched = CodecSchedule(("e5m2", "e4m3", "fp4"), (1, 3))
+    cfg = FedConfig(**_BASE, codec_schedule=sched)
+    sim, params = _sim(cfg)
+    assert sim.engine.scheduled
+    st = sim.state
+    assert int(st.round) == 0
+    seen = []
+    for r in range(4):
+        st, m = sim._round(st, sim.client_data, sim.client_labels, sim.nk,
+                           jax.random.PRNGKey(r))
+        seen.append(int(m["wire_bytes"]))
+        assert seen[-1] == metrics.round_bytes_for(params, cfg, r), r
+        assert seen[-1] == sim.engine.round_bytes(params, r)
+    assert int(st.round) == 4
+    # phases: e5m2 (r=0) == e4m3 (r=1,2, same byte count) > fp4 (r>=3)
+    assert seen[0] == seen[1] == seen[2] > seen[3]
+    hist = sim.run(4, jax.random.PRNGKey(9),
+                   eval_data=(jax.random.normal(jax.random.PRNGKey(4),
+                                                (24, 8)),
+                              jnp.zeros((24,), jnp.int32)),
+                   eval_every=1)
+    assert hist.cumulative_bytes == list(np.cumsum(seen))
+
+
+def test_schedule_rejected_by_stateless_shim():
+    from repro.core.fedavg import make_round
+
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05)
+    cfg = FedConfig(**_BASE,
+                    codec_schedule=CodecSchedule(("e4m3", "fp4"), (2,)))
+    with pytest.raises(ValueError, match="CodecSchedule"):
+        make_round(loss, opt, cfg)
+
+
+def test_unscheduled_state_has_no_round_leaf():
+    """Non-scheduled configs keep the exact pre-codec ServerState pytree
+    (round == () adds no leaf — checkpoints and shims unchanged)."""
+    cfg = FedConfig(**_BASE)
+    sim, _ = _sim(cfg)
+    assert sim.state.round == ()
+    n_leaves = len(jax.tree.leaves(sim.state))
+    assert n_leaves == len(jax.tree.leaves(sim.state.params))
+
+
+@pytest.mark.parametrize("codec_name", ["fp4", "delta:e4m3"])
+def test_make_comm_round_codec_wire(codec_name):
+    """The production round boundary takes a codec: the collective still
+    moves a single u8 payload per silo (half-size for FP4), and a delta
+    codec's reference is the threaded previous global model."""
+    import re
+
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core.engine import FedAvgM
+    from repro.launch.steps import comm_round_state, make_comm_round
+
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("pod",))
+    agg = FedAvgM(lr=1.0, momentum=0.9)
+    comm_state = comm_round_state(agg, params)
+    fn = make_comm_round(mesh, P(), ("pod",), QATConfig(),
+                         aggregator=agg, state_specs=P(),
+                         codec=codec_name)
+    new_params, new_state = jax.jit(fn)(params, comm_state,
+                                        jax.random.PRNGKey(0))
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+    txt = jax.jit(fn).lower(params, comm_state,
+                            jax.random.PRNGKey(0)).compile().as_text()
+    u8 = [ln for ln in txt.splitlines()
+          if re.search(r"=\s*u8\[", ln)
+          and re.search(r"all-gather(-start)?\(", ln)]
+    assert u8, f"{codec_name}: boundary lost the compressed wire"
+    spec = wire.make_wire_spec(params)
+    expect = get_codec(codec_name).code_nbytes(spec)
+    assert any(re.search(rf"u8\[1,{expect}\]", ln) for ln in u8), (
+        expect, u8)
+
+
+# ---------------------------------------------------------------------------
+# Sharded executor lane (multi-device): codecs through the fused u8 gather
+# ---------------------------------------------------------------------------
+
+
+SHARDED_VARIANTS = [
+    ("fp4", dict(down_codec="fp4", up_codec="fp4")),
+    ("delta_up", dict(up_codec="delta:e4m3")),
+    ("sched", dict(codec_schedule=CodecSchedule(("e5m2", "fp4"), (1,)))),
+]
+
+
+@pytest.mark.parametrize("kwargs", [v[1] for v in SHARDED_VARIANTS],
+                         ids=[v[0] for v in SHARDED_VARIANTS])
+def test_sharded_codec_rounds_bit_identical_to_local(virtual_devices,
+                                                     kwargs):
+    """ShardedExecutor rounds with packed / delta / scheduled uplinks are
+    bitwise equal to the local round under the same key, for multiple
+    rounds (schedule phases included) — the one-payload-all-gather
+    contract holds for every codec."""
+    from repro.launch.mesh import make_client_mesh
+
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=8, n_classes=4)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    K = 8
+    cx = jax.random.normal(jax.random.PRNGKey(1), (K, 16, 8))
+    cy = jax.random.randint(jax.random.PRNGKey(2), (K, 16), 0, 4)
+    nk = jnp.full((K,), 16.0)
+    base = dict(n_clients=K, participation=1.0, local_steps=2,
+                batch_size=8, qat=QATConfig())
+    mesh = make_client_mesh(4)
+    e_sh = RoundEngine(loss, opt, FedConfig(mesh=mesh, **base, **kwargs))
+    e_lo = RoundEngine(loss, opt, FedConfig(**base, **kwargs))
+    st_s, st_l = e_sh.init(params), e_lo.init(params)
+    rf_s, rf_l = jax.jit(e_sh.round_fn), jax.jit(e_lo.round_fn)
+    for r in range(3):
+        key = jax.random.PRNGKey(100 + r)
+        st_s, ms = rf_s(st_s, cx, cy, nk, key)
+        st_l, ml = rf_l(st_l, cx, cy, nk, key)
+        assert int(ms["wire_bytes"]) == int(ml["wire_bytes"]), r
+        for a, b in zip(jax.tree.leaves(st_s.params),
+                        jax.tree.leaves(st_l.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"round {r}")

@@ -28,6 +28,7 @@ import numpy as np
 import pytest
 
 from repro import optim
+from repro.core.codec import CodecSchedule
 from repro.core.engine import FedConfig, RoundEngine
 from repro.core.qat import (
     DISABLED,
@@ -67,6 +68,18 @@ VARIANTS = {
         comm_mode="rand", qat=QATConfig(),
         server_opt=ServerOptConfig(enabled=True, gd_steps=2, lr=0.1,
                                    n_grid=5),
+    ),
+    # --- codec-API variants (ISSUE 5): sub-byte / delta / schedule ------
+    "fp4_rand_mean": dict(comm_mode="rand", qat=QATConfig(),
+                          down_codec="fp4", up_codec="fp4"),
+    "fp4_e3m0_det_mean": dict(comm_mode="rand", qat=QATConfig(),
+                              down_codec="fp4_e3m0_det",
+                              up_codec="fp4_e3m0_det"),
+    "delta_up_mean": dict(comm_mode="rand", qat=QATConfig(),
+                          up_codec="delta:e4m3"),
+    "sched_e5m2_fp4_mean": dict(
+        comm_mode="rand", qat=QATConfig(),
+        codec_schedule=CodecSchedule(("e5m2", "fp4"), (1,)),
     ),
 }
 

@@ -311,3 +311,108 @@ def test_pack_unpack_roundtrip_both_formats():
         back = fp8.unpack_fp8(code, alpha, fmt)
         np.testing.assert_allclose(np.asarray(back), np.asarray(q),
                                    rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Codec-API properties (core/codec.py): sub-byte packed wire + delta legs
+# over the same generated pytrees. (The hypothesis-less twins of these
+# invariants run in every lane from tests/test_codec.py.)
+# ---------------------------------------------------------------------------
+
+from repro.core.codec import DeltaCodec, Fp8Codec, PackedFpCodec  # noqa: E402
+from repro.core.fp8 import FP4_E2M1, FP4_E3M0  # noqa: E402
+
+_PACKED = [
+    PackedFpCodec(FP4_E2M1, "rand"), PackedFpCodec(FP4_E2M1, "det"),
+    PackedFpCodec(FP4_E3M0, "rand"), PackedFpCodec(FP4_E3M0, "det"),
+]
+
+
+@settings(max_examples=20, deadline=None)
+@given(tr=wire_trees(), ci=st.integers(0, 3))
+def test_packed_payload_exact_bytes(tr, ci):
+    """Sub-byte payload bytes are EXACTLY ceil(n * bits / 8) per leaf for
+    any ragged/stacked-alpha pytree; riders stay 4 bytes/element."""
+    params, seed = tr
+    codec = _PACKED[ci]
+    spec = wire.make_wire_spec(params)
+    k = 8 // codec.fmt.bits
+    payload = codec.encode(params, spec, jax.random.PRNGKey(seed))
+    expect = sum(-(-v.size // k) for name, v in params.items()
+                 if not name.endswith("_qa") and v.ndim >= 2)
+    assert payload["codes"].dtype == jnp.uint8
+    assert payload["codes"].shape == (expect,)
+    assert codec.code_nbytes(spec) == expect
+    assert codec.payload_nbytes(spec) == expect + 4 * spec.n_other_elems
+
+
+@settings(max_examples=15, deadline=None)
+@given(tr=wire_trees(), ci=st.integers(0, 3))
+def test_packed_decode_encode_fixed_point(tr, ci):
+    """decode∘encode is a fixed point of the packed codec (codes and
+    values bitwise under re-encoding with a fresh key), det AND rand."""
+    params, seed = tr
+    codec = _PACKED[ci]
+    spec = wire.make_wire_spec(params)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p1 = codec.encode(params, spec, k1)
+    once = codec.decode(p1, spec)
+    p2 = codec.encode(once, spec, k2)
+    np.testing.assert_array_equal(np.asarray(p1["codes"]),
+                                  np.asarray(p2["codes"]))
+    twice = codec.decode(p2, spec)
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(tr=wire_trees(), ci=st.integers(0, 3))
+def test_packed_grid_membership_riders_untouched(tr, ci):
+    """Packed-decoded weights land on the (exp, mant) grid (per-tensor
+    alpha leaves); every FP32 rider crosses the wire bitwise."""
+    params, seed = tr
+    codec = _PACKED[ci]
+    spec = wire.make_wire_spec(params)
+    out = codec.decode(
+        codec.encode(params, spec, jax.random.PRNGKey(seed)), spec)
+    for name, v in out.items():
+        if name.endswith("_qa") or v.ndim < 2:
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(params[name]),
+                                          err_msg=f"rider {name}")
+            continue
+        if params[name + "_qa"].size != 1:
+            continue
+        alpha = float(np.max(np.asarray(params[name + "_qa"])))
+        grid = fp8.quantization_grid(alpha, codec.fmt)
+        full = np.concatenate([-grid[::-1], grid])
+        arr = np.asarray(v).reshape(-1)
+        dist = np.min(np.abs(arr[:, None] - full[None, :]), axis=1)
+        assert dist.max() < 1e-5 * max(alpha, 1.0), name
+
+
+@settings(max_examples=15, deadline=None)
+@given(tr=wire_trees(), scale=st.floats(1e-4, 1e-2, allow_nan=False,
+                                        width=32))
+def test_delta_roundtrip_within_residual_grid(tr, scale):
+    """DeltaCodec reconstruction error is bounded by the RESIDUAL's
+    clipping value (the fresh per-leaf max|params - ref| rider), not the
+    weight scale; riders cross bitwise."""
+    params, seed = tr
+    spec = wire.make_wire_spec(params)
+    ref = {n: (v * (1.0 - scale) if not n.endswith("_qa") and v.ndim >= 2
+               else v)
+           for n, v in params.items()}
+    codec = DeltaCodec(Fp8Codec(E4M3, "rand"))
+    out = codec.decode(
+        codec.encode(params, spec, jax.random.PRNGKey(seed), ref=ref),
+        spec, ref=ref)
+    for n, v in params.items():
+        if n.endswith("_qa") or v.ndim < 2:
+            np.testing.assert_array_equal(np.asarray(out[n]), np.asarray(v),
+                                          err_msg=n)
+        else:
+            # SR error <= one residual-grid bin <= the residual clip value
+            resid_alpha = scale * float(np.max(np.abs(np.asarray(v))))
+            err = np.max(np.abs(np.asarray(out[n]) - np.asarray(v)))
+            assert err <= resid_alpha * (1 + 1e-5) + 1e-12, (n, err)
