@@ -1,0 +1,154 @@
+"""Time-to-accuracy: buffered-async vs synchronous FedAvg under stragglers.
+
+The synchronous round engine waits for the slowest sampled client
+(``FaultModel.round_time``); :class:`repro.core.async_engine
+.BufferedAsyncEngine` folds whichever K updates arrive first. Both run
+the SAME pool, the same per-client latency table
+(``data.federated.client_latencies``), the same local solver and the same
+FP8 wire — the only variable is the round barrier. Per straggler
+distribution this records, into ``BENCH_async.json``:
+
+* the target accuracy (the lower of the two runs' best accuracies, so
+  both methods are known to reach it),
+* simulated seconds to reach it for each engine (``time_to_accuracy``),
+* the speedup ratio ``sync / async``.
+
+Expected shape (and the repo acceptance criterion): under a mild
+spread (``lognormal``) the engines are comparable — the sync barrier
+costs little when the cohort max is near the median. Under the heavy
+tail (``pareto``, alpha ~1.1: a few catastrophically slow devices) the
+sync clock is owned by the stragglers and buffered-async must win
+wall-clock-to-target.
+
+Fairness notes: the async server folds ``buffer_size`` updates per
+version and the sync server averages a ``cohort``-sized batch per round
+— ``buffer_size == cohort`` here, so both apply equally many client
+updates per model step. Async additionally keeps ``concurrency`` clients
+busy, which is the whole point: utilization does not stall on the tail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.async_engine import AsyncConfig, BufferedAsyncEngine
+from repro.core.engine import FedConfig
+from repro.core.faults import FaultModel
+from repro.core.fedsim import FedSim
+from repro.core.qat import clip_value_mask, weight_decay_mask
+from repro.data import client_latencies, partition_iid
+from repro.data.synthetic import synthetic_classification
+from repro.models import small
+
+# the two fleet profiles the acceptance criterion names: a mild bounded
+# spread and a catastrophic heavy tail (same median-ish scale)
+DISTS = [
+    ("lognormal", dict(dist="lognormal", param=0.5, scale=1.0)),
+    ("pareto", dict(dist="pareto", param=1.1, scale=1.0)),
+]
+
+
+def _setup(scale, seed=0):
+    d, n_classes = 32, 4
+    x, y = synthetic_classification(seed, scale["n_train"] + scale["n_test"],
+                                    d=d, n_classes=n_classes, noise=1.2)
+    n = scale["n_train"]
+    cx, cy, nk = partition_iid(x[:n], y[:n], k=scale["k"], seed=seed)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(seed), d_in=d, n_classes=n_classes)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    evald = (jnp.asarray(x[n:]), jnp.asarray(y[n:]))
+    return (params, loss, apply, opt,
+            (jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(nk)), evald)
+
+
+def run(full: bool = False, out_rows=None, seed: int = 0):
+    if full:
+        scale = dict(k=100, n_train=20000, n_test=4000, local_steps=20,
+                     batch=32, cohort=10, concurrency=30, rounds=120,
+                     eval_every=2)
+    else:
+        scale = dict(k=24, n_train=3000, n_test=800, local_steps=8,
+                     batch=32, cohort=6, concurrency=12, rounds=30,
+                     eval_every=2)
+    rows = out_rows if out_rows is not None else []
+    params, loss, apply, opt, data, evald = _setup(scale, seed)
+    cx, cy, nk = data
+    P = scale["cohort"]
+
+    base = dict(n_clients=scale["k"], participation=P / scale["k"],
+                local_steps=scale["local_steps"], batch_size=scale["batch"])
+
+    for dist_name, dist_kw in DISTS:
+        lat = client_latencies(scale["k"], seed=seed, **dist_kw)
+
+        # --- synchronous FedAvg: waits for the slowest cohort member ----
+        sync_cfg = FedConfig(
+            faults=FaultModel(straggler=dist_kw["dist"],
+                              straggler_scale=dist_kw["scale"],
+                              straggler_param=dist_kw["param"], seed=seed),
+            **base,
+        )
+        sim = FedSim(params, loss, apply, opt, sync_cfg, cx, cy, nk)
+        h_sync = sim.run(scale["rounds"], jax.random.PRNGKey(seed + 99),
+                         eval_data=evald, eval_every=scale["eval_every"])
+
+        # --- buffered async: same pool/latencies, no barrier ------------
+        acfg = AsyncConfig(buffer_size=P, concurrency=scale["concurrency"],
+                           staleness_alpha=0.5, seed=seed)
+        eng = BufferedAsyncEngine(loss, opt, FedConfig(**base), acfg)
+        _, h_async = eng.run(
+            params, cx, cy, jax.random.PRNGKey(seed + 99),
+            folds=scale["rounds"], latencies=lat, predict_fn=apply,
+            eval_data=evald, eval_every=scale["eval_every"],
+        )
+
+        # target both engines reach: slightly under the weaker run's best,
+        # so a last-eval photo finish cannot leave one side at None
+        target = round(0.98 * min(h_sync.best_accuracy(),
+                                  h_async.best_accuracy()), 4)
+        t_sync = h_sync.time_to_accuracy(target)
+        t_async = h_async.time_to_accuracy(target)
+        rows.append({
+            "bench": "async",
+            "dist": dist_name,
+            "target_acc": target,
+            "sync_s": None if t_sync is None else round(t_sync, 2),
+            "async_s": None if t_async is None else round(t_async, 2),
+            "speedup": (
+                None if not t_sync or not t_async
+                else round(t_sync / t_async, 3)
+            ),
+            "sync_best_acc": round(h_sync.best_accuracy(), 4),
+            "async_best_acc": round(h_async.best_accuracy(), 4),
+            "async_mean_staleness": (
+                round(h_async.mean_staleness[-1], 3)
+                if h_async.mean_staleness else 0.0
+            ),
+            "sync_mbytes": round(h_sync.cumulative_bytes[-1] / 1e6, 3),
+            "async_mbytes": round(h_async.cumulative_bytes[-1] / 1e6, 3),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(args.full)
+    with open("BENCH_async.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("dist,target_acc,sync_s,async_s,speedup")
+    for r in rows:
+        print(f"{r['dist']},{r['target_acc']},{r['sync_s']},"
+              f"{r['async_s']},{r['speedup']}")
+
+
+if __name__ == "__main__":
+    main()

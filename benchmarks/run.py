@@ -15,11 +15,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*",
-                    help="subset of: kernel table1 table2 fig2 format")
+                    help="subset of: kernel table1 table2 fig2 format async")
     args = ap.parse_args()
     which = set(args.only or ["kernel", "table1", "table2", "fig2"])
 
-    from . import fig2_curves, format_ablation, kernel_bench, \
+    from . import async_bench, fig2_curves, format_ablation, kernel_bench, \
         table1_comm_gain, table2_ablation
 
     t0 = time.time()
@@ -34,6 +34,8 @@ def main() -> None:
         fig2_curves.run(full=args.full, out_rows=rows)
     if "format" in which:
         format_ablation.run(full=args.full, out_rows=rows)
+    if "async" in which:
+        async_bench.run(full=args.full, out_rows=rows)
 
     # uniform CSV: name,us_per_call,derived
     print("name,us_per_call,derived")
@@ -55,6 +57,9 @@ def main() -> None:
         elif r["bench"] == "format":
             print(f"format/qat-{r['qat_fmt']}/comm-{r['comm_fmt']},,"
                   f"acc={r['final_acc']}")
+        elif r["bench"] == "async":
+            print(f"async/{r['dist']},,sync_s={r['sync_s']} "
+                  f"async_s={r['async_s']} speedup={r['speedup']}x")
     print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,90 @@
+"""Fault-tolerant federated training: stragglers, dropout, and the
+buffered-async engine, in ~1 minute.
+
+Three runs on the same heavy-tailed device fleet (pareto latencies — a
+few catastrophically slow clients):
+
+1. synchronous FedAvg, which waits for the slowest sampled client every
+   round (``FaultModel`` supplies the straggler clock);
+2. synchronous FedAvg with 20% per-round dropout and a half-cohort
+   quorum — survivors are renormalized, lost uplinks charge 0 bytes;
+3. :class:`~repro.core.async_engine.BufferedAsyncEngine` — no round
+   barrier: clients pull a versioned model, push staleness-discounted
+   updates, the server folds every ``buffer_size`` arrivals.
+
+    PYTHONPATH=src python examples/fed_async.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.async_engine import AsyncConfig, BufferedAsyncEngine
+from repro.core.engine import FedConfig
+from repro.core.faults import FaultModel
+from repro.core.fedsim import FedSim
+from repro.core.qat import QATConfig, clip_value_mask, weight_decay_mask
+from repro.data import client_latencies, partition_dirichlet, \
+    synthetic_classification
+
+
+def main():
+    from repro.models import small
+
+    xall, yall = synthetic_classification(0, 5000, d=32, n_classes=4,
+                                          noise=1.5)
+    x, y = xall[:4000], yall[:4000]
+    evald = (jnp.asarray(xall[4000:]), jnp.asarray(yall[4000:]))
+    k, P = 20, 5
+    cx, cy, nk = partition_dirichlet(x, y, k=k, concentration=0.5, seed=0)
+    cx, cy, nk = jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(nk)
+
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=32, n_classes=4)
+    loss = small.make_loss(apply)
+
+    def make_opt():
+        return optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                         trust_mask=clip_value_mask(params))
+
+    base = dict(n_clients=k, participation=P / k, local_steps=10,
+                batch_size=32, comm_mode="rand", qat=QATConfig())
+    straggle = dict(straggler="pareto", straggler_scale=1.0,
+                    straggler_param=1.1, seed=0)
+    rounds = 30
+
+    # 1. sync: the round clock is the cohort max over the pareto tail
+    sim = FedSim(params, loss, apply, make_opt(),
+                 FedConfig(**base, faults=FaultModel(**straggle)),
+                 cx, cy, nk)
+    h = sim.run(rounds, jax.random.PRNGKey(1), eval_data=evald, eval_every=5)
+    print(f"sync FedAvg          acc={h.best_accuracy():.3f} "
+          f"simulated_s={h.cumulative_time[-1]:8.1f}")
+
+    # 2. sync + 20% dropout, half-cohort quorum: rounds with < 3 survivors
+    # are discarded instead of averaging garbage
+    sim = FedSim(params, loss, apply, make_opt(),
+                 FedConfig(**base, min_quorum=0.5,
+                           faults=FaultModel(dropout=0.2, **straggle)),
+                 cx, cy, nk)
+    h = sim.run(rounds, jax.random.PRNGKey(1), eval_data=evald, eval_every=5)
+    print(f"sync + 20% dropout   acc={h.best_accuracy():.3f} "
+          f"simulated_s={h.cumulative_time[-1]:8.1f}")
+
+    # 3. buffered async: same fleet, same latency table, no barrier
+    eng = BufferedAsyncEngine(
+        loss, make_opt(), FedConfig(**base),
+        AsyncConfig(buffer_size=P, concurrency=10, staleness_alpha=0.5),
+    )
+    _, ha = eng.run(params, cx, cy, jax.random.PRNGKey(1), folds=rounds,
+                    latencies=client_latencies(k, dist="pareto", scale=1.0,
+                                               param=1.1, seed=0),
+                    predict_fn=apply, eval_data=evald, eval_every=5)
+    print(f"buffered async       acc={ha.best_accuracy():.3f} "
+          f"simulated_s={ha.time[-1]:8.1f} "
+          f"mean_staleness={ha.mean_staleness[-1]:.2f}")
+    print("\n=> same accuracy; the async engine is not billed for the "
+          "pareto tail.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,15 @@
-from .manager import CheckpointManager, save_checkpoint, load_checkpoint
+from .manager import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+    validate_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "load_checkpoint",
+    "save_checkpoint",
+    "validate_checkpoint",
+]

@@ -21,6 +21,8 @@ import json
 import os
 import shutil
 import tempfile
+import warnings
+import zipfile
 from typing import Any, Callable
 
 import jax
@@ -49,13 +51,22 @@ def _name(entry) -> str:
 
 def save_checkpoint(directory: str, step: int, tree: PyTree,
                     extra: dict | None = None) -> str:
-    """Atomic write of one checkpoint. Returns its final path."""
+    """Atomic write of one checkpoint. Returns its final path.
+
+    Both files are written into a hidden temp dir, flushed AND fsynced,
+    then the whole dir ``os.replace``s into its final name — readers
+    (and ``latest_step``) either see a complete checkpoint or none at
+    all; a crash mid-write leaves only a ``.tmp_*`` dir that
+    :func:`validate_checkpoint` would reject anyway."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"ckpt_{step:08d}")
     tmp = tempfile.mkdtemp(prefix=f".tmp_{step}_", dir=directory)
     try:
         flat = _flatten(tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "step": step,
             "keys": sorted(flat.keys()),
@@ -67,11 +78,45 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
             os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     return final
+
+
+def validate_checkpoint(path: str) -> str | None:
+    """Why ``path`` is NOT a restorable checkpoint — None when it is.
+
+    Catches every partial-write shape a crash can leave: missing or
+    unparseable manifest, missing payload, a truncated/bit-damaged
+    ``arrays.npz`` (zip CRC check over every member), and manifest keys
+    absent from the payload."""
+    man = os.path.join(path, "manifest.json")
+    npz = os.path.join(path, "arrays.npz")
+    if not os.path.isfile(man):
+        return "missing manifest.json"
+    if not os.path.isfile(npz):
+        return "missing arrays.npz"
+    try:
+        with open(man) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return f"unreadable manifest.json ({e})"
+    try:
+        with zipfile.ZipFile(npz) as z:
+            bad = z.testzip()
+            if bad is not None:
+                return f"corrupt array payload {bad!r} (CRC mismatch)"
+            names = {
+                n[:-4] if n.endswith(".npy") else n for n in z.namelist()
+            }
+    except (zipfile.BadZipFile, OSError) as e:
+        return f"truncated/corrupt arrays.npz ({e})"
+    missing = sorted(set(manifest.get("keys", [])) - names)
+    if missing:
+        return f"arrays missing from payload: {missing[:3]}"
+    return None
 
 
 def load_checkpoint(
@@ -84,11 +129,22 @@ def load_checkpoint(
 
     ``shard_fn(key, host_array)`` lets the caller device_put each leaf with
     its current-mesh sharding (elastic restore); default keeps host arrays.
+
+    With ``step=None`` the newest VALID checkpoint restores —
+    :func:`latest_step` skips (and warns on) partial/corrupt writes, so a
+    crash during ``save_checkpoint`` falls back to the previous step
+    instead of dying mid-restore. An explicitly requested corrupt ``step``
+    raises ``ValueError`` naming the damage.
     """
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"ckpt_{step:08d}")
+    reason = validate_checkpoint(path)
+    if reason is not None:
+        raise ValueError(
+            f"checkpoint {path} is not restorable: {reason}"
+        )
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -107,14 +163,28 @@ def load_checkpoint(
 
 
 def latest_step(directory: str) -> int | None:
+    """Newest step with a VALID checkpoint — partial/corrupt dirs (from a
+    crash mid-write or disk damage) are skipped with a warning, so resume
+    lands on the last good step instead of crashing mid-restore."""
     if not os.path.isdir(directory):
         return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("ckpt_")
-    ]
-    return max(steps) if steps else None
+    steps = sorted(
+        (
+            int(d.split("_")[1])
+            for d in os.listdir(directory)
+            if d.startswith("ckpt_")
+        ),
+        reverse=True,
+    )
+    for s in steps:
+        path = os.path.join(directory, f"ckpt_{s:08d}")
+        reason = validate_checkpoint(path)
+        if reason is None:
+            return s
+        warnings.warn(
+            f"skipping corrupt checkpoint {path}: {reason}", stacklevel=2
+        )
+    return None
 
 
 class CheckpointManager:

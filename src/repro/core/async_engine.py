@@ -1,0 +1,407 @@
+"""Buffered asynchronous federated aggregation (FedBuff-style).
+
+The synchronous engine (``core.engine``) waits for its slowest sampled
+client every round — under a heavy-tailed device fleet
+(``data.federated.client_latencies`` with a pareto/lognormal spread) the
+round clock is owned by the stragglers, not by the learning.
+:class:`BufferedAsyncEngine` removes the barrier:
+
+* Up to ``concurrency`` clients train at any moment. A client **pulls**
+  the current versioned global model (``ServerState.round`` is the
+  version counter), trains locally, and **pushes** a *delta-coded update
+  tagged with its base version*: the wire carries
+  ``decode(encode(trained, ref=base)) - base`` — exactly what a
+  :class:`~repro.core.codec.DeltaCodec` uplink reconstructs, so the FP8
+  compression recipe of the paper survives asynchrony per-update.
+* The server **buffers** pushed updates and folds the buffer into the
+  global model when it reaches size ``buffer_size`` (K) — the FedBuff
+  recipe (Nguyen et al., *Federated Learning with Buffered Asynchronous
+  Aggregation*): one fold == one version increment, regardless of which
+  clients contributed.
+
+**Staleness weighting.** An update based on version ``v`` folded at
+version ``V`` has staleness ``s = V - v`` (how many folds it missed while
+training). Each buffered update is discounted polynomially (Xie et al.,
+*Asynchronous Federated Optimization*):
+
+    w_i = (1 + s_i) ** (-staleness_alpha)
+
+and the fold applies the w-weighted mean of the buffered updates:
+
+    delta = sum_i w_i * u_i / sum_i w_i
+    m     = momentum * m + delta          (server momentum, optional)
+    params += server_lr * m
+
+``staleness_alpha = 0`` is the plain unweighted FedBuff mean;
+``momentum = 0`` collapses ``m`` to ``delta`` (no momentum buffer
+threaded). The momentum buffer travels in ``ServerState.opt`` exactly
+like the sync engine's FedAvgM state, so checkpoints treat both engines
+identically.
+
+**Timing and byte accounting.** The event loop is a simulated clock over
+the pool's deterministic per-client latencies: a freed slot immediately
+dispatches the next (uniformly sampled, currently-idle) client; its push
+lands ``latency[c]`` simulated seconds later. Every dispatched job
+charges one downlink model copy (the pull) at dispatch and one uplink
+payload (the push) at completion — a client that *drops* (an active
+``FaultModel``'s dropout applied per job) charges the pull but never the
+push, the same transmitted-payloads-only contract as the sync fault
+layer. All counts delegate to the link codecs, so they are exact for
+FP8 / sub-byte / delta wires alike.
+
+The loop is deterministic in ``(seed, configuration)`` — sampling comes
+from a seeded numpy generator and per-job jax keys are folded out of one
+root key — so golden tests can pin its trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import wire
+from .engine import FedConfig, ServerState, WireLink, make_local_update
+from .faults import FaultModel
+from ..optim.base import Optimizer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the buffered-async server (see module docstring)."""
+
+    buffer_size: int = 10        # K: fold the buffer at this many updates
+    concurrency: int = 20        # M: clients training at any moment
+    staleness_alpha: float = 0.5  # polynomial discount exponent (0 = off)
+    server_lr: float = 1.0       # eta on the folded delta
+    server_momentum: float = 0.0  # beta on the server momentum buffer
+    seed: int = 0                # dispatch-sampling seed
+
+    def __post_init__(self):
+        if self.buffer_size <= 0:
+            raise ValueError(
+                f"AsyncConfig.buffer_size must be positive, got "
+                f"{self.buffer_size}"
+            )
+        if self.concurrency <= 0:
+            raise ValueError(
+                f"AsyncConfig.concurrency must be positive, got "
+                f"{self.concurrency}"
+            )
+        if self.staleness_alpha < 0:
+            raise ValueError(
+                f"AsyncConfig.staleness_alpha must be >= 0, got "
+                f"{self.staleness_alpha}"
+            )
+        if not 0.0 <= self.server_momentum < 1.0:
+            raise ValueError(
+                f"AsyncConfig.server_momentum must be in [0, 1), got "
+                f"{self.server_momentum}"
+            )
+
+    @property
+    def has_momentum(self) -> bool:
+        return self.server_momentum > 0.0
+
+
+@dataclasses.dataclass
+class AsyncHistory:
+    """Trajectory of one async run, sampled every ``eval_every`` folds."""
+
+    versions: list[int] = dataclasses.field(default_factory=list)
+    time: list[float] = dataclasses.field(default_factory=list)
+    accuracy: list[float] = dataclasses.field(default_factory=list)
+    loss: list[float] = dataclasses.field(default_factory=list)
+    cumulative_bytes: list[int] = dataclasses.field(default_factory=list)
+    mean_staleness: list[float] = dataclasses.field(default_factory=list)
+
+    def best_accuracy(self) -> float:
+        return max(self.accuracy) if self.accuracy else 0.0
+
+    def time_to_accuracy(self, threshold: float) -> float | None:
+        for acc, t in zip(self.accuracy, self.time):
+            if acc >= threshold:
+                return t
+        return None
+
+    def bytes_to_accuracy(self, threshold: float) -> int | None:
+        for acc, b in zip(self.accuracy, self.cumulative_bytes):
+            if acc >= threshold:
+                return b
+        return None
+
+
+class BufferedAsyncEngine:
+    """Versioned-pull / buffered-push async federated training.
+
+    Reuses the sync stack end to end: ``make_local_update`` for the local
+    solver, :class:`WireLink` (any non-scheduled codec pair, DeltaCodec
+    uplink included) for both wire legs, and ``ServerState`` (``opt`` =
+    momentum buffer or ``()``, ``round`` = the int32 version counter) for
+    the threaded state. CodecSchedules are rejected: the schedule's
+    round-index contract is a *sync* notion (one global round counter);
+    async updates land against whatever version they pulled.
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        optimizer: Optimizer,
+        cfg: FedConfig,
+        acfg: AsyncConfig = AsyncConfig(),
+        *,
+        link: WireLink | None = None,
+    ):
+        self.cfg = cfg
+        self.acfg = acfg
+        self.link = link if link is not None else WireLink(
+            down_codec=cfg.resolved_down_codec,
+            up_codec=cfg.resolved_up_codec,
+        )
+        if self.link.has_schedule:
+            raise ValueError(
+                "BufferedAsyncEngine does not take a CodecSchedule: "
+                "per-round schedules assume the sync engine's single "
+                "global round counter"
+            )
+        self._local_update = make_local_update(loss_fn, optimizer, cfg)
+        self._job = jax.jit(self._build_job())
+        self._fold = jax.jit(self._build_fold())
+
+    # --- jitted kernels ----------------------------------------------------
+
+    def _build_job(self):
+        """One client job: pull (downlink transit), train, push (uplink
+        transit against the pulled base). Returns the *received update*
+        ``decode(encode(trained, ref=base)) - base`` — what the server
+        actually holds after the wire — plus the mean local loss."""
+        link = self.link
+        local_update = self._local_update
+
+        def job(params: PyTree, data: Array, labels: Array, key: Array):
+            k_down, k_loc, k_up = jax.random.split(key, 3)
+            spec = wire.make_wire_spec(params)
+            base = link.down(params, spec, k_down)
+            trained, loss = local_update(base, data, labels, k_loc)
+            # single-client uplink: the (1, ...) stack reuses WireLink.up
+            # so delta/packed codecs follow exactly the sync wire path
+            stacked = jax.tree.map(lambda x: x[None], trained)
+            received = link.up(stacked, spec, k_up, 1, ref=base)
+            update = jax.tree.map(
+                lambda r, b: r[0].astype(jnp.float32)
+                - b.astype(jnp.float32),
+                received, base,
+            )
+            return update, loss
+
+        return job
+
+    def _build_fold(self):
+        """Fold K buffered updates into the global model (see module
+        docstring for the staleness math)."""
+        acfg = self.acfg
+
+        def fold(state: ServerState, stacked: PyTree, staleness: Array):
+            w = (1.0 + staleness.astype(jnp.float32)) ** (
+                -acfg.staleness_alpha
+            )
+            w = w / jnp.sum(w)
+
+            def wmean(u):
+                wc = w.reshape((-1,) + (1,) * (u.ndim - 1))
+                return jnp.sum(wc * u, axis=0)
+
+            delta = jax.tree.map(wmean, stacked)
+            if acfg.has_momentum:
+                m = jax.tree.map(
+                    lambda mi, d: acfg.server_momentum * mi + d,
+                    state.opt, delta,
+                )
+                opt = m
+            else:
+                m = delta
+                opt = ()
+            params = jax.tree.map(
+                lambda p, d: (
+                    p.astype(jnp.float32) + acfg.server_lr * d
+                ).astype(p.dtype),
+                state.params, m,
+            )
+            return ServerState(params, opt, state.round + 1)
+
+        return fold
+
+    # --- server state ------------------------------------------------------
+
+    def init(self, params: PyTree) -> ServerState:
+        opt = (
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if self.acfg.has_momentum else ()
+        )
+        return ServerState(params, opt, jnp.zeros((), jnp.int32))
+
+    def job_bytes(self, params: PyTree) -> tuple[int, int]:
+        """(pull, push) bytes of one client job — exact, per the link
+        codecs. A dropped job charges only the pull."""
+        spec = wire.make_wire_spec(params)
+        return self.link.down_bytes(spec), self.link.up_bytes(spec)
+
+    # --- the event loop ----------------------------------------------------
+
+    def run(
+        self,
+        params: PyTree,
+        client_data: Array,          # (K, n_per, ...)
+        client_labels: Array,        # (K, n_per)
+        key: Array,
+        *,
+        folds: int,
+        latencies: np.ndarray | None = None,
+        faults: FaultModel | None = None,
+        predict_fn: Callable | None = None,
+        eval_data: tuple[Array, Array] | None = None,
+        eval_every: int = 10,
+        verbose: bool = False,
+    ) -> tuple[ServerState, AsyncHistory]:
+        """Simulate until ``folds`` buffer folds have been applied.
+
+        ``latencies`` is the pool's per-client job duration table
+        (``data.federated.client_latencies``); defaults to all-ones
+        (homogeneous fleet). ``faults`` contributes its latency table
+        (when ``latencies`` is not given) and its per-job dropout —
+        deadline/corruption knobs are sync-round notions and are ignored
+        here. Evaluation (``predict_fn`` on ``eval_data``) runs every
+        ``eval_every`` folds on the simulated clock.
+        """
+        cfg, acfg = self.cfg, self.acfg
+        n_clients = int(client_data.shape[0])
+        if latencies is None:
+            latencies = (
+                faults.latencies(n_clients)
+                if faults is not None and faults.straggler != "none"
+                else np.ones(n_clients, np.float32)
+            )
+        latencies = np.asarray(latencies, np.float64)
+        if latencies.shape != (n_clients,):
+            raise ValueError(
+                f"latencies must be shaped ({n_clients},), got "
+                f"{latencies.shape}"
+            )
+        drop_p = float(faults.dropout) if faults is not None else 0.0
+        M = min(acfg.concurrency, n_clients)
+
+        rng = np.random.default_rng(
+            np.random.SeedSequence([acfg.seed, n_clients, acfg.buffer_size])
+        )
+        state = self.init(params)
+        pull_b, push_b = self.job_bytes(params)
+
+        # model versions still referenced by in-flight jobs: version -> (tree,
+        # refcount). At most M+1 versions are live at once.
+        versions: dict[int, list] = {0: [state.params, 0]}
+
+        def retain(v):
+            versions[v][1] += 1
+
+        def release(v):
+            versions[v][1] -= 1
+            if versions[v][1] == 0 and v != int(state.round):
+                del versions[v]
+
+        # event heap: (completion_time, job_id, client, base_version)
+        events: list[tuple[float, int, int, int]] = []
+        busy: set[int] = set()
+        job_id = 0
+        t_now = 0.0
+        total_bytes = 0
+
+        def dispatch(t: float):
+            nonlocal job_id, total_bytes
+            idle = [c for c in range(n_clients) if c not in busy]
+            c = int(rng.choice(idle))
+            busy.add(c)
+            v = int(state.round)
+            retain(v)
+            heapq.heappush(events, (t + float(latencies[c]), job_id, c, v))
+            job_id += 1
+            total_bytes += pull_b  # the pull happens at dispatch
+
+        for _ in range(M):
+            dispatch(0.0)
+
+        buffer: list[PyTree] = []
+        buffer_staleness: list[int] = []
+        hist = AsyncHistory()
+        applied = 0
+        staleness_seen: list[int] = []
+
+        while applied < folds:
+            t_now, jid, c, base_v = heapq.heappop(events)
+            busy.discard(c)
+            dropped = drop_p > 0.0 and rng.random() < drop_p
+            if not dropped:
+                k_job = jax.random.fold_in(key, jid)
+                update, loss = self._job(
+                    versions[base_v][0], client_data[c], client_labels[c],
+                    k_job,
+                )
+                s = int(state.round) - base_v
+                buffer.append(update)
+                buffer_staleness.append(s)
+                staleness_seen.append(s)
+                total_bytes += push_b  # the push: transmitted payloads only
+            release(base_v)
+
+            # fold BEFORE re-dispatching the freed slot: the push and the
+            # fold are one server-side instant, so the replacement pull
+            # must see the post-fold version (serial M=1/K=1 operation is
+            # then staleness-free, as it should be)
+            if len(buffer) >= acfg.buffer_size:
+                stacked = jax.tree.map(
+                    lambda *us: jnp.stack(us), *buffer
+                )
+                state = self._fold(
+                    state, stacked, jnp.asarray(buffer_staleness, jnp.int32)
+                )
+                buffer.clear()
+                buffer_staleness.clear()
+                applied += 1
+                v = int(state.round)
+                versions[v] = [state.params, 0]
+                # drop no-longer-referenced old versions
+                for old in [u for u, (_, rc) in versions.items()
+                            if rc == 0 and u != v]:
+                    del versions[old]
+
+                if applied % eval_every == 0 or applied == folds:
+                    hist.versions.append(v)
+                    hist.time.append(t_now)
+                    hist.cumulative_bytes.append(total_bytes)
+                    hist.mean_staleness.append(
+                        float(np.mean(staleness_seen))
+                        if staleness_seen else 0.0
+                    )
+                    # a fold implies this event pushed, so `loss` is fresh
+                    hist.loss.append(float(loss))
+                    if predict_fn is not None and eval_data is not None:
+                        logits = predict_fn(
+                            state.params, eval_data[0], cfg.qat
+                        )
+                        acc = float(jnp.mean(
+                            (jnp.argmax(logits, -1) == eval_data[1])
+                            .astype(jnp.float32)
+                        ))
+                        hist.accuracy.append(acc)
+                        if verbose:
+                            print(
+                                f"fold {v:4d}  t {t_now:8.2f}  acc "
+                                f"{acc:.4f}  MB {total_bytes / 1e6:.1f}"
+                            )
+            dispatch(t_now)  # the freed slot starts the next client now
+        return state, hist

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 from . import codec as codec_lib
 from . import wire
 from .codec import CodecSchedule, DeltaCodec, Fp32Codec, WireCodec
+from .faults import FaultModel, quorum_count
 from .fp8 import E4M3, E5M2, FP8Format
 from .qat import QATConfig
 from .server_opt import ServerOptConfig, server_optimize, weighted_mean
@@ -137,10 +138,102 @@ class FedConfig:
     server_momentum: float | None = None  # FedAvgM beta / FedAdam beta1
     server_beta2: float | None = None     # FedAdam second-moment decay
     server_eps: float | None = None       # FedAdam tau
+    # --- fault tolerance (core.faults) -----------------------------------
+    # faults: a FaultModel injecting dropout / straggler-deadline /
+    # corruption between executor and uplink. None (or FaultModel.none())
+    # keeps the legacy round build — bitwise identical to the pre-fault
+    # engine. min_quorum: minimum surviving clients for the round to count
+    # (float in (0,1] = cohort fraction, int = absolute; 0 = any survivor).
+    # quorum_policy: 'skip' discards a below-quorum round (server state
+    # unchanged); 'degrade' proceeds with any nonzero survivor set.
+    faults: Any = None
+    min_quorum: float = 0.0
+    quorum_policy: str = "skip"
+
+    def __post_init__(self):
+        """Eager validation: every mistake below used to surface as a deep
+        jax trace error (or a silently-degenerate round) far from the
+        config that caused it — fail at construction with the fix named."""
+        if self.n_clients <= 0:
+            raise ValueError(
+                f"FedConfig.n_clients must be a positive client-pool size, "
+                f"got {self.n_clients}"
+            )
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"FedConfig.participation must be in (0, 1] (the sampled "
+                f"cohort fraction C), got {self.participation}"
+            )
+        if self.clients_per_round > self.n_clients:
+            raise ValueError(
+                f"cohort of {self.clients_per_round} exceeds the "
+                f"{self.n_clients}-client pool; lower participation or "
+                "grow n_clients"
+            )
+        if self.local_steps <= 0 or self.batch_size <= 0:
+            raise ValueError(
+                f"FedConfig.local_steps/batch_size must be positive, got "
+                f"{self.local_steps}/{self.batch_size}"
+            )
+        if self.chunk is not None and self.chunk <= 0:
+            raise ValueError(
+                f"FedConfig.chunk must be a positive per-scan client count "
+                f"(or None for full vmap), got {self.chunk}"
+            )
+        if self.sampler not in _SAMPLERS:
+            raise ValueError(
+                f"unknown sampler {self.sampler!r}; one of "
+                f"{sorted(_SAMPLERS)}"
+            )
+        if self.aggregator not in _AGGREGATOR_NAMES:
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; one of "
+                f"{sorted(_AGGREGATOR_NAMES)}"
+            )
+        if self.mesh is not None and self.client_axis not in getattr(
+            self.mesh, "axis_names", ()
+        ):
+            raise ValueError(
+                f"client_axis {self.client_axis!r} not on the given mesh "
+                f"(axes: {tuple(getattr(self.mesh, 'axis_names', ()))}); "
+                "build one with launch.mesh.make_client_mesh"
+            )
+        if self.quorum_policy not in ("skip", "degrade"):
+            raise ValueError(
+                f"quorum_policy {self.quorum_policy!r}: 'skip' (discard a "
+                "below-quorum round) or 'degrade' (proceed with survivors)"
+            )
+        if isinstance(self.min_quorum, float) and not (
+            0.0 <= self.min_quorum <= 1.0
+        ):
+            raise ValueError(
+                f"float min_quorum is a cohort fraction in [0, 1], got "
+                f"{self.min_quorum} (use an int for an absolute count)"
+            )
+        if isinstance(self.min_quorum, int) and not (
+            0 <= self.min_quorum <= self.clients_per_round
+        ):
+            raise ValueError(
+                f"int min_quorum must be in [0, cohort={self.clients_per_round}], "
+                f"got {self.min_quorum}"
+            )
+        if self.faults is not None and not isinstance(self.faults, FaultModel):
+            raise ValueError(
+                f"FedConfig.faults takes a core.faults.FaultModel (or "
+                f"None), got {type(self.faults).__name__}"
+            )
 
     @property
     def clients_per_round(self) -> int:
         return max(1, int(round(self.n_clients * self.participation)))
+
+    @property
+    def resolved_faults(self) -> "FaultModel | None":
+        """The active FaultModel — None when absent or statically fault-free
+        (``FaultModel.none()``), which keeps the legacy round build."""
+        if self.faults is None or self.faults.is_none:
+            return None
+        return self.faults
 
     # resolved per-direction link settings (legacy (fmt, mode) view)
     @property
@@ -444,11 +537,13 @@ class WireLink:
         """Exact bytes of one uplink model copy (static, per client)."""
         return codec_lib.leg_nbytes(self._up_c, spec, r)
 
-    def traced_round_bytes(self, spec: wire.WireSpec, cohort: int,
-                           r: Array) -> Array:
-        """Per-round wire bytes under a CodecSchedule, resolved from the
-        round-index operand: static per-phase tables, one ``take`` per
-        scheduled leg — still exact, still int32."""
+    def leg_bytes_traced(self, spec: wire.WireSpec,
+                         r: Array | None) -> tuple[Array, Array]:
+        """``(down, up)`` bytes of ONE model copy per leg as traced int32:
+        a scheduled leg resolves its phase from the round-index operand
+        (static per-phase table, one ``take``); a plain leg is a trace-time
+        constant. Exact — the fault path multiplies these by traced
+        participation counts."""
 
         def leg_traced(c):
             if isinstance(c, CodecSchedule):
@@ -459,7 +554,15 @@ class WireLink:
                 return jnp.take(table, c.phase(r))
             return jnp.asarray(codec_lib.leg_nbytes(c, spec), jnp.int32)
 
-        return cohort * (leg_traced(self._down_c) + leg_traced(self._up_c))
+        return leg_traced(self._down_c), leg_traced(self._up_c)
+
+    def traced_round_bytes(self, spec: wire.WireSpec, cohort: int,
+                           r: Array) -> Array:
+        """Per-round wire bytes under a CodecSchedule, resolved from the
+        round-index operand: static per-phase tables, one ``take`` per
+        scheduled leg — still exact, still int32."""
+        down_b, up_b = self.leg_bytes_traced(spec, r)
+        return cohort * (down_b + up_b)
 
 
 def fp32_link() -> WireLink:
@@ -766,6 +869,26 @@ _SAMPLERS = {
     "fixed": FixedCohortSampler,
 }
 
+# every name FedConfig.aggregator accepts ('auto' resolves per-config in
+# FedConfig.resolved_aggregator; the rest map through make_aggregator)
+_AGGREGATOR_NAMES = ("auto", "mean", "server_opt", "fedavgm", "fedadam")
+
+
+def _mask_rejected(stacked: PyTree, accepted: Array, fallback: PyTree):
+    """Replace rejected clients' rows with the round's broadcast model.
+
+    A zero aggregation weight alone would exclude them from every weighted
+    mean, but not from NaN propagation: an undelivered payload is
+    *arbitrary* memory as far as the server is concerned, and ``0 * NaN``
+    is NaN. Substituting the broadcast (a tree every aggregator tolerates)
+    plus the zero weight makes rejection exact."""
+
+    def leaf(m, f):
+        c = accepted.reshape((accepted.shape[0],) + (1,) * (m.ndim - 1))
+        return jnp.where(c, m, f)
+
+    return jax.tree.map(leaf, stacked, fallback)
+
 
 def _exact_round_bytes(link: WireLink, spec: wire.WireSpec, cohort: int,
                        r: int = 0) -> int:
@@ -863,6 +986,7 @@ class RoundEngine:
         link=None,
         executor=None,
         aggregator=None,
+        faults=None,
     ):
         self.cfg = cfg
         d_sampler, d_link, d_executor, d_aggregator = _stages_from_config(cfg)
@@ -874,6 +998,14 @@ class RoundEngine:
         # different cohort than cfg.participation implies); key fan-out,
         # the executor, and byte accounting must all agree with it
         self.cohort = getattr(self.sampler, "cohort", cfg.clients_per_round)
+        # the fault stage: a statically fault-free model (None or
+        # FaultModel.none()) resolves to None and the builders emit the
+        # LEGACY round — same trace, hence bitwise identical, not merely
+        # numerically close with all-ones masks
+        fm = faults if faults is not None else cfg.faults
+        self.faults = None if fm is None or fm.is_none else fm
+        self.quorum = quorum_count(cfg.min_quorum, self.cohort)
+        self.quorum_policy = cfg.quorum_policy
         # a CodecSchedule resolves against the round-index operand in
         # ServerState.round; only scheduled links thread the counter
         self.scheduled = bool(getattr(self.link, "has_schedule", False))
@@ -904,6 +1036,25 @@ class RoundEngine:
             spec = wire.make_wire_spec(params)
         return _exact_round_bytes(self.link, spec, self.cohort, r)
 
+    def partial_round_bytes(self, n_transmitted: int, params: PyTree = None,
+                            r: int = 0, *,
+                            spec: wire.WireSpec | None = None) -> int:
+        """Static wire bytes of a PARTIAL round: all P sampled clients
+        receive the broadcast (they were cut off after download), but only
+        ``n_transmitted`` deliver an uplink payload — dropped/timed-out
+        clients charge 0 uplink bytes, detected-corrupt clients full bytes
+        (they DID transmit). Equals the traced ``wire_bytes`` metric of a
+        fault round with the same transmit count."""
+        if not 0 <= n_transmitted <= self.cohort:
+            raise ValueError(
+                f"n_transmitted must be in [0, cohort={self.cohort}], "
+                f"got {n_transmitted}"
+            )
+        if spec is None:
+            spec = wire.make_wire_spec(params)
+        return (self.cohort * self.link.down_bytes(spec, r)
+                + n_transmitted * self.link.up_bytes(spec, r))
+
     def _build_round(self):
         if isinstance(self.executor, ShardedExecutor):
             return self._build_sharded_round()
@@ -917,6 +1068,10 @@ class RoundEngine:
         )
         local_update = self._local_update
         scheduled = self.scheduled
+        faults: FaultModel | None = self.faults
+        lat_table = (faults.latencies(cfg.n_clients)
+                     if faults is not None else None)
+        quorum, policy = self.quorum, self.quorum_policy
 
         def round_fn(state: ServerState, data: Array, labels: Array,
                      nk: Array, key: Array):
@@ -957,12 +1112,55 @@ class RoundEngine:
             # residual against a tree both ends hold
             msgs = link.up(client_params, spec, k_up, P, ref=down, r=r)
 
+            # --- fault stage (statically elided when fault-free, so the
+            # legacy trace — and its bitwise contract — is untouched).
+            # Logically the faults strike between executor and uplink: a
+            # non-transmitting client's payload never reaches the server,
+            # so its row is replaced by the broadcast and its nk zeroed —
+            # survivors are renormalized by sum(nk_eff) inside every
+            # aggregator's weighted mean.
+            if faults is not None:
+                fd = faults.draw(key, idx, lat_table)
+                if faults.flips_values:
+                    msgs = faults.corrupt_tree(msgs, fd.corrupted, key)
+                msgs = _mask_rejected(msgs, fd.accepted, down)
+                n_alive = jnp.sum(fd.accepted.astype(jnp.int32))
+                n_tx = jnp.sum(fd.transmitted.astype(jnp.int32))
+                nk_agg = nk_sel * fd.accepted.astype(nk_sel.dtype)
+                # an all-dead round is always discarded below; the ones
+                # only keep the dead trace's nk-normalization finite so
+                # the discarded result is garbage, never NaN
+                nk_agg = jnp.where(n_alive > 0, nk_agg,
+                                   jnp.ones_like(nk_agg))
+            else:
+                nk_agg = nk_sel
+
             # --- stage 4: server aggregation -----------------------------
             new_params, new_opt = aggregator(
-                server_params, msgs, nk_sel, k_srv, state.opt
+                server_params, msgs, nk_agg, k_srv, state.opt
             )
 
-            if scheduled:
+            if faults is not None:
+                # quorum policy: 'skip' needs `quorum` survivors for the
+                # round to count, 'degrade' proceeds with any survivor at
+                # all. A discarded round leaves params AND aggregator
+                # state (momentum/moments) untouched.
+                ok = n_alive >= (quorum if policy == "skip" else 1)
+                keep = lambda new, old: jax.tree.map(
+                    lambda a, b: jnp.where(ok, a, b), new, old
+                )
+                new_params = keep(new_params, server_params)
+                new_opt = keep(new_opt, state.opt)
+
+            if faults is not None:
+                # static sub-GiB guard per phase, then the traced count:
+                # P downlink copies + only the TRANSMITTED uplink payloads
+                for pr in (_schedule_probe_rounds(link)
+                           if scheduled else [0]):
+                    _exact_round_bytes(link, spec, P, pr)
+                down_b, up_b = link.leg_bytes_traced(spec, r)
+                wire_b = P * down_b + n_tx * up_b
+            elif scheduled:
                 # per-phase static sub-GiB guard, then the traced per-round
                 # count resolved from the round-index operand
                 for pr in _schedule_probe_rounds(link):
@@ -972,14 +1170,23 @@ class RoundEngine:
                 wire_b = jnp.asarray(
                     _exact_round_bytes(link, spec, P), jnp.int32
                 )
-            return ServerState(new_params, new_opt,
-                               (r + 1) if scheduled else ()), {
+            metrics = {
                 "local_loss": jnp.mean(losses),
                 # exact bytes moved this round: P uplink payloads + P
                 # downlink copies of the broadcast (Figure 1 accounting),
                 # each leg charged at its own payload size
                 "wire_bytes": wire_b,
             }
+            if faults is not None:
+                metrics.update(
+                    n_alive=n_alive,
+                    n_transmitted=n_tx,
+                    quorum_met=(n_alive >= quorum).astype(jnp.int32),
+                    round_ok=ok.astype(jnp.int32),
+                    round_time=faults.round_time(fd),
+                )
+            return ServerState(new_params, new_opt,
+                               (r + 1) if scheduled else ()), metrics
 
         return round_fn
 
@@ -1007,6 +1214,11 @@ class RoundEngine:
         sampler, link, aggregator = self.sampler, self.link, self.aggregator
         local_update = self._local_update
         scheduled = self.scheduled
+        cfg = self.cfg
+        faults: FaultModel | None = self.faults
+        lat_table = (faults.latencies(cfg.n_clients)
+                     if faults is not None else None)
+        quorum, policy = self.quorum, self.quorum_policy
 
         def round_fn(state: ServerState, data: Array, labels: Array,
                      nk: Array, key: Array):
@@ -1071,6 +1283,24 @@ class RoundEngine:
                 )(down, data[sel], labels[sel], loc_keys[pad_idx],
                   up_keys[pad_idx])
 
+            # --- fault stage (replicated; statically elided when
+            # fault-free). The draw is a pure function of the round key,
+            # so every device computes the same masks; masking is
+            # elementwise (no reduction, nothing to reassociate), so the
+            # sharded==local bitwise contract survives under faults too.
+            if faults is not None:
+                fd = faults.draw(key, idx, lat_table)
+                if faults.flips_values:
+                    msgs = faults.corrupt_tree(msgs, fd.corrupted, key)
+                msgs = _mask_rejected(msgs, fd.accepted, down)
+                n_alive = jnp.sum(fd.accepted.astype(jnp.int32))
+                n_tx = jnp.sum(fd.transmitted.astype(jnp.int32))
+                nk_agg = nk_sel * fd.accepted.astype(nk_sel.dtype)
+                nk_agg = jnp.where(n_alive > 0, nk_agg,
+                                   jnp.ones_like(nk_agg))
+            else:
+                nk_agg = nk_sel
+
             # --- stage 4: server aggregation (replicated) ----------------
             # inside its own fully-replicated shard_map: left to GSPMD, the
             # partitioner shards the (P, ...) client axis whenever D
@@ -1090,9 +1320,26 @@ class RoundEngine:
                 in_specs=(rep, rep, rep, rep, rep, rep),
                 out_specs=(rep, rep, rep),
                 check_rep=False,
-            )(server_params, msgs, nk_sel, k_srv, state.opt, losses)
+            )(server_params, msgs, nk_agg, k_srv, state.opt, losses)
 
-            if scheduled:
+            if faults is not None:
+                # quorum selection outside the tail shard (elementwise,
+                # replicated) — a discarded round leaves params AND
+                # aggregator state untouched, exactly like the local round
+                ok = n_alive >= (quorum if policy == "skip" else 1)
+                keep = lambda new, old: jax.tree.map(
+                    lambda a, b: jnp.where(ok, a, b), new, old
+                )
+                new_params = keep(new_params, server_params)
+                new_opt = keep(new_opt, state.opt)
+
+            if faults is not None:
+                for pr in (_schedule_probe_rounds(link)
+                           if scheduled else [0]):
+                    _exact_round_bytes(link, spec, P, pr)
+                down_b, up_b = link.leg_bytes_traced(spec, r)
+                wire_b = P * down_b + n_tx * up_b
+            elif scheduled:
                 for pr in _schedule_probe_rounds(link):
                     _exact_round_bytes(link, spec, P, pr)
                 wire_b = link.traced_round_bytes(spec, P, r)
@@ -1100,13 +1347,22 @@ class RoundEngine:
                 wire_b = jnp.asarray(
                     _exact_round_bytes(link, spec, P), jnp.int32
                 )
-            return ServerState(new_params, new_opt,
-                               (r + 1) if scheduled else ()), {
+            metrics = {
                 "local_loss": mean_loss,
                 # logical round bytes are executor-schedule-invariant: P
                 # clients still exchange one model copy per leg (the u8
                 # gather IS the uplink payloads, merely batched per device)
                 "wire_bytes": wire_b,
             }
+            if faults is not None:
+                metrics.update(
+                    n_alive=n_alive,
+                    n_transmitted=n_tx,
+                    quorum_met=(n_alive >= quorum).astype(jnp.int32),
+                    round_ok=ok.astype(jnp.int32),
+                    round_time=faults.round_time(fd),
+                )
+            return ServerState(new_params, new_opt,
+                               (r + 1) if scheduled else ()), metrics
 
         return round_fn

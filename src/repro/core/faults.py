@@ -1,0 +1,238 @@
+"""Fault injection for federated rounds — dropout, stragglers, corruption.
+
+Algorithm 1 assumes every sampled client returns its FP8 update; real
+fleets lose clients mid-round (battery, network, app eviction), blow the
+round deadline on slow hardware, and occasionally deliver bit-flipped
+payloads. :class:`FaultModel` is the jit-compatible description of those
+failure processes, injected by the round engine **between the executor and
+the uplink**: every sampled client still *trains* (the executor's shapes
+and schedule — and hence its bitwise contract across vmap/chunked/sharded
+— are untouched), but a faulty client's payload never reaches, or is
+rejected by, the server.
+
+The three processes, and what each charges to the wire:
+
+* **Dropout** — iid Bernoulli(``dropout``) per sampled client per round,
+  drawn from the round key. A dropped client received the broadcast
+  (downlink bytes charged) but never uploads: **0 uplink bytes**.
+* **Stragglers** — each client in the pool has ONE deterministic
+  per-round latency (``data.federated.client_latencies``: its simulated
+  hardware speed, fixed across rounds), and the round has a ``deadline``.
+  A sampled client whose latency exceeds the deadline is cut off
+  mid-upload: **0 uplink bytes**, exactly like dropout — but *which*
+  clients it hits is a deterministic function of cohort membership, so
+  heavy-tailed fleets lose the *same* slow devices every time they are
+  sampled (the realistic bias the paper's uniform-cohort assumption
+  hides).
+* **Corruption** — Bernoulli(``corrupt``) over clients that DID transmit:
+  the payload arrives bit-damaged. With ``corrupt_detect=True`` (default)
+  the server's checksum rejects it — the client charges **full uplink
+  bytes** (it transmitted!) but is excluded from aggregation. With
+  ``corrupt_detect=False`` the damage goes through: ``corrupt_tree`` XORs
+  one random bit into a random ``corrupt_frac`` of the update's float32
+  elements (sign/exponent/mantissa alike — flips can and do produce
+  inf/NaN, which is the point: this is the ablation showing why a
+  checksum, or at least a quorum, is not optional).
+
+The participation masks are **traced** (drawn in-jit from the round key),
+so one compiled round serves every fault realization; byte accounting
+follows the masks exactly (``n_transmitted`` uplink payloads, P downlink
+copies). ``FaultModel.none()`` — or ``faults=None`` — keeps the engine on
+its legacy round build, bitwise identical to the pre-fault engine for all
+executors (asserted seed-swept in tests/test_faults.py).
+
+Aggregation under partial cohorts renormalizes by the *surviving* nk:
+``nk_eff = nk * accepted`` and every aggregator (mean, UQ+ server_opt,
+FedAvgM/FedAdam) divides by ``sum(nk_eff)``, so survivors are reweighted
+exactly as if the cohort had been them all along. Rejected clients'
+messages are replaced by the round's broadcast model *before* aggregation
+— a zero weight alone would still propagate NaN from an undetected
+corruption through ``0 * NaN``. The minimum-quorum policy
+(``FedConfig.min_quorum`` / ``quorum_policy``) decides what happens when
+too few survive: ``'skip'`` discards the round (server state unchanged —
+the production choice), ``'degrade'`` proceeds with whatever survived
+(>= 1; an empty round is always skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+# fold_in tags deriving the fault stream from the round key — distinct from
+# every key the legacy round consumes, so the fault path's extra draws
+# never perturb sampling/link/local-training randomness
+_FAULT_TAG = 0x0FA177
+_FLIP_TAG = 0x0F11B5
+
+
+class FaultDraw(NamedTuple):
+    """One round's traced fault realization over the sampled cohort.
+
+    All fields are length-P (cohort) arrays:
+
+    * ``transmitted`` — bool: the client's payload reached the server
+      (charged at full uplink bytes).
+    * ``accepted``    — bool: the payload passed checksum and enters
+      aggregation (``accepted`` implies ``transmitted``).
+    * ``corrupted``   — bool: the payload was bit-damaged in flight
+      (subset of ``transmitted``; disjoint from ``accepted`` iff the
+      model detects corruption).
+    * ``latency``     — f32: the client's local-round wall-clock.
+    """
+
+    transmitted: Array
+    accepted: Array
+    corrupted: Array
+    latency: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Static description of the per-round failure processes (frozen —
+    hashable, usable as a jit-static config field). See module docstring
+    for semantics and byte-accounting of each knob."""
+
+    dropout: float = 0.0            # per-client per-round vanish probability
+    straggler: str = "none"         # latency dist: none|uniform|lognormal|pareto
+    straggler_scale: float = 1.0    # latency scale (simulated seconds)
+    straggler_param: float = 1.0    # dist shape: sigma / width / pareto alpha
+    deadline: float = math.inf      # sync-round cutoff (same units as scale)
+    corrupt: float = 0.0            # corruption prob per transmitted payload
+    corrupt_detect: bool = True     # checksum rejects damaged payloads
+    corrupt_frac: float = 1e-3      # fraction of elements flipped if undetected
+    seed: int = 0                   # per-client latency draw seed
+
+    def __post_init__(self):
+        from ..data.federated import LATENCY_DISTS
+
+        for name in ("dropout", "corrupt", "corrupt_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultModel.{name} must be in [0, 1], "
+                                 f"got {v}")
+        if self.straggler not in LATENCY_DISTS:
+            raise ValueError(
+                f"FaultModel.straggler {self.straggler!r}: one of "
+                f"{LATENCY_DISTS}"
+            )
+        if self.deadline <= 0:
+            raise ValueError(f"FaultModel.deadline must be positive, "
+                             f"got {self.deadline}")
+
+    @classmethod
+    def none(cls) -> "FaultModel":
+        """The fault-free model: a round with it is bitwise identical to
+        the legacy (pre-fault) round — the engine statically elides the
+        whole fault path."""
+        return cls()
+
+    @property
+    def is_none(self) -> bool:
+        """Statically no-op: no dropout, no corruption, no straggler
+        process. A straggler distribution with an infinite deadline drops
+        nobody, but still counts as active — it is what produces the
+        ``round_time`` metric the time-to-accuracy benchmarks integrate."""
+        return (self.dropout == 0.0 and self.corrupt == 0.0
+                and self.straggler == "none")
+
+    @property
+    def flips_values(self) -> bool:
+        """True when corrupted payloads survive into aggregation with real
+        bit flips (the undetected-corruption ablation)."""
+        return self.corrupt > 0.0 and not self.corrupt_detect
+
+    def latencies(self, n_clients: int) -> Array:
+        """The pool's deterministic per-client latency table (n_clients,)
+        — a trace-time constant the engine closes over."""
+        from ..data.federated import client_latencies
+
+        return jnp.asarray(client_latencies(
+            n_clients, dist=self.straggler, scale=self.straggler_scale,
+            param=self.straggler_param, seed=self.seed,
+        ))
+
+    def draw(self, key: Array, idx: Array, latency_table: Array) -> FaultDraw:
+        """Trace one round's fault realization for cohort ``idx`` (P,).
+
+        ``key`` is the ROUND key — the fault stream is folded out of it
+        (module-level tags) so the legacy key-split order is untouched.
+        """
+        k = jax.random.fold_in(key, _FAULT_TAG)
+        k_drop, k_corr = jax.random.split(k)
+        P = idx.shape[0]
+        latency = latency_table[idx]
+        dropped = (
+            jax.random.bernoulli(k_drop, self.dropout, (P,))
+            if self.dropout > 0.0 else jnp.zeros((P,), bool)
+        )
+        timed_out = (
+            latency > self.deadline
+            if self.straggler != "none" and math.isfinite(self.deadline)
+            else jnp.zeros((P,), bool)
+        )
+        transmitted = ~(dropped | timed_out)
+        corrupted = (
+            transmitted & jax.random.bernoulli(k_corr, self.corrupt, (P,))
+            if self.corrupt > 0.0 else jnp.zeros((P,), bool)
+        )
+        accepted = transmitted & ~corrupted if self.corrupt_detect \
+            else transmitted
+        return FaultDraw(transmitted, accepted, corrupted, latency)
+
+    def corrupt_tree(self, stacked: PyTree, corrupted: Array,
+                     key: Array) -> PyTree:
+        """XOR one random bit into a random ``corrupt_frac`` of each
+        corrupted client's float32 elements (leading axis = client). Leaves
+        that are not float32 pass through untouched — the damage model is
+        the f32 wire buffer."""
+        k = jax.random.fold_in(key, _FLIP_TAG)
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        out = []
+        for i, leaf in enumerate(leaves):
+            if leaf.dtype != jnp.float32:
+                out.append(leaf)
+                continue
+            kl = jax.random.fold_in(k, i)
+            k_sel, k_bit = jax.random.split(kl)
+            hit = jax.random.bernoulli(k_sel, self.corrupt_frac, leaf.shape)
+            bit = jax.random.randint(k_bit, leaf.shape, 0, 32, jnp.uint32)
+            cmask = corrupted.reshape(
+                (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+            )
+            bits = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
+            flipped = bits ^ (jnp.uint32(1) << bit)
+            out.append(jax.lax.bitcast_convert_type(
+                jnp.where(cmask & hit, flipped, bits), jnp.float32
+            ))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def round_time(self, draw: FaultDraw) -> Array:
+        """Simulated wall-clock of one synchronous round: the server waits
+        for the last delivered payload, or until the deadline when anyone
+        failed to deliver (it cannot know a dropped client will never
+        arrive). With no finite deadline it waits out the full cohort."""
+        slowest = jnp.max(draw.latency)
+        if not math.isfinite(self.deadline):
+            return slowest
+        all_in = jnp.all(draw.transmitted)
+        last_in = jnp.max(jnp.where(draw.transmitted, draw.latency, 0.0))
+        return jnp.where(all_in, jnp.minimum(last_in, self.deadline),
+                         jnp.float32(self.deadline))
+
+
+def quorum_count(min_quorum: float | int, cohort: int) -> int:
+    """Resolve the quorum knob to an absolute survivor count in [1, P]:
+    a float in (0, 1] is a cohort fraction (ceil), an int >= 1 an absolute
+    count; 0 means "any survivor" (quorum 1)."""
+    if isinstance(min_quorum, float) and 0.0 < min_quorum <= 1.0:
+        count = math.ceil(min_quorum * cohort)
+    else:
+        count = int(min_quorum)
+    return max(1, min(count, cohort))

@@ -39,6 +39,10 @@ class FedHistory:
     accuracy: list[float] = dataclasses.field(default_factory=list)
     loss: list[float] = dataclasses.field(default_factory=list)
     cumulative_bytes: list[int] = dataclasses.field(default_factory=list)
+    # simulated wall-clock at each eval point — nonzero only under an
+    # active FaultModel, whose round_time (wait-for-slowest-or-deadline)
+    # the simulator integrates round over round
+    cumulative_time: list[float] = dataclasses.field(default_factory=list)
 
     def best_accuracy(self) -> float:
         return max(self.accuracy) if self.accuracy else 0.0
@@ -47,6 +51,15 @@ class FedHistory:
         for acc, b in zip(self.accuracy, self.cumulative_bytes):
             if acc >= threshold:
                 return b
+        return None
+
+    def time_to_accuracy(self, threshold: float) -> float | None:
+        """Simulated seconds until test accuracy first reached
+        ``threshold`` (None if never) — the paper-standard straggler
+        metric the async benchmark compares engines on."""
+        for acc, t in zip(self.accuracy, self.cumulative_time):
+            if acc >= threshold:
+                return t
         return None
 
 
@@ -73,6 +86,7 @@ class FedSim:
         link=None,
         executor=None,
         aggregator=None,
+        faults=None,
     ):
         self.cfg = cfg
         self.predict_fn = predict_fn
@@ -86,7 +100,7 @@ class FedSim:
         self.engine = RoundEngine(
             loss_fn, optimizer, cfg,
             sampler=sampler, link=link, executor=executor,
-            aggregator=aggregator,
+            aggregator=aggregator, faults=faults,
         )
         ex = self.engine.executor
         if isinstance(ex, ShardedExecutor):
@@ -161,6 +175,7 @@ class FedSim:
     ) -> FedHistory:
         hist = FedHistory()
         total_bytes = 0
+        total_time = 0.0
         traced_bytes: int | None = None
         # under a CodecSchedule the per-round bytes change with the round
         # index, but piecewise-constantly: resolve them STATICALLY per
@@ -168,9 +183,14 @@ class FedSim:
         # in tests/test_codec.py) so the loop still never blocks async
         # dispatch on a device fetch. The wire layout is round-invariant:
         # derive the spec + per-round counts ONCE, outside the hot loop.
+        # An active FaultModel makes the count DATA-dependent (only
+        # transmitted payloads are charged) — there the loop must fetch
+        # wire_bytes (and round_time) per round; that device sync is the
+        # price of exact partial-round accounting.
         scheduled = getattr(self.engine, "scheduled", False)
+        faulty = getattr(self.engine, "faults", None) is not None
         sched_bytes: list[int] = []
-        if scheduled:
+        if scheduled and not faulty:
             from . import wire as wire_lib
 
             r0 = int(self.state.round)
@@ -185,7 +205,10 @@ class FedSim:
                 self.state, self.client_data, self.client_labels, self.nk,
                 k_round,
             )
-            if scheduled:
+            if faulty:
+                total_bytes += int(m["wire_bytes"])
+                total_time += float(m["round_time"])
+            elif scheduled:
                 total_bytes += sched_bytes[r - 1]
             else:
                 # charge the bytes the traced round actually moved (the
@@ -204,6 +227,7 @@ class FedSim:
                 hist.accuracy.append(acc)
                 hist.loss.append(float(m["local_loss"]))
                 hist.cumulative_bytes.append(total_bytes)
+                hist.cumulative_time.append(total_time)
                 if verbose:
                     print(
                         f"round {r:4d}  acc {acc:.4f}  local_loss "

@@ -78,6 +78,28 @@ def round_bytes_for(params: PyTree, cfg: Any, r: int = 0) -> int:
     return cfg.clients_per_round * (down + up)
 
 
+def partial_round_bytes(params: PyTree, cfg: Any, n_transmitted: int,
+                        r: int = 0) -> int:
+    """Static byte count of a PARTIAL round (the fault layer's accounting
+    contract): all P sampled clients receive the broadcast, but only
+    ``n_transmitted`` deliver an uplink payload — dropped and timed-out
+    clients charge 0 uplink bytes. Matches the engine's traced
+    ``wire_bytes`` metric for a fault round with the same transmit count
+    (asserted in tests/test_faults.py)."""
+    from . import codec as codec_lib
+    from . import wire
+
+    P = cfg.clients_per_round
+    if not 0 <= n_transmitted <= P:
+        raise ValueError(
+            f"n_transmitted must be in [0, cohort={P}], got {n_transmitted}"
+        )
+    spec = wire.make_wire_spec(params)
+    down = codec_lib.leg_nbytes(cfg.resolved_down_codec, spec, r)
+    up = codec_lib.leg_nbytes(cfg.resolved_up_codec, spec, r)
+    return P * down + n_transmitted * up
+
+
 def param_count(params: PyTree) -> int:
     return sum(
         int(np.prod(l.shape)) if hasattr(l, "shape") else 1
@@ -97,4 +119,16 @@ def rounds_to_accuracy(acc_history: list[float], threshold: float) -> int | None
     for i, a in enumerate(acc_history):
         if a >= threshold:
             return i + 1
+    return None
+
+
+def time_to_accuracy(acc_history: list[float], time_history: list[float],
+                     threshold: float) -> float | None:
+    """Simulated seconds until accuracy first reaches ``threshold`` —
+    the straggler benchmark's comparison axis (None if never reached).
+    ``time_history`` is the cumulative simulated time at each eval point
+    (FedHistory.cumulative_time, or the async engine's event clock)."""
+    for a, t in zip(acc_history, time_history):
+        if a >= threshold:
+            return float(t)
     return None

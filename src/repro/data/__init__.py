@@ -4,13 +4,21 @@ from .synthetic import (
     synthetic_sequences,
     synthetic_lm_tokens,
 )
-from .federated import partition_iid, partition_dirichlet, partition_by_speaker
+from .federated import (
+    arrival_times,
+    client_latencies,
+    partition_iid,
+    partition_dirichlet,
+    partition_by_speaker,
+)
 
 __all__ = [
     "synthetic_classification",
     "synthetic_images",
     "synthetic_sequences",
     "synthetic_lm_tokens",
+    "arrival_times",
+    "client_latencies",
     "partition_iid",
     "partition_dirichlet",
     "partition_by_speaker",

@@ -1,4 +1,4 @@
-"""Federated client partitioners (paper §4 Setup).
+"""Federated client partitioners and arrival processes (paper §4 Setup).
 
 * ``partition_iid``       — uniform shuffle split across K clients.
 * ``partition_dirichlet`` — label-skew via Dir(concentration) per client
@@ -9,10 +9,81 @@
 All return tensorized ``(K, n_per, ...)`` arrays (balanced by resampling,
 matching the simulator's vmapped client axis) plus the true per-client
 example counts ``nk`` used as aggregation weights.
+
+Compute heterogeneity (the robustness layer's straggler model):
+
+* ``client_latencies``    — one deterministic per-client round latency per
+                            pool, drawn from a named distribution. This is
+                            the process both the sync fault layer
+                            (``core.faults.FaultModel``) and the buffered
+                            async simulator (``core.async_engine``) share:
+                            a client's latency is a fixed property of its
+                            (simulated) hardware, so WHO straggles is
+                            stable round over round while WHICH sampled
+                            cohort members straggle varies with sampling.
+* ``arrival_times``       — the continuous-arrival view of the same
+                            process: completion times of a client's
+                            successive local jobs.
 """
 from __future__ import annotations
 
 import numpy as np
+
+LATENCY_DISTS = ("none", "uniform", "lognormal", "pareto")
+
+
+def client_latencies(k: int, dist: str = "lognormal", scale: float = 1.0,
+                     param: float = 1.0, seed: int = 0) -> np.ndarray:
+    """Per-client local-round latency (simulated seconds), fixed per pool.
+
+    ``dist`` picks the compute-speed spread across the fleet:
+
+    * ``'none'``      — every client takes exactly ``scale``.
+    * ``'uniform'``   — ``scale * U[1 - param/2, 1 + param/2]`` (mild,
+                        bounded heterogeneity; ``param`` in (0, 2)).
+    * ``'lognormal'`` — ``scale * exp(param * N(0,1))``, median ``scale``
+                        (the classic device-speed spread).
+    * ``'pareto'``    — ``scale * (1 + Pareto(param))`` (heavy tail:
+                        a few devices are catastrophically slow — the
+                        regime where synchronous rounds stall on their
+                        slowest sampled member).
+
+    Deterministic in ``(k, dist, scale, param, seed)`` — the same pool
+    always gets the same latencies, so fault draws and arrival processes
+    are reproducible and goldens can pin them.
+    """
+    if dist not in LATENCY_DISTS:
+        raise ValueError(
+            f"unknown latency dist {dist!r}; one of {LATENCY_DISTS}"
+        )
+    if scale <= 0:
+        raise ValueError(f"latency scale must be positive, got {scale}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, k, 0x1A7E]))
+    if dist == "none":
+        lat = np.ones(k)
+    elif dist == "uniform":
+        if not 0 < param < 2:
+            raise ValueError(f"uniform latency width must be in (0, 2), "
+                             f"got {param}")
+        lat = 1.0 + param * (rng.random(k) - 0.5)
+    elif dist == "lognormal":
+        lat = np.exp(param * rng.standard_normal(k))
+    else:  # pareto
+        if param <= 0:
+            raise ValueError(f"pareto shape must be positive, got {param}")
+        lat = 1.0 + rng.pareto(param, k)
+    return (scale * lat).astype(np.float32)
+
+
+def arrival_times(latencies: np.ndarray, n_jobs: int) -> np.ndarray:
+    """Completion times of each client's first ``n_jobs`` back-to-back local
+    jobs: client ``c``'s j-th update lands at ``(j + 1) * latencies[c]``.
+    The (sorted) flattened view is the continuous-arrival stream a buffered
+    async server sees from a fully-busy pool — mostly a diagnostic/plotting
+    helper; the event loop in ``core.async_engine`` interleaves pulls and
+    pushes properly."""
+    lat = np.asarray(latencies, np.float64)
+    return lat[:, None] * (1.0 + np.arange(n_jobs)[None, :])
 
 
 def _tensorize(x, y, assignments, k, n_per, rng):

@@ -240,7 +240,8 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
                     qcfg: QATConfig, mode: str = "rand",
                     wire: str = "fp8", aggregator=None,
                     state_specs: PyTree | None = None,
-                    codec=None):
+                    codec=None, partial: bool = False,
+                    min_quorum: int = 0):
     """FedAvg round boundary over ``fl_axes`` as a shard_map'd collective.
 
     ``wire='fp8'`` moves uint8 codes (the paper's 4x compression as actual
@@ -269,6 +270,20 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
     reference model is exactly ``comm_state["prev"]``: the previous global
     model every silo already holds, so only the round's *update* crosses
     the inter-silo wire.
+
+    ``partial=True`` (aggregator path only) makes the boundary
+    fault-tolerant, mirroring the simulator's fault layer
+    (``core.faults``): the returned fn takes an extra replicated
+    ``alive`` mask ``(n_silos,) bool`` — ``(params, comm_state, key,
+    alive) -> (params, comm_state)``. Dead silos' gathered models are
+    replaced by the previous global model and their aggregation weight
+    zeroed, so survivors renormalize by the surviving count; when fewer
+    than ``min_quorum`` (resolved via ``core.faults.quorum_count``; 0 =
+    any survivor) are alive, the round is discarded — params AND
+    aggregator state pass through unchanged. NOTE: a dead silo still
+    participates in the *collective* (SPMD programs cannot drop a
+    participant mid-step); what the mask models is its *payload* being
+    rejected at the boundary.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -290,6 +305,12 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
             raise ValueError(
                 "codec= needs the aggregator path (the fused in-collective "
                 "mean is FP8-wire only); pass an Aggregator"
+            )
+        if partial:
+            raise ValueError(
+                "partial=True needs the aggregator path (the fused "
+                "in-collective mean cannot mask per-silo payloads); "
+                "pass an Aggregator"
             )
 
         def body(params, key):
@@ -333,7 +354,7 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
 
         resolved_codec = codec_lib.get_codec(codec)
 
-    def body_agg(params, comm_state, key):
+    def body_agg(params, comm_state, key, alive=None):
         params = _perturb(params)
         k_wire, k_srv = jax.random.split(key)
         # mode passes through: 'rand' (unbiased), 'det' (biased ablation),
@@ -345,12 +366,45 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
             codec=resolved_codec, ref=comm_state["prev"],
         )
         nk = jnp.ones((n_silos,), jnp.float32)
+        if alive is not None:
+            # the simulator fault layer's contract at the silo boundary:
+            # dead silos' payloads are replaced by the previous global
+            # model and zero-weighted; survivors renormalize by sum(nk)
+            prev = comm_state["prev"]
+            stacked = jax.tree.map(
+                lambda m, f: jnp.where(
+                    alive.reshape((n_silos,) + (1,) * (m.ndim - 1)), m, f
+                ),
+                stacked, prev,
+            )
+            n_alive = jnp.sum(alive.astype(jnp.int32))
+            nk = alive.astype(jnp.float32)
+            nk = jnp.where(n_alive > 0, nk, jnp.ones_like(nk))
         # baseline = the previous GLOBAL model (replicated across silos),
         # never the silo's diverged local params — see docstring
         new_params, new_opt = aggregator(
             comm_state["prev"], stacked, nk, k_srv, comm_state["opt"]
         )
+        if alive is not None:
+            ok = n_alive >= _quorum
+            keep = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(ok, a, b), new, old
+            )
+            new_params = keep(new_params, comm_state["prev"])
+            new_opt = keep(new_opt, comm_state["opt"])
         return new_params, {"prev": new_params, "opt": new_opt}
+
+    if partial:
+        from ..core.faults import quorum_count
+
+        _quorum = quorum_count(min_quorum, n_silos)
+        return shard_map(
+            body_agg,
+            mesh=mesh,
+            in_specs=(param_specs, comm_specs, P(), P()),
+            out_specs=(param_specs, comm_specs),
+            check_rep=False,
+        )
 
     return shard_map(
         body_agg,

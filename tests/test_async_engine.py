@@ -1,0 +1,212 @@
+"""Buffered-async engine (ISSUE 6): determinism, staleness math, byte
+accounting, momentum threading, and config validation.
+
+The contracts pinned here:
+
+* the event loop is bit-deterministic in (seed, configuration);
+* the fold applies the ``(1 + s)^-alpha``-weighted mean of the buffered
+  updates (verified against an independent computation);
+* every dispatched job charges exactly one pull, every TRANSMITTED push
+  one uplink payload — dropped jobs charge the pull only;
+* the server momentum buffer travels in ``ServerState.opt``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core.async_engine import AsyncConfig, BufferedAsyncEngine
+from repro.core.codec import CodecSchedule
+from repro.core.engine import FedConfig, WireLink
+from repro.core.faults import FaultModel
+from repro.core.qat import QATConfig, clip_value_mask, weight_decay_mask
+from repro.data import partition_iid, synthetic_classification
+from repro.models import small
+
+
+def _setup(k=8, n=320, d=8, n_classes=2):
+    xall, yall = synthetic_classification(0, n + 100, d=d,
+                                          n_classes=n_classes)
+    cx, cy, nk = partition_iid(xall[:n], yall[:n], k=k, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=d, n_classes=n_classes)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    evald = (jnp.asarray(xall[n:]), jnp.asarray(yall[n:]))
+    return (params, loss, apply, opt,
+            (jnp.asarray(cx), jnp.asarray(cy)), evald)
+
+
+_CFG = dict(n_clients=8, participation=0.5, local_steps=2, batch_size=8,
+            comm_mode="rand", qat=QATConfig())
+
+
+def _engine(loss, opt, acfg, **cfg_kw):
+    return BufferedAsyncEngine(loss, opt, FedConfig(**{**_CFG, **cfg_kw}),
+                               acfg)
+
+
+def test_run_deterministic():
+    params, loss, apply, opt, (cx, cy), evald = _setup()
+    acfg = AsyncConfig(buffer_size=3, concurrency=4, staleness_alpha=0.5,
+                       seed=1)
+    outs = []
+    for _ in range(2):
+        eng = _engine(loss, opt, acfg)
+        state, hist = eng.run(params, cx, cy, jax.random.PRNGKey(3),
+                              folds=6, predict_fn=apply, eval_data=evald,
+                              eval_every=2)
+        outs.append((state, hist))
+    (s0, h0), (s1, h1) = outs
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h0.time == h1.time
+    assert h0.accuracy == h1.accuracy
+    assert h0.cumulative_bytes == h1.cumulative_bytes
+    assert h0.mean_staleness == h1.mean_staleness
+    assert int(s0.round) == 6  # one version per fold
+
+
+def test_fold_staleness_weighting_exact():
+    """The fold must apply the (1+s)^-alpha weighted mean: verified
+    against an independent numpy computation on crafted updates."""
+    params, loss, apply, opt, _, _ = _setup()
+    acfg = AsyncConfig(buffer_size=2, staleness_alpha=1.0, server_lr=0.5)
+    eng = _engine(loss, opt, acfg)
+    state = eng.init(params)
+    u0 = jax.tree.map(jnp.ones_like, params)
+    u1 = jax.tree.map(lambda p: jnp.full_like(p, 3.0), params)
+    stacked = jax.tree.map(lambda a, b: jnp.stack([a, b]), u0, u1)
+    new = eng._fold(state, stacked, jnp.asarray([0, 1], jnp.int32))
+    # w = [1, 1/2] normalized = [2/3, 1/3]; delta = 2/3*1 + 1/3*3 = 5/3
+    want_delta = 0.5 * (2.0 / 3.0 * 1.0 + 1.0 / 3.0 * 3.0)
+    for p0, p1 in zip(jax.tree.leaves(params), jax.tree.leaves(new.params)):
+        np.testing.assert_allclose(np.asarray(p1) - np.asarray(p0),
+                                   want_delta, rtol=1e-5)
+    assert int(new.round) == 1
+    # alpha=0 collapses to the plain mean regardless of staleness
+    eng0 = _engine(loss, opt, dataclasses.replace(acfg, staleness_alpha=0.0))
+    new0 = eng0._fold(eng0.init(params), stacked,
+                      jnp.asarray([0, 7], jnp.int32))
+    for p0, p1 in zip(jax.tree.leaves(params),
+                      jax.tree.leaves(new0.params)):
+        np.testing.assert_allclose(np.asarray(p1) - np.asarray(p0),
+                                   0.5 * 2.0, rtol=1e-5)
+
+
+def test_momentum_threads_server_state():
+    """With server_momentum the buffer lives in ServerState.opt: two folds
+    of the same delta d give m2 = (1 + beta) d and params moved by
+    lr * (2 + beta) d total."""
+    params, loss, apply, opt, _, _ = _setup()
+    beta = 0.5
+    acfg = AsyncConfig(buffer_size=1, server_lr=1.0, server_momentum=beta)
+    eng = _engine(loss, opt, acfg)
+    state = eng.init(params)
+    assert jax.tree.leaves(state.opt), "momentum buffer missing"
+    d = jax.tree.map(lambda p: jnp.ones_like(p)[None], params)
+    s1 = eng._fold(state, d, jnp.zeros(1, jnp.int32))
+    s2 = eng._fold(s1, d, jnp.zeros(1, jnp.int32))
+    for m in jax.tree.leaves(s2.opt):
+        np.testing.assert_allclose(np.asarray(m), 1.0 + beta, rtol=1e-6)
+    for p0, p2 in zip(jax.tree.leaves(params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(p2) - np.asarray(p0),
+                                   2.0 + beta, rtol=1e-6)
+    # without momentum the opt slot stays empty
+    assert jax.tree.leaves(_engine(loss, opt, AsyncConfig())
+                           .init(params).opt) == []
+
+
+def test_byte_accounting_exact():
+    """Homogeneous fleet, no drops: at the fold-f snapshot the loop has
+    received exactly f*K pushes and charged M initial pulls plus one
+    replacement pull per completion EXCEPT the one whose fold is being
+    applied (its slot re-dispatches against the post-fold version)."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    M, K = 4, 3
+    acfg = AsyncConfig(buffer_size=K, concurrency=M)
+    eng = _engine(loss, opt, acfg, up_codec="delta:e4m3")
+    pull_b, push_b = eng.job_bytes(params)
+    assert pull_b != push_b  # asymmetric wire: a leg swap would be caught
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=3,
+                      eval_every=1)
+    for f, got in zip((1, 2, 3), hist.cumulative_bytes):
+        assert got == (M + f * K - 1) * pull_b + f * K * push_b, f
+
+
+def test_dropped_jobs_charge_pull_only():
+    """With dropout every completed-but-dropped job adds exactly one extra
+    pull (its replacement dispatch) and no push: the byte total exceeds
+    the no-drop baseline by a positive multiple of pull bytes."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    M, K, folds = 4, 2, 3
+    acfg = AsyncConfig(buffer_size=K, concurrency=M, seed=5)
+    eng = _engine(loss, opt, acfg)
+    pull_b, push_b = eng.job_bytes(params)
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=folds,
+                      eval_every=folds, faults=FaultModel(dropout=0.6))
+    base = (M + folds * K - 1) * pull_b + folds * K * push_b
+    extra = hist.cumulative_bytes[-1] - base
+    assert extra > 0 and extra % pull_b == 0, \
+        "dropped jobs must charge exactly one pull each"
+
+
+def test_staleness_zero_when_serial():
+    """concurrency=1, buffer=1: every update folds against the version it
+    pulled — staleness is identically zero."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=1, concurrency=1))
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=4,
+                      eval_every=1)
+    assert hist.mean_staleness == [0.0] * 4
+
+
+def test_staleness_positive_when_concurrent():
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=1, concurrency=6))
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=8,
+                      eval_every=8)
+    assert hist.mean_staleness[-1] > 0.0
+
+
+def test_heterogeneous_latencies_shape_checked():
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2, concurrency=3))
+    with pytest.raises(ValueError, match="latencies"):
+        eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=1,
+                latencies=np.ones(3))
+
+
+def test_rejects_codec_schedule():
+    params, loss, apply, opt, _, _ = _setup()
+    link = WireLink(down_codec=CodecSchedule(("e5m2", "fp4"), (1,)),
+                    up_codec="e4m3")
+    with pytest.raises(ValueError, match="[Ss]chedule"):
+        BufferedAsyncEngine(loss, opt, FedConfig(**_CFG), AsyncConfig(),
+                            link=link)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncConfig(buffer_size=0)
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncConfig(concurrency=0)
+    with pytest.raises(ValueError, match="staleness_alpha"):
+        AsyncConfig(staleness_alpha=-0.1)
+    with pytest.raises(ValueError, match="server_momentum"):
+        AsyncConfig(server_momentum=1.0)
+
+
+def test_async_learns():
+    """End to end on the separable synthetic task: a short async run must
+    beat chance comfortably (the benchmark's premise)."""
+    params, loss, apply, opt, (cx, cy), evald = _setup()
+    acfg = AsyncConfig(buffer_size=4, concurrency=6, staleness_alpha=0.5)
+    eng = _engine(loss, opt, acfg, local_steps=4)
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(2), folds=10,
+                      predict_fn=apply, eval_data=evald, eval_every=2)
+    assert hist.best_accuracy() > 0.7

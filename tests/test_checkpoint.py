@@ -1,4 +1,6 @@
-"""Checkpoint manager: atomicity, keep-k GC, resume, elastic reshard hook."""
+"""Checkpoint manager: atomicity, corrupt-write recovery, keep-k GC,
+resume, elastic reshard hook."""
+import json
 import os
 
 import jax
@@ -11,6 +13,7 @@ from repro.checkpoint.manager import (
     latest_step,
     load_checkpoint,
     save_checkpoint,
+    validate_checkpoint,
 )
 
 
@@ -73,6 +76,73 @@ def test_elastic_shard_fn(tmp_path):
     restored, _ = load_checkpoint(str(tmp_path), tree, shard_fn=shard_fn)
     assert len(seen) == len(jax.tree.leaves(tree))
     assert all(isinstance(l, jax.Array) for l in jax.tree.leaves(restored))
+
+
+def _truncate(path, keep_frac=0.5):
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(int(size * keep_frac))
+
+
+def test_truncated_npz_regression(tmp_path):
+    """The crash-mid-write regression (ISSUE 6): a truncated arrays.npz in
+    the newest checkpoint must be skipped WITH a warning — latest_step
+    falls back to the previous step and load_checkpoint restores it."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, _tree(99))
+    npz = os.path.join(str(tmp_path), "ckpt_00000002", "arrays.npz")
+    _truncate(npz)
+    assert validate_checkpoint(os.path.dirname(npz)) is not None
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        assert latest_step(str(tmp_path)) == 1
+    with pytest.warns(UserWarning):
+        restored, manifest = load_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # asking for the damaged step EXPLICITLY must fail loudly, naming it
+    with pytest.raises(ValueError, match="not restorable"):
+        load_checkpoint(str(tmp_path), tree, step=2)
+
+
+def test_validate_checkpoint_reasons(tmp_path):
+    """Each partial-write shape gets a distinct diagnosis."""
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 4, tree)
+    assert validate_checkpoint(path) is None
+    # missing payload
+    os.rename(os.path.join(path, "arrays.npz"),
+              os.path.join(path, "arrays.bak"))
+    assert "missing arrays.npz" in validate_checkpoint(path)
+    os.rename(os.path.join(path, "arrays.bak"),
+              os.path.join(path, "arrays.npz"))
+    # unparseable manifest
+    man = os.path.join(path, "manifest.json")
+    with open(man, "w") as f:
+        f.write("{not json")
+    assert "manifest" in validate_checkpoint(path)
+    # manifest promising arrays the payload lacks
+    with open(man, "w") as f:
+        json.dump({"step": 4, "keys": ["params/ghost"], "extra": {}}, f)
+    assert "missing from payload" in validate_checkpoint(path)
+    # missing manifest
+    os.remove(man)
+    assert "missing manifest.json" in validate_checkpoint(path)
+
+
+def test_all_corrupt_is_empty(tmp_path):
+    """Every checkpoint damaged -> latest_step None, restore_or_init
+    falls back to a fresh init instead of crashing."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    _truncate(os.path.join(str(tmp_path), "ckpt_00000001", "arrays.npz"),
+              keep_frac=0.1)
+    with pytest.warns(UserWarning):
+        assert latest_step(str(tmp_path)) is None
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    with pytest.warns(UserWarning):
+        _, manifest = mgr.restore_or_init(_tree(), lambda: _tree(42))
+    assert manifest["step"] == 0  # init path
 
 
 def test_restore_or_init(tmp_path):

@@ -333,6 +333,78 @@ def test_sharded_executor_rejects_missing_axis(virtual_devices):
 
 
 # ---------------------------------------------------------------------------
+# Fault layer on the mesh (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_faultmodel_none_bitwise_legacy(virtual_devices):
+    """faults=FaultModel.none() must leave the SHARDED engine on its
+    legacy trace too: bit-identical states and metrics across seeds."""
+    from repro.core.faults import FaultModel
+
+    params, loss, apply, opt, data, _ = _mlp_setup()
+    mesh = _client_mesh(virtual_devices, 8)
+    base = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8,
+                comm_mode="rand", qat=QATConfig(), mesh=mesh)
+    legacy = RoundEngine(loss, opt, FedConfig(**base))
+    faulty = RoundEngine(loss, opt,
+                         FedConfig(**base, faults=FaultModel.none(),
+                                   min_quorum=0.5))
+    assert faulty.faults is None, "none() must statically elide"
+    f_legacy, f_none = jax.jit(legacy.round_fn), jax.jit(faulty.round_fn)
+    for seed in range(3):
+        key = jax.random.PRNGKey(seed)
+        s0, m0 = f_legacy(legacy.init(params), *data, key)
+        s1, m1 = f_none(faulty.init(params), *data, key)
+        _assert_trees_equal(s0.params, s1.params,
+                            f"seed {seed}: none() diverged on the mesh")
+        assert set(m0) == set(m1) == {"local_loss", "wire_bytes"}
+        np.testing.assert_array_equal(np.asarray(m0["local_loss"]),
+                                      np.asarray(m1["local_loss"]))
+        assert int(m0["wire_bytes"]) == int(m1["wire_bytes"])
+
+
+def test_sharded_fault_round_matches_chunked(virtual_devices):
+    """Active faults preserve the unconditional schedule invariant: the
+    sharded fault round (draw replicated outside the shard_map) must be
+    bit-identical to the schedule-matched chunked round — params, fault
+    metrics and partial byte accounting alike — across dropout, quorum
+    policies and detected corruption."""
+    from repro.core.faults import FaultModel
+
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    base = dict(n_clients=8, participation=0.5, local_steps=2, batch_size=8,
+                comm_mode="rand", qat=QATConfig())
+    P = FedConfig(**base).clients_per_round
+    n_dev = 8
+    L = -(-P // n_dev)
+    mesh = _client_mesh(virtual_devices, n_dev)
+    for fault_kw in (
+        dict(faults=FaultModel(dropout=0.5), min_quorum=2),
+        dict(faults=FaultModel(dropout=0.5), quorum_policy="degrade"),
+        dict(faults=FaultModel(corrupt=0.7,
+                               straggler="lognormal", seed=2)),
+    ):
+        ch = RoundEngine(loss, opt, FedConfig(chunk=L, **base, **fault_kw))
+        sh = RoundEngine(loss, opt, FedConfig(mesh=mesh, **base, **fault_kw))
+        rf_ch, rf_sh = jax.jit(ch.round_fn), jax.jit(sh.round_fn)
+        for seed in (0, 1):
+            key = jax.random.PRNGKey(seed)
+            s_ch, m_ch = rf_ch(ch.init(params), *data, key)
+            s_sh, m_sh = rf_sh(sh.init(params), *data, key)
+            _assert_trees_equal(s_ch.params, s_sh.params,
+                                f"{fault_kw} seed {seed} diverged")
+            for name in ("n_alive", "n_transmitted", "quorum_met",
+                         "round_ok", "wire_bytes"):
+                assert int(m_ch[name]) == int(m_sh[name]), (name, fault_kw)
+            np.testing.assert_array_equal(np.asarray(m_ch["round_time"]),
+                                          np.asarray(m_sh["round_time"]))
+            n_tx = int(m_sh["n_transmitted"])
+            assert int(m_sh["wire_bytes"]) == sh.partial_round_bytes(
+                n_tx, params)
+
+
+# ---------------------------------------------------------------------------
 # Dryrun-style subprocess lane: proves parity from a single-device run
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,453 @@
+"""Fault layer (ISSUE 6): bitwise none()==legacy, partial-cohort
+renormalization, degenerate cohorts, quorum policies, exact partial byte
+accounting, and corruption semantics.
+
+The two load-bearing invariants:
+
+* ``FaultModel.none()`` (or ``faults=None``) leaves the engine on its
+  legacy round build — BIT-identical states and metrics for every
+  executor, seed-swept.
+* The traced ``wire_bytes`` of a fault round equals the static partial
+  accounting (``RoundEngine.partial_round_bytes`` and
+  ``metrics.partial_round_bytes``) at the realized transmit count:
+  P downlink copies, transmitted-uplink payloads only.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import metrics as metrics_lib
+from repro.core.engine import (
+    ChunkedExecutor,
+    FedConfig,
+    RoundEngine,
+    VmapExecutor,
+    make_local_update,
+)
+from repro.core.faults import FaultDraw, FaultModel, quorum_count
+from repro.core.qat import (
+    DISABLED,
+    QATConfig,
+    clip_value_mask,
+    weight_decay_mask,
+)
+from repro.core.server_opt import weighted_mean
+from repro.data import client_latencies, partition_iid, \
+    synthetic_classification
+from repro.models import small
+
+
+def _mlp_setup(k=6, n=600, d=16, n_classes=4):
+    xall, yall = synthetic_classification(0, n + 300, d=d, n_classes=n_classes)
+    cx, cy, nk = partition_iid(xall[:n], yall[:n], k=k, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=d, n_classes=n_classes)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    return params, loss, apply, opt, (jnp.asarray(cx), jnp.asarray(cy),
+                                      jnp.asarray(nk))
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
+                                      err_msg=msg)
+
+
+def _any_leaf_differs(a, b):
+    return any(
+        not np.array_equal(np.asarray(pa), np.asarray(pb))
+        for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+_BASE = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8,
+             comm_mode="rand", qat=QATConfig())
+
+
+# ---------------------------------------------------------------------------
+# Bitwise invariant: none() == legacy, every executor, seed-swept
+# ---------------------------------------------------------------------------
+
+
+def test_faultmodel_none_bitwise_legacy_seed_swept():
+    """faults=FaultModel.none() (even with a quorum configured) must leave
+    the engine on the LEGACY trace: bit-identical params and metrics for
+    the vmap and chunked executors across seeds, and no fault metrics."""
+    params, loss, apply, opt, data = _mlp_setup()
+    legacy_cfg = FedConfig(**_BASE)
+    none_cfg = FedConfig(**_BASE, faults=FaultModel.none(), min_quorum=0.5)
+    for executor in (VmapExecutor(), ChunkedExecutor(2)):
+        legacy = RoundEngine(loss, opt, legacy_cfg, executor=executor)
+        faulty = RoundEngine(loss, opt, none_cfg, executor=executor)
+        assert faulty.faults is None, "none() must statically elide"
+        f_legacy = jax.jit(legacy.round_fn)
+        f_none = jax.jit(faulty.round_fn)
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            s0, m0 = f_legacy(legacy.init(params), *data, key)
+            s1, m1 = f_none(faulty.init(params), *data, key)
+            _assert_trees_equal(s0.params, s1.params,
+                                f"seed {seed}: none() diverged from legacy")
+            assert set(m0) == set(m1) == {"local_loss", "wire_bytes"}
+            np.testing.assert_array_equal(np.asarray(m0["local_loss"]),
+                                          np.asarray(m1["local_loss"]))
+            assert int(m0["wire_bytes"]) == int(m1["wire_bytes"])
+
+
+def test_straggler_inf_deadline_active_but_lossless():
+    """A straggler distribution with an infinite deadline drops nobody —
+    params must equal the legacy round exactly (every client survives, so
+    the masked aggregation degenerates to the legacy one) — but the fault
+    path IS active: it reports the cohort's slowest latency as round_time
+    (the sync time-to-accuracy clock)."""
+    params, loss, apply, opt, data = _mlp_setup()
+    fm = FaultModel(straggler="lognormal", straggler_scale=2.0,
+                    straggler_param=0.5, seed=3)
+    assert not fm.is_none
+    legacy = RoundEngine(loss, opt, FedConfig(**_BASE))
+    eng = RoundEngine(loss, opt, FedConfig(**_BASE, faults=fm))
+    key = jax.random.PRNGKey(11)
+    s0, m0 = jax.jit(legacy.round_fn)(legacy.init(params), *data, key)
+    s1, m1 = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+    _assert_trees_equal(s0.params, s1.params)
+    P = eng.cohort
+    assert int(m1["n_alive"]) == int(m1["n_transmitted"]) == P
+    assert int(m1["round_ok"]) == 1
+    assert int(m1["wire_bytes"]) == int(m0["wire_bytes"])
+    lat = np.asarray(fm.latencies(_BASE["n_clients"]))
+    t = float(m1["round_time"])
+    # the cohort max is one of the pool latencies, and >= the pool min
+    assert any(math.isclose(t, float(v), rel_tol=1e-6) for v in lat)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate cohorts
+# ---------------------------------------------------------------------------
+
+
+def test_all_dropped_round_skipped():
+    """dropout=1.0: nobody transmits. The round must be discarded (params
+    AND stateful-aggregator momentum untouched, finite), charge 0 uplink
+    bytes, and report itself dead."""
+    params, loss, apply, opt, data = _mlp_setup()
+    cfg = FedConfig(**_BASE, faults=FaultModel(dropout=1.0),
+                    aggregator="fedavgm", server_lr=1.0, server_momentum=0.9)
+    eng = RoundEngine(loss, opt, cfg)
+    state0 = eng.init(params)
+    state1, m = jax.jit(eng.round_fn)(state0, *data, jax.random.PRNGKey(0))
+    assert int(m["n_alive"]) == int(m["n_transmitted"]) == 0
+    assert int(m["quorum_met"]) == 0 and int(m["round_ok"]) == 0
+    _assert_trees_equal(state0.params, state1.params,
+                        "skipped round must not move params")
+    _assert_trees_equal(state0.opt, state1.opt,
+                        "skipped round must not move aggregator state")
+    for leaf in jax.tree.leaves(state1.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    want = eng.partial_round_bytes(0, params)
+    assert int(m["wire_bytes"]) == want
+    assert metrics_lib.partial_round_bytes(params, cfg, 0) == want
+
+
+def test_quorum_boundary_skip_vs_degrade():
+    """Find a seed with exactly 2/3 survivors; then min_quorum=2 commits
+    the round, min_quorum=3 discards it, and 'degrade' proceeds even
+    below quorum (while still reporting quorum_met=0)."""
+    params, loss, apply, opt, data = _mlp_setup()
+
+    def build(min_quorum, policy="skip"):
+        cfg = FedConfig(**_BASE, faults=FaultModel(dropout=0.5),
+                        min_quorum=min_quorum, quorum_policy=policy)
+        e = RoundEngine(loss, opt, cfg)
+        return e, jax.jit(e.round_fn)
+
+    eng2, f2 = build(2)
+    key = None
+    for seed in range(64):
+        k = jax.random.PRNGKey(seed)
+        _, m = f2(eng2.init(params), *data, k)
+        if int(m["n_alive"]) == 2:
+            key = k
+            break
+    assert key is not None, "no seed with exactly 2 survivors in 64 draws"
+
+    s2, m2 = f2(eng2.init(params), *data, key)
+    assert int(m2["quorum_met"]) == 1 and int(m2["round_ok"]) == 1
+    assert _any_leaf_differs(params, s2.params), \
+        "at-quorum round must commit"
+
+    eng3, f3 = build(3)
+    s3, m3 = f3(eng3.init(params), *data, key)
+    assert int(m3["quorum_met"]) == 0 and int(m3["round_ok"]) == 0
+    _assert_trees_equal(params, s3.params, "below-quorum round must skip")
+
+    engd, fd = build(3, policy="degrade")
+    sd, md = fd(engd.init(params), *data, key)
+    assert int(md["quorum_met"]) == 0 and int(md["round_ok"]) == 1
+    _assert_trees_equal(s2.params, sd.params,
+                        "degrade must aggregate the same survivors")
+
+
+def test_partial_renormalization_exact():
+    """Independent reconstruction of the partial aggregate: with the FP32
+    wire and the mean aggregator, a fault round's params must equal the
+    survivors-only nk-weighted mean of the clients' locally-trained
+    params — survivor weights renormalized by the surviving nk mass.
+    Seeds are swept so single-survivor and multi-survivor (and skipped
+    all-dead) rounds are all exercised."""
+    params, loss, apply, opt, data = _mlp_setup()
+    cx, cy, nk = data
+    fm = FaultModel(dropout=0.5)
+    cfg = FedConfig(n_clients=6, participation=0.5, local_steps=2,
+                    batch_size=8, comm_mode="none", qat=DISABLED,
+                    faults=fm, quorum_policy="degrade")
+    eng = RoundEngine(loss, opt, cfg)
+    round_fn = jax.jit(eng.round_fn)
+    local_update = make_local_update(loss, opt, cfg)
+    lat_table = fm.latencies(cfg.n_clients)
+    P = eng.cohort
+
+    @jax.jit
+    def reconstruct(key):
+        k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
+        idx = eng.sampler(nk, k_sel)
+        loc_keys = jax.random.split(k_loc, P)
+        trained, _ = jax.vmap(local_update, in_axes=(None, 0, 0, 0))(
+            params, cx[idx], cy[idx], loc_keys
+        )
+        fd = fm.draw(key, idx, lat_table)
+        nk_eff = nk[idx] * fd.accepted.astype(jnp.float32)
+        # replace rejected rows by the broadcast model, exactly like the
+        # engine, then take the renormalized weighted mean
+        masked = jax.tree.map(
+            lambda m, p: jnp.where(
+                fd.accepted.reshape((P,) + (1,) * (m.ndim - 1)),
+                m, p[None],
+            ),
+            trained, params,
+        )
+        return weighted_mean(masked, nk_eff), fd.accepted
+
+    n_single = n_multi = 0
+    for seed in range(8):
+        key = jax.random.PRNGKey(seed)
+        state, m = round_fn(eng.init(params), *data, key)
+        expected, accepted = reconstruct(key)
+        n_alive = int(np.sum(np.asarray(accepted)))
+        assert n_alive == int(m["n_alive"])
+        if n_alive == 0:
+            _assert_trees_equal(params, state.params)
+            continue
+        n_single += n_alive == 1
+        n_multi += n_alive > 1
+        for got, want in zip(jax.tree.leaves(state.params),
+                             jax.tree.leaves(expected)):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-6, atol=1e-7,
+                err_msg=f"seed {seed} ({n_alive} survivors): partial "
+                        "aggregate != renormalized survivor mean")
+    assert n_single >= 1, "sweep never hit a single-survivor round"
+    assert n_multi >= 1, "sweep never hit a multi-survivor round"
+
+
+def test_single_survivor_chunked_parity():
+    """A fault round is still executor-invariant: vmap and chunk=1 (the
+    width-2 padding pin from the chunked executor) must agree bitwise
+    under active dropout, including on a single-survivor realization."""
+    params, loss, apply, opt, data = _mlp_setup()
+    cfg = FedConfig(**_BASE, faults=FaultModel(dropout=0.5),
+                    quorum_policy="degrade")
+    full = RoundEngine(loss, opt, cfg, executor=VmapExecutor())
+    f_full = jax.jit(full.round_fn)
+    key = None
+    for seed in range(64):
+        k = jax.random.PRNGKey(seed)
+        _, m = f_full(full.init(params), *data, k)
+        if int(m["n_alive"]) == 1:
+            key = k
+            break
+    assert key is not None, "no single-survivor seed in 64 draws"
+    s_full, m_full = f_full(full.init(params), *data, key)
+    chunked = RoundEngine(loss, opt, cfg, executor=ChunkedExecutor(1))
+    s_chunk, m_chunk = jax.jit(chunked.round_fn)(
+        chunked.init(params), *data, key
+    )
+    _assert_trees_equal(s_full.params, s_chunk.params,
+                        "faulty round: chunked diverged from vmap")
+    for name in ("n_alive", "n_transmitted", "wire_bytes", "round_ok"):
+        assert int(m_full[name]) == int(m_chunk[name]), name
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting: traced == static, per realized transmit count
+# ---------------------------------------------------------------------------
+
+
+def test_partial_bytes_traced_equals_static():
+    """Asymmetric wire (delta uplink) + dropout: the traced wire_bytes
+    must equal both static partial accountings at the realized transmit
+    count — catching any up/down leg swap or drift."""
+    params, loss, apply, opt, data = _mlp_setup()
+    cfg = FedConfig(**_BASE, up_codec="delta:e4m3",
+                    faults=FaultModel(dropout=0.4))
+    eng = RoundEngine(loss, opt, cfg)
+    round_fn = jax.jit(eng.round_fn)
+    seen = set()
+    for seed in range(6):
+        _, m = round_fn(eng.init(params), *data, jax.random.PRNGKey(seed))
+        n_tx = int(m["n_transmitted"])
+        seen.add(n_tx)
+        want = eng.partial_round_bytes(n_tx, params)
+        assert int(m["wire_bytes"]) == want, (seed, n_tx)
+        assert metrics_lib.partial_round_bytes(params, cfg, n_tx) == want
+    assert len(seen) > 1, "dropout sweep produced only one transmit count"
+    with pytest.raises(ValueError):
+        eng.partial_round_bytes(eng.cohort + 1, params)
+
+
+# ---------------------------------------------------------------------------
+# Corruption
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_detected_charges_uplink_but_excluded():
+    """corrupt=1.0 + checksum: every client transmits (full uplink bytes
+    charged) yet none is accepted — the round is discarded."""
+    params, loss, apply, opt, data = _mlp_setup()
+    cfg = FedConfig(**_BASE, faults=FaultModel(corrupt=1.0))
+    eng = RoundEngine(loss, opt, cfg)
+    state, m = jax.jit(eng.round_fn)(eng.init(params), *data,
+                                     jax.random.PRNGKey(5))
+    P = eng.cohort
+    assert int(m["n_transmitted"]) == P and int(m["n_alive"]) == 0
+    assert int(m["round_ok"]) == 0
+    assert int(m["wire_bytes"]) == eng.partial_round_bytes(P, params)
+    _assert_trees_equal(params, state.params)
+
+
+def test_corrupt_undetected_flips_propagate():
+    """Without the checksum the bit flips survive into aggregation: the
+    result must differ from the fault-free round."""
+    params, loss, apply, opt, data = _mlp_setup()
+    legacy = RoundEngine(loss, opt, FedConfig(**_BASE))
+    cfg = FedConfig(**_BASE, faults=FaultModel(
+        corrupt=1.0, corrupt_detect=False, corrupt_frac=0.05))
+    eng = RoundEngine(loss, opt, cfg)
+    key = jax.random.PRNGKey(5)
+    s0, _ = jax.jit(legacy.round_fn)(legacy.init(params), *data, key)
+    s1, m = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+    assert int(m["n_alive"]) == eng.cohort  # undetected => all accepted
+    assert _any_leaf_differs(s0.params, s1.params), \
+        "undetected corruption left the aggregate untouched"
+
+
+def test_corrupt_tree_unit():
+    """corrupt_tree flips bits only in corrupted clients' f32 rows and
+    passes non-f32 leaves through untouched."""
+    k = jax.random.PRNGKey(0)
+    stacked = {
+        "w": jax.random.normal(k, (3, 16, 8)),
+        "b": jax.random.normal(k, (3, 8)),
+        "i": jnp.arange(6, dtype=jnp.int32).reshape(3, 2),
+    }
+    fm = FaultModel(corrupt=1.0, corrupt_detect=False, corrupt_frac=0.5)
+    corrupted = jnp.asarray([True, False, True])
+    out = fm.corrupt_tree(stacked, corrupted, jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(out["i"]),
+                                  np.asarray(stacked["i"]))
+    for name in ("w", "b"):
+        got, src = np.asarray(out[name]), np.asarray(stacked[name])
+        np.testing.assert_array_equal(got[1], src[1],
+                                      err_msg="clean row was damaged")
+        assert not np.array_equal(got[0], src[0]), f"{name}[0] not flipped"
+        assert not np.array_equal(got[2], src[2]), f"{name}[2] not flipped"
+
+
+# ---------------------------------------------------------------------------
+# round_time / latency tables / quorum_count / config validation
+# ---------------------------------------------------------------------------
+
+
+def test_round_time_semantics():
+    lat = jnp.asarray([1.0, 5.0, 3.0])
+    ok = jnp.ones(3, bool)
+    fm_inf = FaultModel(straggler="lognormal")
+    d = FaultDraw(ok, ok, jnp.zeros(3, bool), lat)
+    assert float(fm_inf.round_time(d)) == 5.0
+    fm = FaultModel(straggler="lognormal", deadline=4.0)
+    # all delivered under the deadline: the server closes at the last one
+    d_in = FaultDraw(ok, ok, jnp.zeros(3, bool),
+                     jnp.asarray([1.0, 2.0, 3.0]))
+    assert float(fm.round_time(d_in)) == 3.0
+    # anyone missing: the server must wait out the full deadline
+    d_out = FaultDraw(jnp.asarray([True, False, True]), ok,
+                      jnp.zeros(3, bool), lat)
+    assert float(fm.round_time(d_out)) == 4.0
+
+
+def test_latency_tables_deterministic():
+    a = client_latencies(16, dist="pareto", scale=2.0, param=1.1, seed=7)
+    b = client_latencies(16, dist="pareto", scale=2.0, param=1.1, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (16,) and np.all(a >= 2.0)
+    c = client_latencies(16, dist="pareto", scale=2.0, param=1.1, seed=8)
+    assert not np.array_equal(a, c)
+    np.testing.assert_array_equal(
+        client_latencies(4, dist="none", scale=3.0), np.full(4, 3.0))
+    with pytest.raises(ValueError):
+        client_latencies(4, dist="weibull")
+
+
+def test_quorum_count():
+    assert quorum_count(0.0, 6) == 1     # 0 means "any survivor"
+    assert quorum_count(0, 6) == 1
+    assert quorum_count(0.5, 6) == 3
+    assert quorum_count(0.34, 3) == 2    # fractional quorum rounds UP
+    assert quorum_count(1.0, 6) == 6
+    assert quorum_count(2, 6) == 2
+    assert quorum_count(10, 6) == 6      # clamped to the cohort
+
+
+def test_faultmodel_validation():
+    with pytest.raises(ValueError, match="dropout"):
+        FaultModel(dropout=1.5)
+    with pytest.raises(ValueError, match="corrupt"):
+        FaultModel(corrupt=-0.1)
+    with pytest.raises(ValueError, match="straggler"):
+        FaultModel(straggler="weibull")
+    with pytest.raises(ValueError, match="deadline"):
+        FaultModel(deadline=0.0)
+
+
+def test_fedconfig_validation():
+    good = dict(n_clients=6, participation=0.5, local_steps=2, batch_size=8)
+    FedConfig(**good)  # sanity: the base is valid
+    bad = [
+        dict(n_clients=0),
+        dict(participation=0.0),
+        dict(participation=1.5),
+        dict(local_steps=0),
+        dict(batch_size=0),
+        dict(chunk=0),
+        dict(sampler="bogus"),
+        dict(aggregator="bogus"),
+        dict(quorum_policy="bogus"),
+        dict(min_quorum=1.5),
+        dict(min_quorum=-1),
+        dict(min_quorum=7),     # int above the cohort (=3 here)
+        dict(faults=42),
+    ]
+    for kw in bad:
+        with pytest.raises((ValueError, TypeError)):
+            FedConfig(**{**good, **kw})
+    # a mesh without the client axis must fail eagerly, not deep in jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    with pytest.raises(ValueError, match="client_axis|clients"):
+        FedConfig(**good, mesh=mesh)

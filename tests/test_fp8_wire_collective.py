@@ -116,6 +116,52 @@ def test_make_comm_round_with_stateful_aggregator():
     assert u8_gathers, "aggregator path lost the u8 wire"
 
 
+def test_make_comm_round_partial_quorum():
+    """make_comm_round(partial=True): the boundary takes a replicated
+    alive mask — all-alive matches the non-partial round bitwise, an
+    all-dead (below-quorum) round passes params AND aggregator state
+    through unchanged, and partial=True without an aggregator raises."""
+    from repro.core.engine import FedAvgM
+    from repro.core.qat import QATConfig
+    from repro.launch.steps import comm_round_state, make_comm_round
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    params = _params()
+
+    def build(**kw):
+        agg = FedAvgM(lr=1.0, momentum=0.9)
+        return make_comm_round(mesh, P(), ("pod",), QATConfig(),
+                               mode="rand", wire="fp8", aggregator=agg,
+                               state_specs=P(), **kw), \
+            comm_round_state(agg, params)
+
+    key = jax.random.PRNGKey(0)
+    fn_ref, st_ref = build()
+    ref_params, _ = jax.jit(fn_ref)(params, st_ref, key)
+
+    fn, st = build(partial=True, min_quorum=1)
+    alive = jnp.ones((1,), bool)
+    new_params, new_state = jax.jit(fn)(params, st, key, alive)
+    np.testing.assert_array_equal(np.asarray(new_params["w"]),
+                                  np.asarray(ref_params["w"]),
+                                  err_msg="all-alive partial != full round")
+
+    dead_params, dead_state = jax.jit(fn)(params, st, key,
+                                          jnp.zeros((1,), bool))
+    np.testing.assert_array_equal(np.asarray(dead_params["w"]),
+                                  np.asarray(st["prev"]["w"]),
+                                  err_msg="below-quorum round moved params")
+    assert all(not bool(jnp.any(x != 0))
+               for x in jax.tree.leaves(dead_state["opt"])), \
+        "below-quorum round moved aggregator state"
+    np.testing.assert_array_equal(np.asarray(dead_state["prev"]["w"]),
+                                  np.asarray(st["prev"]["w"]))
+
+    with pytest.raises(ValueError, match="partial"):
+        make_comm_round(mesh, P(), ("pod",), QATConfig(), mode="rand",
+                        wire="fp8", partial=True)
+
+
 def test_fp8_wire_single_collective_for_whole_model():
     """Flat codec collapses O(n_tensors) collectives into exactly one."""
     mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))

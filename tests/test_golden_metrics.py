@@ -1,4 +1,5 @@
-"""Golden-metrics regression: one seeded round per engine variant.
+"""Golden-metrics regression: one seeded round per engine variant, plus
+one short buffered-async run per async variant.
 
 Every stage combination from the engine grid (sampler x link x executor x
 aggregator) runs ONE deterministic round and is pinned against the
@@ -28,6 +29,7 @@ import numpy as np
 import pytest
 
 from repro import optim
+from repro.core.async_engine import AsyncConfig, BufferedAsyncEngine
 from repro.core.codec import CodecSchedule
 from repro.core.engine import FedConfig, RoundEngine
 from repro.core.qat import (
@@ -84,6 +86,46 @@ VARIANTS = {
 }
 
 
+# buffered-async variants (ISSUE 6): buffer size x staleness discount x
+# momentum x delta-coded uplink, each pinned as (exact cumulative bytes,
+# loss, param fingerprints) of a short deterministic event-loop run
+ASYNC_VARIANTS = {
+    "k2_plain": dict(acfg=dict(buffer_size=2, staleness_alpha=0.0)),
+    "k4_stale1": dict(acfg=dict(buffer_size=4, staleness_alpha=1.0)),
+    "k2_momentum": dict(acfg=dict(buffer_size=2, staleness_alpha=0.5,
+                                  server_momentum=0.9)),
+    "k2_delta_up": dict(acfg=dict(buffer_size=2, staleness_alpha=0.5),
+                        cfg=dict(up_codec="delta:e4m3")),
+}
+
+
+def _leaf_fingerprints(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = {}
+    for path, leaf in flat:
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        arr = np.asarray(leaf, np.float64)
+        leaves[name] = [float(arr.mean()), float(np.linalg.norm(arr))]
+    return leaves
+
+
+def _async_round_metrics(variant: str) -> dict:
+    params, loss, opt, (cx, cy, nk) = _setup()
+    spec = ASYNC_VARIANTS[variant]
+    cfg = FedConfig(**_BASE, comm_mode="rand", qat=QATConfig(),
+                    **spec.get("cfg", {}))
+    eng = BufferedAsyncEngine(loss, opt, cfg,
+                              AsyncConfig(concurrency=4, **spec["acfg"]))
+    state, hist = eng.run(params, cx, cy, jax.random.PRNGKey(42), folds=4,
+                          eval_every=4)
+    return {
+        "wire_bytes": hist.cumulative_bytes[-1],
+        "local_loss": hist.loss[-1],
+        "mean_staleness": hist.mean_staleness[-1],
+        "leaves": _leaf_fingerprints(state.params),
+    }
+
+
 def _setup():
     xall, yall = synthetic_classification(0, 900, d=16, n_classes=4)
     cx, cy, nk = partition_iid(xall[:600], yall[:600], k=6, seed=0)
@@ -102,16 +144,10 @@ def _round_metrics(variant: str) -> dict:
     eng = RoundEngine(loss, opt, cfg)
     state, m = jax.jit(eng.round_fn)(eng.init(params), *data,
                                      jax.random.PRNGKey(42))
-    flat = jax.tree_util.tree_flatten_with_path(state.params)[0]
-    leaves = {}
-    for path, leaf in flat:
-        name = ".".join(str(getattr(p, "key", p)) for p in path)
-        arr = np.asarray(leaf, np.float64)
-        leaves[name] = [float(arr.mean()), float(np.linalg.norm(arr))]
     return {
         "wire_bytes": int(m["wire_bytes"]),
         "local_loss": float(m["local_loss"]),
-        "leaves": leaves,
+        "leaves": _leaf_fingerprints(state.params),
     }
 
 
@@ -139,18 +175,52 @@ def test_golden_metrics(variant):
                     "(intended? regen via tests/test_golden_metrics.py)")
 
 
+@pytest.mark.parametrize("variant", sorted(ASYNC_VARIANTS))
+def test_golden_async_metrics(variant):
+    """The buffered-async event loop's trajectory is deterministic in
+    (seed, configuration): exact cumulative wire bytes, tight-rtol loss /
+    staleness / param fingerprints after 4 folds."""
+    with open(GOLDEN_PATH) as f:
+        goldens = json.load(f)
+    assert variant in goldens.get("async_variants", {}), (
+        f"no async golden for {variant!r} — regenerate: "
+        "PYTHONPATH=src python tests/test_golden_metrics.py --regen"
+    )
+    want = goldens["async_variants"][variant]
+    got = _async_round_metrics(variant)
+    assert got["wire_bytes"] == want["wire_bytes"], (
+        variant, got["wire_bytes"], want["wire_bytes"])
+    np.testing.assert_allclose(
+        got["local_loss"], want["local_loss"], rtol=2e-5,
+        err_msg=f"{variant}: local_loss drifted")
+    np.testing.assert_allclose(
+        got["mean_staleness"], want["mean_staleness"], rtol=1e-9,
+        err_msg=f"{variant}: dispatch/fold order drifted")
+    assert got["leaves"].keys() == want["leaves"].keys(), variant
+    for name, (mean, l2) in got["leaves"].items():
+        wm, wl = want["leaves"][name]
+        np.testing.assert_allclose(
+            [mean, l2], [wm, wl], rtol=2e-5, atol=1e-7,
+            err_msg=f"{variant}/{name}: async params fingerprint drifted "
+                    "(intended? regen via tests/test_golden_metrics.py)")
+
+
 def _regen():
     out = {
         "_regen": "PYTHONPATH=src python tests/test_golden_metrics.py --regen",
         "_seed": 42,
         "_jax": jax.__version__,
         "variants": {v: _round_metrics(v) for v in sorted(VARIANTS)},
+        "async_variants": {
+            v: _async_round_metrics(v) for v in sorted(ASYNC_VARIANTS)
+        },
     }
     os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
     with open(GOLDEN_PATH, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {len(out['variants'])} goldens to {GOLDEN_PATH}")
+    print(f"wrote {len(out['variants'])} sync + "
+          f"{len(out['async_variants'])} async goldens to {GOLDEN_PATH}")
 
 
 if __name__ == "__main__":
