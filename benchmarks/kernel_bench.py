@@ -474,6 +474,82 @@ def _fed_sharded_benches(rows):
         })
 
 
+def _fed2d_plane_benches(rows):
+    """Shard-aware plane quantize-once vs the per-leaf loop under FSDP on
+    the 2D federated mesh (ISSUE 7): reduced-tinyllama masters sharded by
+    ``sharding.policy.fed_param_specs`` over the fsdp axis of a 2x4
+    (clients, fsdp) mesh. The sharded plane is a shard_map whose body
+    quantizes each device's LOCAL shards — ONE plane-kernel launch per
+    device regardless of tree size (trace-time count pinned in
+    tests/test_engine_sharded.py) and zero cross-shard resharding; the
+    per-leaf loop is the retired FSDP path: O(n_tensors) quantize chains
+    that GSPMD reshards around. jnp backend (scheduling is the subject,
+    not kernel bodies); fwd+bwd of the same squared loss both sides."""
+    from repro import configs
+    from repro.core import qat as qat_lib
+    from repro.core.qat import QATConfig
+    from repro.kernels import dispatch as _dispatch
+    from repro.launch.mesh import make_fed_mesh
+    from repro.launch.steps import (quantize_params_once_per_leaf,
+                                    quantize_params_once_sharded)
+    from repro.models.registry import get_model
+    from repro.sharding.policy import fed_param_shardings
+
+    if len(jax.devices()) < 8:
+        rows.append({
+            "bench": "fed", "name": "quantize_once_fsdp_skipped",
+            "us_per_call": 0.0,
+            "derived": f"needs 8 devices ({len(jax.devices())} present) — "
+                       "run this module as the entry point",
+        })
+        return
+
+    cfg = configs.reduced(configs.get("tinyllama_1_1b"))
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    mesh = make_fed_mesh(2, 4)
+    sh = fed_param_shardings(params, mesh, axis="fsdp")
+    params = jax.device_put(params, sh)
+    qcfg = QATConfig()
+    n_q = len(qat_lib.quantized_leaf_names(params))
+
+    def sq_loss(quantize):
+        def loss(p):
+            q, _ = quantize(p, qcfg)
+            return sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                       for l in jax.tree.leaves(q))
+        return jax.jit(jax.value_and_grad(loss))
+
+    f_plane = sq_loss(lambda p, c: quantize_params_once_sharded(p, c, sh))
+    f_leaf = sq_loss(quantize_params_once_per_leaf)
+
+    # trace-time launch count of the sharded-plane path (O(1) per device)
+    calls = []
+    orig = _dispatch.quant_det_plane
+    _dispatch.quant_det_plane = (
+        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    try:
+        jax.make_jaxpr(
+            lambda p: quantize_params_once_sharded(p, qcfg, sh)[0]
+        )(params)
+    finally:
+        _dispatch.quant_det_plane = orig
+
+    t_plane, t_leaf = _interleaved(f_plane, f_leaf, params, n=10, outer=8)
+    _row(rows, "quantize_once_fsdp_per_leaf_tinyllama_fwdbwd", t_leaf,
+         f"{n_q} per-leaf quantize chains under GSPMD (retired FSDP path)")
+    _row(rows, "quantize_once_fsdp_sharded_plane_tinyllama_fwdbwd", t_plane,
+         f"shard_map plane on the 2x4 clients x fsdp mesh: "
+         f"{len(calls)} launch/device; "
+         f"{t_leaf / max(t_plane, 1e-9):.1f}x vs per-leaf")
+    rows.append({
+        "bench": "fed", "name": "quantize_once_fsdp_plane_speedup",
+        "us_per_call": round(t_leaf / max(t_plane, 1e-9), 2),
+        "derived": f"per-leaf/sharded-plane fwd+bwd wall-clock ratio; "
+                   f"trace enters the plane kernel {len(calls)}x "
+                   f"(O(1)/device) vs {n_q} per-leaf chains",
+    })
+
+
 def run(out_rows=None):
     rows = out_rows if out_rows is not None else []
     _quantizer_benches(rows)
@@ -482,6 +558,7 @@ def run(out_rows=None):
     _plane_benches(rows)
     _fed_executor_benches(rows)
     _fed_sharded_benches(rows)
+    _fed2d_plane_benches(rows)
     with open("BENCH_kernels.json", "w") as f:
         json.dump(rows, f, indent=1)
     return rows

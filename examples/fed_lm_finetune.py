@@ -12,13 +12,52 @@ server tail is a ``core.engine`` Aggregator — ``--server-opt fedavgm`` or
 ``RoundEngine`` with the cohort sharded over a D-device ``clients`` mesh
 (``ShardedExecutor``): every device fine-tunes cohort/D clients and ships
 one uint8 payload per round leg — the engine path FedSim and the tests
-drive, at example scale. Needs D devices; on a CPU host force virtual
-ones: ``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 8``.
+drive, at example scale.
+
+``--mesh CxF`` (e.g. ``--mesh 2x4``) goes 2D: C cohort rows of F devices
+each (``launch.mesh.make_fed_mesh``), every client's training step
+FSDP-sharded over the row with the ``sharding/policy.py`` rules, wire
+planes built per device over the local shards, and the uplink's uint8
+codes gathered along the client axis only — federated LM fine-tuning at
+model scales one device cannot hold. ``--scale small`` grows the backbone
+past the smoke-test config (dims stay divisible by the fsdp axis).
+
+The script forces virtual CPU devices for the requested mesh by itself
+(the flag must reach XLA before jax initializes, so it is derived from
+``--mesh`` at import time); on real hardware the flag is a no-op.
 
     PYTHONPATH=src python examples/fed_lm_finetune.py [--rounds N]
-        [--server-opt {mean,fedavgm,fedadam}] [--mesh D]
+        [--server-opt {mean,fedavgm,fedadam}] [--mesh D | CxF]
 """
 import argparse
+import os
+import sys
+
+
+def _mesh_shape(argv):
+    """Peek --mesh before jax import: 'D' -> (D, None), 'CxF' -> (C, F)."""
+    val = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--mesh="):
+            val = a.split("=", 1)[1]
+    if val is None:
+        return None
+    if "x" in val.lower():
+        c, f = val.lower().split("x", 1)
+        return int(c), int(f)
+    return int(val), None
+
+
+_SHAPE = _mesh_shape(sys.argv[1:])
+if _SHAPE is not None:
+    _need = _SHAPE[0] * (_SHAPE[1] or 1)
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _need > 1 and "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_need}"
+        ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -50,10 +89,18 @@ def main():
     ap.add_argument("--server-lr", type=float, default=None,
                     help="server step size; default = the aggregator's own "
                          "default (FedAvgM 1.0, FedAdam 0.1)")
-    ap.add_argument("--mesh", type=int, default=None,
-                    help="drive the RoundEngine with the cohort sharded "
-                         "over this many devices ('clients' axis); see the "
-                         "module docstring for virtual CPU devices")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="drive the RoundEngine on a device mesh: an int D "
+                         "shards the cohort over D devices ('clients' "
+                         "axis); 'CxF' (e.g. 2x4) builds the 2D federated "
+                         "mesh — C cohort rows, each client FSDP-sharded "
+                         "over F devices. Virtual CPU devices are forced "
+                         "automatically")
+    ap.add_argument("--scale", default="reduced",
+                    choices=["reduced", "small"],
+                    help="backbone size: 'reduced' is the CPU smoke config; "
+                         "'small' grows d_model/d_ff/layers (fsdp-divisible "
+                         "dims) so the 2D mesh shards something real")
     ap.add_argument("--codec", default=None,
                     help="wire codec registry name for the model exchange "
                          "(e.g. e4m3, e5m2_det, fp4, delta:e4m3); default "
@@ -63,13 +110,29 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get("tinyllama_1_1b"))
+    if args.scale == "small":
+        import dataclasses
+
+        # tinyllama-family, one notch up from the smoke config; every
+        # sharded dim divisible by the fsdp axis sizes the CLI accepts
+        cfg = dataclasses.replace(
+            cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+            d_ff=512, vocab=512, head_dim=32,
+        )
     model = get_model(cfg)
     qcfg = DISABLED if args.no_qat else QATConfig()
     mesh = None
-    if args.mesh:
+    model_axis = None
+    shape = _mesh_shape(["--mesh", args.mesh]) if args.mesh else None
+    if shape is not None and shape[1] is not None:
+        from repro.launch.mesh import make_fed_mesh
+
+        mesh = make_fed_mesh(*shape)
+        model_axis = "fsdp"
+    elif shape is not None:
         from repro.launch.mesh import make_client_mesh
 
-        mesh = make_client_mesh(args.mesh)
+        mesh = make_client_mesh(shape[0])
     codec_kw = {}
     if args.codec:
         # delta codecs ride the uplink only: the downlink receiver holds no
@@ -80,7 +143,8 @@ def main():
     fed = FedConfig(n_clients=args.clients, participation=args.active / args.clients,
                     local_steps=args.local_steps, batch_size=4,
                     comm_mode="none" if args.no_qat else "rand", qat=qcfg,
-                    mesh=mesh, aggregator=args.server_opt,
+                    mesh=mesh, model_axis=model_axis,
+                    aggregator=args.server_opt,
                     server_lr=args.server_lr, **codec_kw)
 
     # per-client disjoint token streams (different Markov structures)
@@ -118,14 +182,20 @@ def main():
         round_fn = jax.jit(eng.round_fn)
         key = jax.random.PRNGKey(1)
         total_bytes = 0
+        static_bytes = eng.round_bytes(params)
+        desc = (f"{shape[0]}x{shape[1]} clients x fsdp mesh"
+                if model_axis else f"{shape[0]}-device cohort mesh")
         for r in range(args.rounds):
             key, kr = jax.random.split(key)
             state, m = round_fn(state, cdata, clabels, nk, kr)
-            total_bytes += int(m["wire_bytes"])
+            traced = int(m["wire_bytes"])
+            # the byte contract the tests pin, asserted live: the traced
+            # per-round count equals the static codec accounting exactly
+            assert traced == static_bytes, (traced, static_bytes)
+            total_bytes += traced
             print(f"round {r+1}: mean local loss "
                   f"{float(m['local_loss']):.4f}  "
-                  f"cum MB {total_bytes/1e6:.1f}  "
-                  f"({args.mesh}-device cohort mesh)")
+                  f"cum MB {total_bytes/1e6:.1f}  ({desc})")
         print(f"payload/model: {per_down/1e6:.2f} MB down, "
               f"{per_up/1e6:.2f} MB up ({wire_desc})")
         return

@@ -133,6 +133,7 @@ def fp8_wire_allgather_clients(
     n_keep: int | None = None,
     codec=None,
     ref: PyTree | None = None,
+    fold_axes: tuple[str, ...] = (),
 ) -> PyTree:
     """Gather a cohort of client models sharded over mesh axes — u8 wire.
 
@@ -162,6 +163,14 @@ def fp8_wire_allgather_clients(
     or ``DeltaCodec`` with ``ref`` the round's broadcast model (replicated
     on every device; the per-client residual clip scalars ride the FP32
     rider gather).
+
+    On a 2D ``(clients, fsdp)`` mesh the leaves inside this manual region
+    are *local FSDP shards*, so the wire spec (and hence the planes, codes
+    buffer, and byte math per device) is shard-aware for free; the codes
+    all-gather moves along ``axis_names`` (the client axis) only and the
+    model-axis-sharded operands stay in place. Name the model axis in
+    ``fold_axes`` to fold its ``axis_index`` into the per-client keys so
+    each shard draws decorrelated stochastic-rounding bits.
     """
     from . import codec as codec_lib
     from . import wire
@@ -185,6 +194,9 @@ def fp8_wire_allgather_clients(
     spec = wire.make_wire_spec(jax.tree.map(lambda x: x[0], stacked))
     if not spec.q_slots:
         return keep(jax.tree.map(gather, stacked))
+    for ax in fold_axes:
+        idx = jax.lax.axis_index(ax)
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, idx))(keys)
     payloads = jax.vmap(
         lambda p, k: codec.encode(p, spec, k, ref=ref)
     )(stacked, keys)

@@ -131,6 +131,11 @@ class FedConfig:
     # each shard scans chunks). None = legacy single-device execution.
     mesh: Any = None
     client_axis: str = "clients"
+    # 2D federated mesh (launch.mesh.make_fed_mesh): name the FSDP axis
+    # here and each client's training step is model-sharded over it with
+    # the sharding/policy.py rules, while the wire/plane paths build
+    # per-device planes over the local shards. None = 1D cohort-only mesh.
+    model_axis: str | None = None
     # stateful-aggregator hyperparameters; None = that aggregator's own
     # class default (FedAvgM lr 1.0 / beta 0.9; FedAdam lr 0.1, beta2
     # 0.99, tau 1e-3) — so config and CLI paths agree on the defaults
@@ -198,6 +203,50 @@ class FedConfig:
                 f"(axes: {tuple(getattr(self.mesh, 'axis_names', ()))}); "
                 "build one with launch.mesh.make_client_mesh"
             )
+        if self.model_axis is not None:
+            if self.mesh is None:
+                raise ValueError(
+                    f"model_axis {self.model_axis!r} needs a 2D mesh; build "
+                    "one with launch.mesh.make_fed_mesh(clients, fsdp)"
+                )
+            if self.model_axis == self.client_axis:
+                raise ValueError(
+                    f"model_axis and client_axis are both "
+                    f"{self.model_axis!r} — a 2D federated mesh needs two "
+                    "distinct axes (cohort x FSDP)"
+                )
+            if self.model_axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"model_axis {self.model_axis!r} not on the given mesh "
+                    f"(axes: {tuple(self.mesh.axis_names)}); build one with "
+                    "launch.mesh.make_fed_mesh"
+                )
+            if self.chunk is not None:
+                raise ValueError(
+                    "FedConfig.chunk (scan-chunked cohort) does not compose "
+                    "with model_axis (GSPMD-sharded cohort); drop chunk or "
+                    "the model axis"
+                )
+            if self.mesh.shape[self.client_axis] > self.clients_per_round:
+                raise ValueError(
+                    f"2D mesh has {self.mesh.shape[self.client_axis]} cohort "
+                    f"rows but only {self.clients_per_round} clients per "
+                    "round — rows past the cohort would train duplicate "
+                    "padding clients; shrink the clients axis or raise "
+                    "participation"
+                )
+        if self.mesh is not None:
+            extra = [
+                a for a in self.mesh.axis_names
+                if a not in (self.client_axis, self.model_axis)
+            ]
+            if extra:
+                raise ValueError(
+                    f"mesh axes {extra} are neither client_axis "
+                    f"({self.client_axis!r}) nor model_axis "
+                    f"({self.model_axis!r}) — set FedConfig.model_axis for "
+                    "2D meshes"
+                )
         if self.quorum_policy not in ("skip", "degrade"):
             raise ValueError(
                 f"quorum_policy {self.quorum_policy!r}: 'skip' (discard a "
@@ -509,19 +558,24 @@ class WireLink:
 
     def up_gather(self, client_params: PyTree, keys: Array, axis: str,
                   n_keep: int, ref: PyTree | None = None,
-                  r: Array | None = None) -> PyTree:
+                  r: Array | None = None,
+                  fold_axes: tuple[str, ...] = ()) -> PyTree:
         """Uplink for the sharded executor (called INSIDE shard_map): this
         device's ``(L, ...)`` client stack encodes with the same per-client
         keys :meth:`up` would use, crosses the wire as a single compressed
         payload buffer in one all-gather, and decodes replicated — the
         global ``(n_keep, ...)`` stack every device then holds is
         bit-identical to what the unsharded :meth:`up` emits for the same
-        cohort."""
+        cohort. On a 2D mesh pass the model axis via ``fold_axes`` so each
+        FSDP shard draws decorrelated stochastic-rounding bits; the codes
+        all-gather still moves along ``axis`` only (sharded operands stay
+        in place)."""
         from .compression import fp8_wire_allgather_clients
 
         def leg(cc, stacked, k):
             return fp8_wire_allgather_clients(
                 stacked, k, (axis,), codec=cc, n_keep=n_keep, ref=ref,
+                fold_axes=fold_axes,
             )
 
         c = self._up_c
@@ -689,12 +743,32 @@ class ShardedExecutor:
     mesh: Any                     # jax.sharding.Mesh with `axis` in axis_names
     axis: str = "clients"
     chunk: int | None = None      # inner ChunkedExecutor; None = local vmap
+    # 2D federated mesh: FSDP-shard each client's training step over this
+    # mesh axis (fed_param_specs rules). The RoundEngine routes a set
+    # model_axis to the fed2d round build; standalone __call__ stays 1D.
+    model_axis: str | None = None
 
     def __post_init__(self):
         if self.axis not in self.mesh.axis_names:
             raise ValueError(
                 f"mesh has axes {self.mesh.axis_names}, no {self.axis!r}"
             )
+        if self.model_axis is not None:
+            if self.model_axis == self.axis:
+                raise ValueError(
+                    f"model_axis and client axis are both {self.axis!r} — "
+                    "a 2D executor needs two distinct mesh axes"
+                )
+            if self.model_axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"mesh has axes {self.mesh.axis_names}, no model axis "
+                    f"{self.model_axis!r}"
+                )
+            if self.chunk is not None:
+                raise ValueError(
+                    "chunk-scan cohort execution does not compose with a "
+                    "model_axis (GSPMD-sharded cohort); drop one"
+                )
 
     @property
     def n_shards(self) -> int:
@@ -954,7 +1028,8 @@ def _stages_from_config(cfg: FedConfig):
     link = WireLink(down_codec=cfg.resolved_down_codec,
                     up_codec=cfg.resolved_up_codec)
     if cfg.mesh is not None:
-        executor = ShardedExecutor(cfg.mesh, cfg.client_axis, chunk=cfg.chunk)
+        executor = ShardedExecutor(cfg.mesh, cfg.client_axis, chunk=cfg.chunk,
+                                   model_axis=cfg.model_axis)
     elif cfg.chunk:
         executor = ChunkedExecutor(cfg.chunk)
     else:
@@ -1057,6 +1132,8 @@ class RoundEngine:
 
     def _build_round(self):
         if isinstance(self.executor, ShardedExecutor):
+            if self.executor.model_axis is not None:
+                return self._build_fed2d_round()
             return self._build_sharded_round()
         return self._build_local_round()
 
@@ -1352,6 +1429,263 @@ class RoundEngine:
                 # logical round bytes are executor-schedule-invariant: P
                 # clients still exchange one model copy per leg (the u8
                 # gather IS the uplink payloads, merely batched per device)
+                "wire_bytes": wire_b,
+            }
+            if faults is not None:
+                metrics.update(
+                    n_alive=n_alive,
+                    n_transmitted=n_tx,
+                    quorum_met=(n_alive >= quorum).astype(jnp.int32),
+                    round_ok=ok.astype(jnp.int32),
+                    round_time=faults.round_time(fd),
+                )
+            return ServerState(new_params, new_opt,
+                               (r + 1) if scheduled else ()), metrics
+
+        return round_fn
+
+    def _build_fed2d_round(self):
+        """The 2D ``(clients, fsdp)`` round: every stage that touches model
+        state is model-sharded over the FSDP axis.
+
+        Placement (``sharding.policy.fed_param_specs``): server params, the
+        broadcast, client stacks and aggregator moments are FSDP-sharded on
+        their last-two dims and replicated over the client axis; clip
+        scalars and small leaves stay replicated everywhere. Inside every
+        manual (``shard_map``) region the leaves ARE local shards, so
+        ``wire.make_wire_spec`` on the region's tree builds the per-device
+        plane at trace time — encode/decode stay ONE fused kernel launch
+        per device at any model scale, and the uplink's only cohort-sized
+        collective still moves uint8 codes along the client axis (the
+        FSDP-sharded operands never cross the model axis).
+
+        RNG discipline: all shards share the round's keys UNFOLDED — a
+        quantized leaf that falls back to replicated (``fit_spec``) must
+        decode bit-identically on every FSDP row, which same-key encoding
+        guarantees (same data + same plane position + same key). Sharded
+        leaves reuse draw positions across shards, which biases nothing
+        (stochastic rounding is elementwise in the value).
+
+        Parity: det-mode codecs are elementwise in (value, clip) so the 2D
+        round matches the local round bitwise on the wire; rand-mode draws
+        depend on plane layout, so only det rounds are cross-checked
+        against 1D. Params match to GSPMD-reassociation tolerance. A
+        ``DeltaCodec`` uplink computes its residual clips ``max|w - ref|``
+        over the LOCAL shard — a per-shard grid that is self-consistent
+        (the clips ride in the payload) and strictly tighter than the 1D
+        per-tensor grid, but not grid-matched to it. Byte accounting stays
+        LOGICAL (the global wire spec) — identical to every other round
+        build, static == traced.
+
+        The aggregator tail runs model-sharded for the elementwise
+        aggregators (mean / FedAvgM / FedAdam operate per element, so
+        local-shard math is exact); the UQ+ ``ServerOptAggregator`` does
+        per-tensor clip grid searches (cross-element reductions) and runs
+        replicated instead — still one plane launch per device, but over
+        the gathered tree.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from ..sharding.policy import fed_param_specs
+
+        P = self.cohort
+        ex: ShardedExecutor = self.executor
+        mesh, caxis, maxis = ex.mesh, ex.axis, ex.model_axis
+        _, padded = ex.pad_to_shards(P)
+        sampler, link, aggregator = self.sampler, self.link, self.aggregator
+        local_update = self._local_update
+        scheduled = self.scheduled
+        cfg = self.cfg
+        faults: FaultModel | None = self.faults
+        lat_table = (faults.latencies(cfg.n_clients)
+                     if faults is not None else None)
+        quorum, policy = self.quorum, self.quorum_policy
+        shard_tail = not isinstance(aggregator, ServerOptAggregator)
+
+        rep = PartitionSpec()
+
+        def _lead(spec_leaves, axis, treedef):
+            """Prepend a leading-axis name to every leaf spec."""
+            return jax.tree_util.tree_unflatten(
+                treedef, [PartitionSpec(axis, *s) for s in spec_leaves]
+            )
+
+        def round_fn(state: ServerState, data: Array, labels: Array,
+                     nk: Array, key: Array):
+            server_params = state.params
+            r = state.round if scheduled else None
+            k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
+
+            # GLOBAL wire spec: byte accounting only (executor-invariant)
+            spec = wire.make_wire_spec(server_params)
+
+            # FSDP placements for everything model-shaped
+            pspecs = fed_param_specs(server_params, mesh, axis=maxis)
+            treedef = jax.tree_util.tree_structure(server_params)
+            spec_leaves = [
+                s.spec if hasattr(s, "spec") else s
+                for s in treedef.flatten_up_to(pspecs)
+            ]
+            pspecs = jax.tree_util.tree_unflatten(treedef, spec_leaves)
+            shardings = jax.tree_util.tree_unflatten(
+                treedef, [NamedSharding(mesh, s) for s in spec_leaves]
+            )
+            server_params = jax.lax.with_sharding_constraint(
+                server_params, shardings
+            )
+
+            # --- stage 1: cohort selection (replicated) ------------------
+            idx = sampler(nk, k_sel)
+            nk_sel = nk[idx]
+
+            # --- stage 2a: downlink (model-sharded: ONE encode+decode per
+            # device over its local shards; same key on every shard) ------
+            def down_body(p, kd, r_op):
+                lspec = wire.make_wire_spec(p)
+                return link.down(p, lspec, kd, r=r_op)
+
+            if scheduled:
+                down = shard_map(
+                    down_body, mesh=mesh,
+                    in_specs=(pspecs, rep, rep), out_specs=pspecs,
+                    check_rep=False,
+                )(server_params, k_down, r)
+            else:
+                down = shard_map(
+                    lambda p, kd: down_body(p, kd, None), mesh=mesh,
+                    in_specs=(pspecs, rep), out_specs=pspecs,
+                    check_rep=False,
+                )(server_params, k_down)
+
+            # --- stage 3: GSPMD cohort x FSDP training -------------------
+            # clients spread over `caxis` rows (pad wraps cohort rows, so
+            # padded clients are duplicates sliced off below); each row's
+            # step is partitioned over `maxis` by the sharding constraints
+            loc_keys = jax.random.split(k_loc, P)
+            up_keys = jax.random.split(k_up, P)
+            pad_idx = jnp.arange(padded, dtype=jnp.int32) % P
+            sel = idx[pad_idx]
+
+            def cohort_c(x):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, PartitionSpec(caxis))
+                )
+
+            stacked, losses = _client_vmap(
+                local_update, down, cohort_c(data[sel]),
+                cohort_c(labels[sel]), cohort_c(loc_keys[pad_idx]),
+            )
+            stk_specs = _lead(spec_leaves, caxis, treedef)
+            stacked = jax.lax.with_sharding_constraint(
+                stacked, jax.tree_util.tree_unflatten(
+                    treedef,
+                    [NamedSharding(mesh, PartitionSpec(caxis, *s))
+                     for s in spec_leaves],
+                )
+            )
+            # same stage-boundary pin as every other round build
+            stacked, losses = jax.lax.optimization_barrier((stacked, losses))
+
+            # --- stage 2b: uplink (u8 codes move along `caxis` only) -----
+            def up_body(cp, uk, dn, r_op):
+                return link.up_gather(cp, uk, caxis, n_keep=P, ref=dn,
+                                      r=r_op)
+
+            out_stk = _lead(spec_leaves, None, treedef)
+            if scheduled:
+                msgs = shard_map(
+                    up_body, mesh=mesh,
+                    in_specs=(stk_specs, PartitionSpec(caxis), pspecs, rep),
+                    out_specs=out_stk, check_rep=False,
+                )(stacked, up_keys[pad_idx], down, r)
+            else:
+                msgs = shard_map(
+                    lambda cp, uk, dn: up_body(cp, uk, dn, None), mesh=mesh,
+                    in_specs=(stk_specs, PartitionSpec(caxis), pspecs),
+                    out_specs=out_stk, check_rep=False,
+                )(stacked, up_keys[pad_idx], down)
+            ls = losses[:P]
+
+            # --- fault stage (replicated masks; elementwise over the
+            # FSDP-sharded trees, so GSPMD broadcasts them for free). The
+            # DRAW is pinned inside a fully-replicated shard_map: left in
+            # the open jit, GSPMD shards the cohort-sized bernoulli masks
+            # and the legacy (non-partitionable) threefry changes its bits
+            # under partitioning — the realization would silently differ
+            # from every other round build for the same key ---------------
+            if faults is not None:
+                fd = shard_map(
+                    lambda k_, i_: faults.draw(k_, i_, lat_table),
+                    mesh=mesh, in_specs=(rep, rep), out_specs=rep,
+                    check_rep=False,
+                )(key, idx)
+                if faults.flips_values:
+                    msgs = faults.corrupt_tree(msgs, fd.corrupted, key)
+                msgs = _mask_rejected(msgs, fd.accepted, down)
+                n_alive = jnp.sum(fd.accepted.astype(jnp.int32))
+                n_tx = jnp.sum(fd.transmitted.astype(jnp.int32))
+                nk_agg = nk_sel * fd.accepted.astype(nk_sel.dtype)
+                nk_agg = jnp.where(n_alive > 0, nk_agg,
+                                   jnp.ones_like(nk_agg))
+            else:
+                nk_agg = nk_sel
+
+            # --- stage 4: server aggregation -----------------------------
+            def tail_fn(sp, m, w, k, st, l_):
+                new_p, new_o = aggregator(sp, m, w, k, st)
+                return new_p, new_o, jnp.mean(l_)
+
+            if shard_tail:
+                from ..launch.steps import aggregator_state_specs
+
+                opt_specs = aggregator_state_specs(aggregator, pspecs)
+                new_params, new_opt, mean_loss = shard_map(
+                    tail_fn, mesh=mesh,
+                    in_specs=(pspecs, out_stk, rep, rep, opt_specs, rep),
+                    out_specs=(pspecs, opt_specs, rep),
+                    check_rep=False,
+                )(server_params, msgs, nk_agg, k_srv, state.opt, ls)
+            else:
+                # UQ+ grid searches reduce across whole tensors — gather
+                # and run the tail replicated (same lowering as the 1D
+                # sharded round's tail)
+                new_params, new_opt, mean_loss = shard_map(
+                    tail_fn, mesh=mesh,
+                    in_specs=(rep, rep, rep, rep, rep, rep),
+                    out_specs=(rep, rep, rep),
+                    check_rep=False,
+                )(server_params, msgs, nk_agg, k_srv, state.opt, ls)
+                new_params = jax.lax.with_sharding_constraint(
+                    new_params, shardings
+                )
+
+            if faults is not None:
+                ok = n_alive >= (quorum if policy == "skip" else 1)
+                keep = lambda new, old: jax.tree.map(
+                    lambda a, b: jnp.where(ok, a, b), new, old
+                )
+                new_params = keep(new_params, server_params)
+                new_opt = keep(new_opt, state.opt)
+
+            if faults is not None:
+                for pr in (_schedule_probe_rounds(link)
+                           if scheduled else [0]):
+                    _exact_round_bytes(link, spec, P, pr)
+                down_b, up_b = link.leg_bytes_traced(spec, r)
+                wire_b = P * down_b + n_tx * up_b
+            elif scheduled:
+                for pr in _schedule_probe_rounds(link):
+                    _exact_round_bytes(link, spec, P, pr)
+                wire_b = link.traced_round_bytes(spec, P, r)
+            else:
+                wire_b = jnp.asarray(
+                    _exact_round_bytes(link, spec, P), jnp.int32
+                )
+            metrics = {
+                "local_loss": mean_loss,
+                # logical accounting: P clients x one model copy per leg,
+                # regardless of how the copies are laid out over the mesh
                 "wire_bytes": wire_b,
             }
             if faults is not None:

@@ -30,6 +30,36 @@ row's scale-term cotangent back to its leaf's scalar (or stacked per-layer)
 alpha. The fused quantizer in the middle carries its own custom VJP
 (``kernels.dispatch.quant_det_plane``), so one forward launch and one
 backward launch cover the whole tree.
+
+Shard-aware planes (2D federated mesh / FSDP)
+=============================================
+Packing the plane concatenates leaves, which under GSPMD would reshard
+FSDP-sharded masters through one device. The shard-aware layout instead
+builds the plane **per device over the local leaf shards**: inside a
+``shard_map`` body the leaves ARE the local shards, so ``make_plane_spec``
+on the body's tree is already the per-device plane — same segment/alpha
+structure, row math over local shapes. Two structural facts make this
+exact:
+
+* the FSDP rules (``sharding.policy.fed_param_specs``) only shard the
+  last-two dims, so a stacked scanned weight keeps its leading layer axis
+  whole and **alpha-segment granularity is preserved per shard** (every
+  local row still maps to exactly one clipping scalar; alphas replicate);
+* per-shard zero-padding to whole LANE rows is layout-only — consumers
+  slice rows back to exact local element counts, and byte accounting
+  charges logical payload bytes (``core.wire`` — built from the same local
+  shapes inside the shard), never pad (:func:`plane_pad_elems` exposes the
+  pad for the tests that pin this).
+
+``make_local_plane_spec`` builds the same per-device spec OUTSIDE a manual
+region (trace-time, from global shapes + PartitionSpecs) for tests and
+byte math; :func:`quantize_det_sharded` is the one-launch-per-device
+whole-tree fake-quant under explicit shardings — deterministic
+quantization is elementwise in ``(x, alpha)``, so its values (and STE
+gradients, with alpha cotangents psum-reduced across shards by the
+``shard_map`` transpose) match the unsharded plane bitwise. The per-leaf
+loop (``launch.steps.quantize_params_once_per_leaf``) survives only as
+the parity reference.
 """
 from __future__ import annotations
 
@@ -217,6 +247,134 @@ def leaf_from_tiles(vals2: Array, spec: PlaneSpec, qi: int,
     leaf = flat.reshape(spec.q_shapes[qi])
     dtype = dtype if dtype is not None else spec.q_dtypes[qi]
     return leaf if leaf.dtype == dtype else leaf.astype(dtype)
+
+
+def plane_pad_elems(spec: PlaneSpec) -> int:
+    """Zero-pad elements the tiled layout adds (``n_rows * LANE`` minus the
+    real elements). Layout-only: consumers slice rows back to exact counts
+    and byte accounting never charges it — the shard-aware tests pin both."""
+    return spec.n_rows * LANE - sum(spec.seg_sizes)
+
+
+def _partition_spec(s):
+    """NamedSharding | PartitionSpec -> PartitionSpec."""
+    return s.spec if hasattr(s, "spec") else s
+
+
+def local_shape(shape: tuple[int, ...], spec, mesh,
+                name: str = "leaf") -> tuple[int, ...]:
+    """The per-device shard shape of a ``shape``-d array under ``spec``."""
+    spec = _partition_spec(spec)
+    out = list(shape)
+    for d, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if out[d] % size:
+            raise ValueError(
+                f"{name}: dim {d} of {tuple(shape)} is not divisible by "
+                f"mesh axes {axes} (size {size}) — fit the spec first "
+                "(sharding.policy.fed_param_specs drops non-dividing axes)"
+            )
+        out[d] //= size
+    return tuple(out)
+
+
+def make_local_plane_spec(params: PyTree, specs: PyTree, mesh) -> PlaneSpec:
+    """The per-DEVICE plane a ``shard_map`` body over ``specs`` builds.
+
+    Trace-time twin of calling :func:`make_plane_spec` INSIDE the manual
+    region: same segment ordering and alpha pairing, row/byte math over the
+    local shard shapes. Used by tests (local-vs-global reconstruction) and
+    launch-count/byte accounting outside a shard; the hot paths simply call
+    ``make_plane_spec`` on the body's local tree.
+
+    Validates the two invariants the shard-aware layout rests on, with the
+    failure named at the offending leaf: a stacked scanned weight's leading
+    (layer) axis must stay unsharded (else local rows would straddle alpha
+    segments), and every clipping leaf must be replicated (each device
+    needs the full alpha vector for its rows).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    spec_leaves = [
+        _partition_spec(s) for s in treedef.flatten_up_to(specs)
+    ]
+    gspec = make_plane_spec(params)
+    for qi, slot in enumerate(gspec.q_slots):
+        name = gspec.q_names[qi]
+        if gspec.leaf_segs[qi] > 1:
+            sp = spec_leaves[slot]
+            if len(sp) > 0 and sp[0] is not None:
+                raise ValueError(
+                    f"{name}: stacked scanned weight has its leading layer "
+                    f"axis sharded ({sp}) — the plane pairs layer slabs "
+                    "with per-layer alphas, so shard the trailing dims "
+                    "only (sharding.policy.fed_param_specs does)"
+                )
+        a_sp = spec_leaves[gspec.alpha_slots[qi]]
+        if any(ax is not None for ax in a_sp):
+            raise ValueError(
+                f"{name}{qat.QA_SUFFIX}: clipping values must be "
+                f"replicated, got {a_sp} — every device's plane rows "
+                "need the full alpha vector"
+            )
+    locals_ = [
+        jax.ShapeDtypeStruct(
+            local_shape(leaf.shape, sp, mesh, name=".".join(
+                qat._key_name(p) for p in path)),
+            leaf.dtype,
+        )
+        for (path, leaf), sp in zip(flat, spec_leaves)
+    ]
+    return make_plane_spec(jax.tree_util.tree_unflatten(treedef, locals_))
+
+
+def quantize_det_sharded(params: PyTree, shardings: PyTree,
+                         fmt: FP8Format = E4M3, out_dtype: Any = None,
+                         mesh=None) -> PyTree:
+    """:func:`quantize_det` under explicit shardings: ONE launch per device.
+
+    The body runs the plane quantize on each device's LOCAL shards — the
+    spec built inside the manual region IS the shard-aware plane, so no
+    cross-shard resharding occurs and the launch count stays O(1) per
+    device regardless of tree size. Deterministic quantization is
+    elementwise in ``(x, alpha)``, so values match the unsharded plane
+    bitwise; the ``shard_map`` transpose psums per-shard alpha cotangents
+    back to the replicated scalars, so STE gradients match too.
+
+    ``shardings`` is a pytree of ``NamedSharding`` (mesh inferred) or
+    ``PartitionSpec`` (pass ``mesh=``) matching ``params``; fully
+    replicated trees fall back to the plain plane quantize.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    treedef = jax.tree_util.tree_structure(params)
+    sh_leaves = treedef.flatten_up_to(shardings)
+    if mesh is None:
+        mesh = next(
+            (s.mesh for s in sh_leaves if hasattr(s, "mesh")), None
+        )
+        if mesh is None:
+            raise ValueError(
+                "quantize_det_sharded: PartitionSpec shardings need an "
+                "explicit mesh="
+            )
+    spec_leaves = [_partition_spec(s) for s in sh_leaves]
+    specs = jax.tree_util.tree_unflatten(treedef, spec_leaves)
+    # validates alpha replication / stacked leading axis, with names
+    make_local_plane_spec(params, specs, mesh)
+    if all(ax is None for sp in spec_leaves for ax in sp):
+        # fully replicated: the manual region would only add noise
+        return quantize_det(params, fmt=fmt, out_dtype=out_dtype)
+
+    def body(p):
+        return quantize_det(p, fmt=fmt, out_dtype=out_dtype)
+
+    return shard_map(
+        body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+        check_rep=False,
+    )(params)
 
 
 def quantize_det(params: PyTree, fmt: FP8Format = E4M3,

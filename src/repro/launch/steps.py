@@ -11,8 +11,11 @@
 opt_level >= 1 pre-quantizes the weight tree once per step on the tiled
 parameter plane (``core.plane``): one fused Q_det launch for the whole
 tree, forward and VJP replay, instead of one per tensor. FSDP-sharded
-lowerings (``grad_shardings`` set) keep the per-leaf variant so the
-quantize stays elementwise on the shards.
+lowerings (``grad_shardings`` set) use the SHARD-AWARE plane
+(:func:`quantize_params_once_sharded`): a ``shard_map`` whose body builds
+the per-device plane over the local leaf shards — still one launch per
+device, no cross-shard resharding. The old per-leaf loop survives only as
+the parity reference (:func:`quantize_params_once_per_leaf`).
 """
 from __future__ import annotations
 
@@ -67,10 +70,10 @@ def quantize_params_once(params: PyTree, qcfg: QATConfig) -> tuple[PyTree, QATCo
 
     Sharding caveat: packing the plane concatenates leaves, which under
     GSPMD reshards FSDP-sharded masters; ``make_train_step`` therefore
-    selects the per-leaf variant (elementwise on the shards, no cross-shard
-    movement) whenever it lowers with explicit ``grad_shardings``, and the
-    one-launch plane everywhere else (simulator, host meshes, replicated
-    params).
+    selects :func:`quantize_params_once_sharded` (the shard-aware plane —
+    one launch per device over the local shards) whenever it lowers with
+    explicit ``grad_shardings``, and this one-launch global plane
+    everywhere else (simulator, host meshes, replicated params).
     """
     if not (qcfg.enabled and qcfg.quantize_weights):
         return params, qcfg
@@ -82,14 +85,35 @@ def quantize_params_once(params: PyTree, qcfg: QATConfig) -> tuple[PyTree, QATCo
     return qparams, qcfg.replace(quantize_weights=False)
 
 
+def quantize_params_once_sharded(
+    params: PyTree, qcfg: QATConfig, shardings: PyTree
+) -> tuple[PyTree, QATConfig]:
+    """Shard-aware variant of :func:`quantize_params_once` for FSDP-sharded
+    masters: a ``shard_map`` over the shardings' mesh whose body runs the
+    plane quantize on each device's LOCAL shards (``core.plane``'s
+    shard-aware layout) — ONE fused launch per device, zero cross-shard
+    traffic, and the ``shard_map`` transpose psums per-shard alpha
+    cotangents so STE gradients match the replicated plane. This is the
+    hot path ``make_train_step`` lowers when ``grad_shardings`` is set;
+    the per-leaf loop it retires stays as the parity reference."""
+    if not (qcfg.enabled and qcfg.quantize_weights):
+        return params, qcfg
+    from ..core import plane
+    from ..models.common import COMPUTE_DTYPE
+
+    qparams = plane.quantize_det_sharded(params, shardings, fmt=qcfg.fmt,
+                                         out_dtype=COMPUTE_DTYPE)
+    return qparams, qcfg.replace(quantize_weights=False)
+
+
 def quantize_params_once_per_leaf(
     params: PyTree, qcfg: QATConfig
 ) -> tuple[PyTree, QATConfig]:
-    """Per-leaf variant of :func:`quantize_params_once` — O(n_tensors)
-    quantize chains, but purely elementwise per leaf, so FSDP-sharded
-    masters quantize on their shards with zero cross-shard traffic. Used
-    by ``make_train_step`` when lowering with ``grad_shardings`` and as
-    the grad-parity / launch-collapse benchmark reference."""
+    """Per-leaf PARITY REFERENCE for :func:`quantize_params_once` /
+    :func:`quantize_params_once_sharded` — O(n_tensors) quantize chains,
+    purely elementwise per leaf. Retired from the FSDP hot path (the
+    shard-aware plane replaced it); kept for grad-parity tests and the
+    launch-collapse benchmarks."""
     if not (qcfg.enabled and qcfg.quantize_weights):
         return params, qcfg
     import jax.numpy as _jnp
@@ -174,11 +198,15 @@ def make_train_step(model: Model, opt: Optimizer, qcfg: QATConfig,
         )
         return loss / accum, jax.tree.map(lambda g: g / accum, grads)
 
-    # sharded (FSDP) lowering quantizes per leaf — elementwise on the
-    # shards; the one-launch plane would reshard the concatenated f32
-    # masters under GSPMD (see quantize_params_once docstring)
-    quantize_once = (quantize_params_once_per_leaf
-                     if grad_shardings is not None else quantize_params_once)
+    # sharded (FSDP) lowering quantizes on the SHARD-AWARE plane: one
+    # launch per device over the local shards — the global plane would
+    # reshard the concatenated f32 masters under GSPMD (see
+    # quantize_params_once docstring)
+    if grad_shardings is not None:
+        quantize_once = functools.partial(quantize_params_once_sharded,
+                                          shardings=grad_shardings)
+    else:
+        quantize_once = quantize_params_once
 
     def train_step(params, opt_state, batch, step):
         if opt_level >= 1:

@@ -111,6 +111,50 @@ def batch_spec(name: str, shape: tuple, *, dp: tuple[str, ...]) -> P:
     return P(dp, *([None] * (len(shape) - 1)))
 
 
+def fit_spec(mesh: Mesh, spec: P, shape: tuple) -> P:
+    """Drop axes that don't divide the dim evenly (jit rejects ragged
+    explicit shardings). Vocabs are padded in configs so this is rare."""
+    fixed = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        fixed.append(ax if shape[d] % size == 0 else None)
+    return P(*fixed)
+
+
+def fed_param_specs(tree: PyTree, mesh: Mesh, axis: str = "fsdp") -> PyTree:
+    """FSDP-only PartitionSpecs for the 2D federated mesh (no tensor
+    parallelism): the per-leaf rules of :func:`param_spec` with the model
+    axis named ``axis``, fitted to ``mesh`` (non-dividing dims fall back to
+    replicated, clip scalars / 1-D leaves are always replicated). Leaves
+    are ``PartitionSpec`` objects — consumed directly as ``shard_map``
+    in/out specs and via ``NamedSharding(mesh, spec)`` constraints.
+
+    Stacked scanned weights keep their leading layer axis unsharded (the
+    rules only ever shard the last two dims), so the shard-aware plane
+    (``core.plane``) preserves alpha-segment granularity per shard."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [
+        fit_spec(
+            mesh,
+            param_spec(_leaf_name(p), l.shape, fsdp=axis, tp=None),
+            l.shape,
+        )
+        for p, l in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fed_param_shardings(tree: PyTree, mesh: Mesh,
+                        axis: str = "fsdp") -> PyTree:
+    """:func:`fed_param_specs` as NamedShardings (jit in/out shardings)."""
+    specs = fed_param_specs(tree, mesh, axis)
+    return jax.tree.map(lambda _, s: NamedSharding(mesh, s), tree, specs)
+
+
 class ShardingPolicy:
     """Binds the rules above to a mesh; produces NamedShardings for trees."""
 
@@ -126,17 +170,7 @@ class ShardingPolicy:
     # --- tree -> NamedSharding trees ------------------------------------
 
     def _fit(self, spec: P, shape: tuple) -> P:
-        """Drop axes that don't divide the dim evenly (jit rejects ragged
-        explicit shardings). Vocabs are padded in configs so this is rare."""
-        fixed = []
-        for d, ax in enumerate(spec):
-            if ax is None:
-                fixed.append(None)
-                continue
-            axes = ax if isinstance(ax, tuple) else (ax,)
-            size = int(np.prod([self.mesh.shape[a] for a in axes]))
-            fixed.append(ax if shape[d] % size == 0 else None)
-        return P(*fixed)
+        return fit_spec(self.mesh, spec, shape)
 
     def params(self, tree: PyTree) -> PyTree:
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

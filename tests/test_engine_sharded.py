@@ -405,6 +405,318 @@ def test_sharded_fault_round_matches_chunked(virtual_devices):
 
 
 # ---------------------------------------------------------------------------
+# 2D federated mesh (clients x fsdp, ISSUE 7): every client's training step
+# FSDP-sharded over its mesh row, wire planes per device over local shards.
+# Parity bar vs the local (VmapExecutor) round under the SAME key: params
+# within rtol 2e-5 (GSPMD reassociates FSDP reductions — bitwise is the 1D
+# bar above, not this one), wire bytes EXACTLY equal, fault metrics
+# integer-identical. Both row-major shapes of the 8-device pool run.
+# ---------------------------------------------------------------------------
+
+
+def _fed_mesh(shape):
+    from repro.launch.mesh import make_fed_mesh
+
+    return make_fed_mesh(*shape)
+
+
+def _max_rel(got, ref):
+    rel = 0.0
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        rel = max(rel, float(np.max(np.abs(a - b)))
+                  / max(1e-9, float(np.max(np.abs(b)))))
+    return rel
+
+
+_FED2D_SHAPES = [(2, 4), (4, 2)]
+
+
+@pytest.mark.parametrize("shape", _FED2D_SHAPES,
+                         ids=[f"{c}x{f}" for c, f in _FED2D_SHAPES])
+def test_fed2d_round_matches_local(virtual_devices, shape):
+    """The 2D round vs the full local round, same key, across the link
+    variants that exercise distinct wire paths (det codec objects, the
+    (fmt, mode) shim, FP32, and a stateful server optimizer): params to
+    rtol 2e-5, traced == static wire bytes, and the two EXACTLY equal."""
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    mesh = _fed_mesh(shape)
+    for codec_kw in (
+        dict(down_codec="e4m3_det", up_codec="e4m3_det"),
+        dict(comm_mode="det"),
+        dict(comm_mode="none"),
+        dict(comm_mode="det", aggregator="fedadam", server_lr=0.05),
+    ):
+        base = dict(n_clients=8, participation=0.75, local_steps=2,
+                    batch_size=8, qat=QATConfig(), **codec_kw)
+        full = RoundEngine(loss, opt, FedConfig(**base),
+                           executor=VmapExecutor())
+        eng = RoundEngine(loss, opt,
+                          FedConfig(mesh=mesh, model_axis="fsdp", **base))
+        assert eng.executor.model_axis == "fsdp"
+        key = jax.random.PRNGKey(7)
+        s_full, m_full = jax.jit(full.round_fn)(full.init(params), *data, key)
+        s, m = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+        rel = _max_rel(s.params, s_full.params)
+        assert rel < 2e-5, (codec_kw, shape, rel)
+        assert int(m["wire_bytes"]) == int(m_full["wire_bytes"]), codec_kw
+        assert int(m["wire_bytes"]) == eng.round_bytes(params), codec_kw
+        np.testing.assert_allclose(np.asarray(m["local_loss"]),
+                                   np.asarray(m_full["local_loss"]),
+                                   rtol=1e-4)
+
+
+def test_fed2d_stateful_aggregator_threads_state(virtual_devices):
+    """Two FedAvgM rounds on the 2D mesh: the sharded server-momentum tail
+    must thread state across rounds and track the local engine."""
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    base = dict(n_clients=8, participation=0.75, local_steps=2, batch_size=8,
+                comm_mode="det", qat=QATConfig(), aggregator="fedavgm",
+                server_lr=1.0, server_momentum=0.9)
+    full = RoundEngine(loss, opt, FedConfig(**base), executor=VmapExecutor())
+    eng = RoundEngine(loss, opt, FedConfig(mesh=_fed_mesh((2, 4)),
+                                           model_axis="fsdp", **base))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    r1, _ = jax.jit(full.round_fn)(full.init(params), *data, k1)
+    s1, _ = jax.jit(eng.round_fn)(eng.init(params), *data, k1)
+    r2, _ = jax.jit(full.round_fn)(r1, *data, k2)
+    s2, _ = jax.jit(eng.round_fn)(s1, *data, k2)
+    assert _max_rel(s2.params, r2.params) < 2e-5
+    assert _max_rel(s2.opt, r2.opt) < 2e-5
+    assert any(bool(jnp.any(x != 0)) for x in jax.tree.leaves(s2.opt))
+
+
+def test_fed2d_scheduled_codec_crosses_phase(virtual_devices):
+    """A CodecSchedule on the 2D mesh: per-round bytes exactly match the
+    local engine through the FP8 -> FP4 phase boundary (the payload halves)
+    and params stay within the parity bar every round."""
+    from repro.core.codec import CodecSchedule, get_codec
+
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    sched = CodecSchedule((get_codec("e4m3_det"), get_codec("fp4_det")), (2,))
+    base = dict(n_clients=8, participation=0.75, local_steps=2, batch_size=8,
+                qat=QATConfig(), codec_schedule=sched)
+    full = RoundEngine(loss, opt, FedConfig(**base), executor=VmapExecutor())
+    eng = RoundEngine(loss, opt, FedConfig(mesh=_fed_mesh((2, 4)),
+                                           model_axis="fsdp", **base))
+    rf_full, rf_2d = jax.jit(full.round_fn), jax.jit(eng.round_fn)
+    sf, sg = full.init(params), eng.init(params)
+    bytes_seen = []
+    for rnd in range(3):
+        k = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
+        sf, mf = rf_full(sf, *data, k)
+        sg, mg = rf_2d(sg, *data, k)
+        assert int(mf["wire_bytes"]) == int(mg["wire_bytes"]), rnd
+        assert _max_rel(sg.params, sf.params) < 2e-5, rnd
+        bytes_seen.append(int(mg["wire_bytes"]))
+    # the schedule actually switched: FP4 rounds move fewer bytes
+    assert bytes_seen[0] == bytes_seen[1] > bytes_seen[2], bytes_seen
+
+
+def test_fed2d_fault_round_matches_local(virtual_devices):
+    """Active faults on the 2D mesh: the fault draw is pinned replicated
+    (the legacy threefry changes bits when GSPMD partitions it), so every
+    fault metric must be integer-identical to the local round and partial
+    byte accounting must hold."""
+    from repro.core.faults import FaultModel
+
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    base = dict(n_clients=8, participation=0.75, local_steps=2, batch_size=8,
+                comm_mode="det", qat=QATConfig(),
+                faults=FaultModel(dropout=0.5), min_quorum=2)
+    full = RoundEngine(loss, opt, FedConfig(**base), executor=VmapExecutor())
+    eng = RoundEngine(loss, opt, FedConfig(mesh=_fed_mesh((2, 4)),
+                                           model_axis="fsdp", **base))
+    for seed in (0, 7):
+        key = jax.random.PRNGKey(seed)
+        sf, mf = jax.jit(full.round_fn)(full.init(params), *data, key)
+        sg, mg = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+        for name in ("n_alive", "n_transmitted", "quorum_met", "round_ok",
+                     "wire_bytes"):
+            assert int(mf[name]) == int(mg[name]), (name, seed)
+        np.testing.assert_array_equal(np.asarray(mf["round_time"]),
+                                      np.asarray(mg["round_time"]))
+        assert _max_rel(sg.params, sf.params) < 2e-5, seed
+        n_tx = int(mg["n_transmitted"])
+        assert int(mg["wire_bytes"]) == eng.partial_round_bytes(n_tx, params)
+
+
+def test_fed2d_server_opt_runs_replicated_tail(virtual_devices):
+    """The UQ+ aggregator does cross-element clip-grid searches, so its
+    tail runs replicated (not model-sharded) — and must still track the
+    local engine within the parity bar with exactly equal bytes."""
+    from repro.core.server_opt import ServerOptConfig
+
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    base = dict(n_clients=8, participation=0.75, local_steps=2, batch_size=8,
+                comm_mode="det", qat=QATConfig(), aggregator="server_opt",
+                server_opt=ServerOptConfig(enabled=True, gd_steps=2))
+    full = RoundEngine(loss, opt, FedConfig(**base), executor=VmapExecutor())
+    eng = RoundEngine(loss, opt, FedConfig(mesh=_fed_mesh((2, 4)),
+                                           model_axis="fsdp", **base))
+    key = jax.random.PRNGKey(7)
+    sf, mf = jax.jit(full.round_fn)(full.init(params), *data, key)
+    sg, mg = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+    assert _max_rel(sg.params, sf.params) < 2e-5
+    assert int(mf["wire_bytes"]) == int(mg["wire_bytes"])
+
+
+@pytest.mark.parametrize("shape", _FED2D_SHAPES,
+                         ids=[f"{c}x{f}" for c, f in _FED2D_SHAPES])
+def test_fed2d_collective_moves_uint8_along_clients(virtual_devices, shape):
+    """The lowered 2D round has EXACTLY one u8 all-gather and its replica
+    groups run along the client axis only: each group holds the C devices
+    at one fsdp coordinate (stride-F device ids), so FSDP shards never
+    cross the wire."""
+    params, loss, apply, opt, data, _ = _mlp_setup(k=8)
+    C, F = shape
+    eng = RoundEngine(loss, opt, FedConfig(
+        n_clients=8, participation=1.0, local_steps=1, batch_size=8,
+        comm_mode="rand", qat=QATConfig(), mesh=_fed_mesh(shape),
+        model_axis="fsdp"))
+    txt = jax.jit(eng.round_fn).lower(
+        eng.init(params), *data, jax.random.PRNGKey(0)
+    ).compile().as_text()
+    g = [ln for ln in txt.splitlines()
+         if re.search(r"=\s*\S*\s*all-gather(-start)?\(", ln)]
+    u8 = [ln for ln in g if re.search(r"=\s*u8\[", ln)]
+    assert len(u8) == 1, f"expected exactly one u8 all-gather: {u8}"
+    groups_txt = re.search(r"replica_groups=\{\{(.*?)\}\}", u8[0]).group(1)
+    groups = {frozenset(int(d) for d in grp.split(","))
+              for grp in groups_txt.split("},{")}
+    want = {frozenset(c * F + f for c in range(C)) for f in range(F)}
+    assert groups == want, (groups, want)
+
+
+def test_fed2d_quantize_det_sharded_matches_plane(virtual_devices):
+    """quantize_det_sharded under the fed FSDP specs on a real scanned
+    tree: values bitwise equal to the replicated plane (Q_det is
+    elementwise), STE grads equal to accumulation noise (the shard_map
+    transpose psums per-shard alpha cotangents)."""
+    from repro import configs
+    from repro.core import plane
+    from repro.models.registry import get_model
+    from repro.sharding.policy import fed_param_shardings
+
+    cfg = configs.reduced(configs.get("tinyllama_1_1b"))
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    sh = fed_param_shardings(params, _fed_mesh((2, 4)), axis="fsdp")
+
+    got = jax.jit(lambda p: plane.quantize_det_sharded(p, sh))(params)
+    want = jax.jit(plane.quantize_det)(params)
+    _assert_trees_equal(got, want, "sharded plane values diverged")
+
+    def sq_loss(quant):
+        return lambda p: sum(
+            jnp.sum(l.astype(jnp.float32) ** 2)
+            for l in jax.tree.leaves(quant(p)))
+
+    g_sh = jax.jit(jax.grad(sq_loss(
+        lambda p: plane.quantize_det_sharded(p, sh))))(params)
+    g_ref = jax.jit(jax.grad(sq_loss(plane.quantize_det)))(params)
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(g_sh)[0],
+        jax.tree_util.tree_flatten_with_path(g_ref)[0],
+    ):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        scale = max(float(np.max(np.abs(b))), 1e-6)
+        assert float(np.max(np.abs(a - b))) / scale <= 1e-5, path
+
+
+def test_fed2d_quantize_once_sharded_single_launch(virtual_devices,
+                                                   monkeypatch):
+    """The FSDP quantize-once path stays O(1) kernel launches per device:
+    tracing it enters the plane quantizer exactly once (the shard_map body
+    traces once), never once per leaf."""
+    from repro import configs
+    from repro.kernels import dispatch
+    from repro.launch.steps import quantize_params_once_sharded
+    from repro.models.registry import get_model
+    from repro.sharding.policy import fed_param_shardings
+
+    cfg = configs.reduced(configs.get("tinyllama_1_1b"))
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    sh = fed_param_shardings(params, _fed_mesh((2, 4)), axis="fsdp")
+    calls = []
+    orig = dispatch.quant_det_plane
+    monkeypatch.setattr(
+        dispatch, "quant_det_plane",
+        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    jax.make_jaxpr(
+        lambda p: quantize_params_once_sharded(p, QATConfig(), sh)[0]
+    )(params)
+    assert len(calls) == 1, f"{len(calls)} plane launches, expected 1"
+
+
+def test_fed2d_aggregator_state_specs(virtual_devices):
+    """State-spec derivation for the sharded server tail: momentum trees
+    mirror the param specs, stateless aggregators carry (), and a custom
+    stateful aggregator fails loudly instead of silently replicating."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.engine import make_aggregator
+    from repro.launch.steps import aggregator_state_specs
+
+    specs = {"w": P(None, "fsdp"), "w_qa": P()}
+    assert aggregator_state_specs(make_aggregator("mean"), specs) == ()
+    assert aggregator_state_specs(make_aggregator("fedavgm"), specs) == specs
+    assert aggregator_state_specs(make_aggregator("fedadam"), specs) == {
+        "m": specs, "v": specs}
+
+    class Custom:
+        def init(self, params):
+            return jax.tree.map(jnp.zeros_like, params)
+
+    with pytest.raises(ValueError, match="state_specs"):
+        aggregator_state_specs(Custom(), specs)
+
+
+def test_fed2d_config_validation(virtual_devices):
+    """Every invalid 2D wiring dies eagerly in FedConfig with a one-line
+    actionable error, not as a shard_map shape mismatch mid-trace."""
+    mesh2d = _fed_mesh((4, 2))
+    with pytest.raises(ValueError, match="make_fed_mesh"):
+        FedConfig(n_clients=8, model_axis="fsdp")
+    with pytest.raises(ValueError, match="both"):
+        FedConfig(n_clients=8, mesh=mesh2d, model_axis="clients")
+    with pytest.raises(ValueError, match="not on the given mesh"):
+        FedConfig(n_clients=8, mesh=_client_mesh(8, 8), model_axis="fsdp")
+    with pytest.raises(ValueError, match="chunk"):
+        FedConfig(n_clients=8, mesh=mesh2d, model_axis="fsdp", chunk=2)
+    with pytest.raises(ValueError, match="padding clients"):
+        # 4 cohort rows but only 3 clients per round
+        FedConfig(n_clients=8, participation=0.375, mesh=mesh2d,
+                  model_axis="fsdp")
+    with pytest.raises(ValueError, match="model_axis"):
+        FedConfig(n_clients=8, mesh=mesh2d)  # 2D mesh, axis never named
+
+
+def test_fed2d_executor_validation(virtual_devices):
+    mesh2d = _fed_mesh((2, 4))
+    with pytest.raises(ValueError, match="both"):
+        ShardedExecutor(mesh2d, "clients", model_axis="clients")
+    with pytest.raises(ValueError, match="'tp'"):
+        ShardedExecutor(mesh2d, "clients", model_axis="tp")
+    with pytest.raises(ValueError, match="chunk"):
+        ShardedExecutor(mesh2d, "clients", chunk=2, model_axis="fsdp")
+
+
+def test_make_fed_mesh_validation(virtual_devices):
+    from repro.launch.mesh import make_fed_mesh
+
+    with pytest.raises(ValueError, match="positive"):
+        make_fed_mesh(0, 4)
+    with pytest.raises(ValueError, match="device"):
+        make_fed_mesh(3, 3)   # needs 9 of 8
+    with pytest.raises(ValueError, match="divides"):
+        make_fed_mesh(3, 2)   # 6 of 8: idles 2
+    mesh = make_fed_mesh(2, 2, client_axis="rows", model_axis="cols")
+    assert mesh.axis_names == ("rows", "cols")
+    assert dict(mesh.shape) == {"rows": 2, "cols": 2}
+
+
+# ---------------------------------------------------------------------------
 # Dryrun-style subprocess lane: proves parity from a single-device run
 # ---------------------------------------------------------------------------
 

@@ -320,3 +320,183 @@ def test_server_opt_launch_count_independent_of_n_leaves(monkeypatch):
     assert c_small == c_big, (c_small, c_big)
     # scan bodies trace once: a handful of entries, never O(n_leaves x steps)
     assert sum(c_big.values()) <= 6, c_big
+
+
+# ---------------------------------------------------------------------------
+# shard-aware plane (2D federated mesh): local specs, no devices needed.
+# These are the hypothesis-less twins of the property suite in
+# test_properties.py — same invariants on fixed trees, every lane.
+# ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.sharding.policy import fed_param_specs  # noqa: E402
+
+
+class _FakeMesh:
+    """Duck-typed mesh: the layout paths only ever read ``mesh.shape``."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def _shard_leaf(leaf, spec, mesh, index):
+    """numpy slice of ``leaf`` at mesh position ``index`` (axis -> coord)."""
+    out = np.asarray(leaf)
+    for d, ax in enumerate(plane._partition_spec(spec)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        k = out.shape[d] // size
+        c = 0
+        for a in axes:
+            c = c * mesh.shape[a] + index[a]
+        out = np.take(out, range(c * k, (c + 1) * k), axis=d)
+    return jnp.asarray(out)
+
+
+def _shard_tree(params, specs, mesh, index):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    spec_leaves = treedef.flatten_up_to(specs)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [_shard_leaf(l, s, mesh, index)
+         for (_, l), s in zip(flat, spec_leaves)],
+    )
+
+
+def test_local_plane_spec_matches_shard_layout(scanned_params):
+    """The trace-time local spec IS the spec a shard_map body would build:
+    identical to make_plane_spec on an actually-sliced shard tree."""
+    mesh = _FakeMesh(fsdp=4)
+    specs = fed_param_specs(scanned_params, mesh, axis="fsdp")
+    lspec = plane.make_local_plane_spec(scanned_params, specs, mesh)
+    shard0 = _shard_tree(scanned_params, specs, mesh, {"fsdp": 0})
+    want = plane.make_plane_spec(shard0)
+    assert lspec.n_rows == want.n_rows
+    assert lspec.seg_sizes == want.seg_sizes
+    assert lspec.q_shapes == want.q_shapes
+    np.testing.assert_array_equal(np.asarray(lspec.row_seg),
+                                  np.asarray(want.row_seg))
+
+
+def test_local_plane_preserves_alpha_segment_granularity(scanned_params):
+    """Sharding never merges or splits alpha segments: the local plane has
+    the SAME segment structure as the global one (row counts shrink, the
+    stacked per-layer alpha pairing does not), and every sharded leaf's
+    segment sizes shrink by exactly its shard factor."""
+    mesh = _FakeMesh(fsdp=4)
+    specs = fed_param_specs(scanned_params, mesh, axis="fsdp")
+    gspec = plane.make_plane_spec(scanned_params)
+    lspec = plane.make_local_plane_spec(scanned_params, specs, mesh)
+    assert lspec.n_seg == gspec.n_seg
+    assert lspec.leaf_segs == gspec.leaf_segs
+    assert lspec.q_names == gspec.q_names
+    sharded = 0
+    for qi in range(len(gspec.q_slots)):
+        factor = (int(np.prod(gspec.q_shapes[qi]))
+                  // int(np.prod(lspec.q_shapes[qi])))
+        sharded += factor > 1
+        s0, n = gspec.leaf_seg0[qi], gspec.leaf_segs[qi]
+        for si in range(s0, s0 + n):
+            assert lspec.seg_sizes[si] * factor == gspec.seg_sizes[si], (
+                gspec.q_names[qi], si)
+    assert sharded >= 2  # the policy actually sharded something
+
+
+def test_local_plane_reconstruction_gathers_to_global(scanned_params):
+    """Packing each device's local shard tree and unpacking per leaf, then
+    concatenating the shards along the sharded dim, reproduces the global
+    leaf bitwise — the invariant that makes per-device planes a valid
+    decomposition of the global plane."""
+    F = 4
+    mesh = _FakeMesh(fsdp=F)
+    specs = fed_param_specs(scanned_params, mesh, axis="fsdp")
+    lspec = plane.make_local_plane_spec(scanned_params, specs, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(scanned_params)
+    spec_leaves = treedef.flatten_up_to(specs)
+    planes = [
+        plane.pack_tiles(
+            _shard_tree(scanned_params, specs, mesh, {"fsdp": i}), lspec
+        )[0]
+        for i in range(F)
+    ]
+    for qi, slot in enumerate(lspec.q_slots):
+        sp = spec_leaves[slot]
+        dims = [d for d, ax in enumerate(sp) if ax is not None]
+        recon = [np.asarray(plane.leaf_from_tiles(planes[i], lspec, qi))
+                 for i in range(F)]
+        name = lspec.q_names[qi]
+        if dims:
+            full = np.concatenate(recon, axis=dims[0])
+        else:
+            full = recon[0]
+            for other in recon[1:]:  # replicated leaves identical everywhere
+                np.testing.assert_array_equal(other, full, err_msg=name)
+        np.testing.assert_array_equal(full, np.asarray(flat[slot][1]),
+                                      err_msg=name)
+
+
+def test_local_plane_pads_rows_with_zeros():
+    """plane_pad_elems counts exactly the layout's zero fill: every
+    segment's row block is zero past its real elements, and byte
+    accounting (seg_sizes) never charges the padding."""
+    mesh = _FakeMesh(fsdp=2)
+    tree = _stacked_tree()
+    specs = {"d": {"w": P(None, "fsdp"), "w_qa": P(), "b": P()},
+             "s": {"w": P(None, None, "fsdp"), "w_qa": P()}}
+    lspec = plane.make_local_plane_spec(tree, specs, mesh)
+    assert plane.plane_pad_elems(lspec) == (
+        lspec.n_rows * plane.LANE - sum(lspec.seg_sizes))
+    assert plane.plane_pad_elems(lspec) >= 0
+    x2 = np.asarray(plane.pack_tiles(
+        _shard_tree(tree, specs, mesh, {"fsdp": 1}), lspec)[0])
+    for si in range(lspec.n_seg):
+        r0, rows = lspec.seg_row0[si], lspec.seg_rows[si]
+        tail = x2[r0:r0 + rows].reshape(-1)[lspec.seg_sizes[si]:]
+        assert np.all(tail == 0.0), si
+
+
+def test_local_plane_spec_rejects_sharded_leading_layer_axis():
+    tree = _stacked_tree()
+    specs = {"d": {"w": P(), "w_qa": P(), "b": P()},
+             "s": {"w": P("fsdp"), "w_qa": P()}}
+    with pytest.raises(ValueError, match="leading layer"):
+        plane.make_local_plane_spec(tree, specs, _FakeMesh(fsdp=2))
+
+
+def test_local_plane_spec_rejects_sharded_alphas():
+    tree = _stacked_tree()
+    specs = {"d": {"w": P(None, "fsdp"), "w_qa": P("fsdp"), "b": P()},
+             "s": {"w": P(), "w_qa": P()}}
+    with pytest.raises(ValueError, match="replicated"):
+        plane.make_local_plane_spec(tree, specs, _FakeMesh(fsdp=2))
+
+
+def test_local_shape_and_divisibility():
+    mesh = _FakeMesh(clients=2, fsdp=4)
+    assert plane.local_shape((8, 16), P(None, "fsdp"), mesh) == (8, 4)
+    assert plane.local_shape((8, 16), P(("clients", "fsdp"),), mesh) == (1, 16)
+    with pytest.raises(ValueError, match="not divisible"):
+        plane.local_shape((8, 6), P(None, "fsdp"), mesh)
+
+
+def test_quantize_det_sharded_needs_mesh_for_plain_specs():
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    tree = {"w": w, "w_qa": alpha_like(w)}
+    with pytest.raises(ValueError, match="mesh"):
+        plane.quantize_det_sharded(tree, {"w": P(None, "fsdp"), "w_qa": P()})
+
+
+def test_quantize_det_sharded_replicated_fallback():
+    """Fully replicated specs take the plain-plane path — bitwise equal to
+    quantize_det, and no shard_map (so a duck-typed mesh suffices)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    tree = {"w": w, "w_qa": alpha_like(w), "b": jnp.zeros((16,))}
+    got = plane.quantize_det_sharded(
+        tree, {"w": P(), "w_qa": P(), "b": P()}, mesh=_FakeMesh(fsdp=4))
+    want = plane.quantize_det(tree)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -391,6 +391,137 @@ def test_packed_grid_membership_riders_untouched(tr, ci):
         assert dist.max() < 1e-5 * max(alpha, 1.0), name
 
 
+# ---------------------------------------------------------------------------
+# Shard-aware plane properties (core/plane.py): the per-device plane of a
+# 2D (clients, fsdp) mesh is a valid decomposition of the global plane for
+# ANY generated pytree/mesh-factor/spec choice. (Hypothesis-less twins on
+# fixed trees run in every lane from tests/test_plane.py.)
+# ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import plane  # noqa: E402
+from repro.sharding.policy import fit_spec  # noqa: E402
+
+
+class _FakeMesh:
+    """Duck-typed mesh: the layout-only paths just read ``mesh.shape``."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def _shard_leaf(leaf, spec, mesh, coord):
+    out = np.asarray(leaf)
+    for d, ax in enumerate(spec):
+        if ax is None:
+            continue
+        k = out.shape[d] // mesh.shape[ax]
+        out = np.take(out, range(coord * k, (coord + 1) * k), axis=d)
+    return jnp.asarray(out)
+
+
+@st.composite
+def plane_shardings(draw):
+    """(tree, specs, F): a wire tree plus fed-style PartitionSpecs — each
+    weight leaf sharded on ONE of its two trailing dims over an F-way fsdp
+    axis when divisible (fit_spec replicates the rest), alphas/riders
+    replicated. Ragged dims mean many draws mix sharded, replicated and
+    padded-row leaves in one plane."""
+    tree, seed = draw(wire_trees())
+    F = draw(st.sampled_from([2, 4]))
+    mesh = _FakeMesh(fsdp=F)
+    specs = {}
+    for name, leaf in tree.items():
+        if name.endswith("_qa") or leaf.ndim < 2:
+            specs[name] = P()
+            continue
+        lead = [None] * (leaf.ndim - 2)
+        proposed = (P(*lead, "fsdp", None) if draw(st.booleans())
+                    else P(*lead, None, "fsdp"))
+        specs[name] = fit_spec(mesh, proposed, leaf.shape)
+    return tree, specs, F
+
+
+@settings(max_examples=20, deadline=None)
+@given(ts=plane_shardings())
+def test_local_plane_rows_align_with_alpha_segments(ts):
+    """Property twin of the fixed-tree alignment test: for ANY tree/spec
+    draw, the local plane preserves the global segment structure (count,
+    per-leaf grouping, row->alpha mapping shape) and each leaf's segment
+    sizes shrink by exactly its shard factor."""
+    tree, specs, F = ts
+    mesh = _FakeMesh(fsdp=F)
+    gspec = plane.make_plane_spec(tree)
+    lspec = plane.make_local_plane_spec(tree, specs, mesh)
+    assert lspec.n_seg == gspec.n_seg
+    assert lspec.leaf_segs == gspec.leaf_segs
+    assert lspec.q_names == gspec.q_names
+    assert lspec.row_seg.shape == (lspec.n_rows,)
+    for qi in range(len(gspec.q_slots)):
+        factor = (int(np.prod(gspec.q_shapes[qi]))
+                  // int(np.prod(lspec.q_shapes[qi])))
+        assert factor in (1, F)
+        s0, n = gspec.leaf_seg0[qi], gspec.leaf_segs[qi]
+        for si in range(s0, s0 + n):
+            assert lspec.seg_sizes[si] * factor == gspec.seg_sizes[si]
+
+
+@settings(max_examples=15, deadline=None)
+@given(ts=plane_shardings(), coord=st.integers(0, 3))
+def test_local_plane_padded_rows_are_masked(ts, coord):
+    """Zero-pad accounting holds on every shard: plane_pad_elems counts
+    exactly the layout fill, and a packed shard plane is zero past each
+    segment's real elements (so padding can never leak into kernels or
+    byte math)."""
+    tree, specs, F = ts
+    mesh = _FakeMesh(fsdp=F)
+    lspec = plane.make_local_plane_spec(tree, specs, mesh)
+    pad = plane.plane_pad_elems(lspec)
+    assert pad == lspec.n_rows * plane.LANE - sum(lspec.seg_sizes)
+    assert pad >= 0
+    shard = {n: _shard_leaf(v, specs[n], mesh, coord % F)
+             for n, v in tree.items()}
+    x2 = np.asarray(plane.pack_tiles(shard, lspec)[0])
+    for si in range(lspec.n_seg):
+        r0, rows = lspec.seg_row0[si], lspec.seg_rows[si]
+        tail = x2[r0:r0 + rows].reshape(-1)[lspec.seg_sizes[si]:]
+        assert np.all(tail == 0.0), si
+
+
+@settings(max_examples=15, deadline=None)
+@given(ts=plane_shardings())
+def test_local_plane_reconstruction_equals_global_gather(ts):
+    """Pack each shard's local tree, unpack per leaf, concatenate along
+    the sharded dim: bitwise the global leaf, for ANY draw — the exact
+    statement that per-device planes decompose the global plane."""
+    tree, specs, F = ts
+    mesh = _FakeMesh(fsdp=F)
+    lspec = plane.make_local_plane_spec(tree, specs, mesh)
+    planes = [
+        plane.pack_tiles(
+            {n: _shard_leaf(v, specs[n], mesh, i) for n, v in tree.items()},
+            lspec,
+        )[0]
+        for i in range(F)
+    ]
+    for qi in range(len(lspec.q_slots)):
+        name = lspec.q_names[qi]
+        sp = specs[name]
+        dims = [d for d, ax in enumerate(sp) if ax is not None]
+        recon = [np.asarray(plane.leaf_from_tiles(planes[i], lspec, qi))
+                 for i in range(F)]
+        if dims:
+            full = np.concatenate(recon, axis=dims[0])
+        else:
+            full = recon[0]
+            for other in recon[1:]:
+                np.testing.assert_array_equal(other, full, err_msg=name)
+        np.testing.assert_array_equal(full, np.asarray(tree[name]),
+                                      err_msg=name)
+
+
 @settings(max_examples=15, deadline=None)
 @given(tr=wire_trees(), scale=st.floats(1e-4, 1e-2, allow_nan=False,
                                         width=32))
