@@ -35,6 +35,22 @@ CODECS = [
 ]
 ROUNDINGS = ["rand", "det"]
 
+# scaling-policy sweep (ISSUE 8), all on the paper's E4M3 rand wire:
+# 'current' is the trained-alpha baseline; delayed threads the rolling
+# amax history (margin 1 doubles every scale — one exact exponent bump);
+# frozen drops the downlink alpha columns. Accuracy must hold within
+# 0.3pt of current (acceptance bar) while the byte column shifts by the
+# policy's exact rider delta.
+SCALINGS = [
+    ("current", {}),
+    ("delayed:4", dict(down_scaling="delayed:4", up_scaling="delayed:4")),
+    ("delayed:16:1", dict(down_scaling="delayed:16:1",
+                          up_scaling="delayed:16:1")),
+    ("frozen_down", dict(down_scaling="frozen")),
+    ("frozen_down+delayed_up", dict(down_scaling="frozen",
+                                    up_scaling="delayed:4")),
+]
+
 
 def _legs(codec: str, rounding: str) -> dict:
     name = codec if rounding == "rand" else _det(codec)
@@ -93,8 +109,36 @@ def run(full: bool = False, out_rows=None):
             "comm_gain_vs_fp32": round(fp32_bytes / round_bytes, 3),
             "final_acc": round(h.best_accuracy(), 4),
         })
+    # --- scaling-policy cells: same pipeline, E4M3 wire, policy swept ---
+    cur_acc = None
+    for cell, kw in SCALINGS:
+        cfg = FedConfig(**base, comm_mode="rand", **kw)
+        opt = optim.sgd(0.1, weight_decay=1e-3, wd_mask=masks[0],
+                        trust_mask=masks[1])
+        sim = FedSim(params, loss, apply, opt, cfg, jnp.asarray(cx),
+                     jnp.asarray(cy), jnp.asarray(nk))
+        h = sim.run(rounds, jax.random.PRNGKey(3),
+                    eval_data=(xt, yt), eval_every=5)
+        round_bytes = metrics.round_bytes_for(params, cfg)
+        assert round_bytes == sim.bytes_per_round  # policy-aware accounting
+        acc = round(h.best_accuracy(), 4)
+        if cell == "current":
+            cur_acc = acc
+        rows.append({
+            "bench": "scaling",
+            "qat_fmt": "e4m3",
+            "comm_fmt": f"e4m3|rand|{cell}",
+            "down_codec": cfg.resolved_down_codec.tag,
+            "up_codec": cfg.resolved_up_codec.tag,
+            "scaling": cell,
+            "round_bytes": round_bytes,
+            "comm_gain_vs_fp32": round(fp32_bytes / round_bytes, 3),
+            "final_acc": acc,
+            "acc_delta_vs_current": round(acc - cur_acc, 4),
+        })
     with open("BENCH_formats.json", "w") as f:
-        json.dump([r for r in rows if r["bench"] == "format"], f, indent=1)
+        json.dump([r for r in rows if r["bench"] in ("format", "scaling")],
+                  f, indent=1)
         f.write("\n")
     return rows
 

@@ -234,6 +234,132 @@ def _codec_benches(rows):
          "fused unfold+dequantize from the half-size payload")
 
 
+def _scaling_benches(rows):
+    """Encode latency per scaling policy (ISSUE 8): the amax reduction
+    leaves the hot path.
+
+    Same 0.5M-element (R, LANE) plane as the wire_encode rows. The
+    ``current``-scaling recipe (TE's default before delayed scaling) must
+    run a standalone amax reduction whose result GATES the quantize
+    launch — two dependent passes over the plane. ``delayed`` quantizes
+    at the history's scales and gets the next round's amax as a byproduct
+    of the SAME fused launch (``quant_pack_amax_tiles``); ``frozen``
+    ships no scales at all, so it is the plain single launch. What is
+    structural on CPU: the dependent extra pass disappears — the
+    interpret-mode deltas understate a real backend, where the amax
+    reduction also serializes against the quantize kernel.
+    """
+    R = 512
+    x2 = jax.random.normal(jax.random.PRNGKey(9), (R, fp8_quant.WIRE_LANE),
+                           jnp.float32)
+    a2 = jnp.full((R, 1), 2.5, jnp.float32)
+    key2 = jnp.asarray([3, 4], jnp.uint32)
+    n = R * fp8_quant.WIRE_LANE
+
+    def enc_current(x2, key2):
+        # fresh amax: a full pass over the plane BEFORE the quantize
+        # launch can start (the scale is its operand)
+        a = jnp.maximum(jnp.max(jnp.abs(x2)), fp8._ALPHA_FLOOR)
+        return fp8_quant.quant_pack_tiles(
+            x2, jnp.full((R, 1), a, jnp.float32), key2, interpret=True)
+
+    def enc_delayed(x2, key2):
+        # scales come from the amax history; the NEXT round's amax falls
+        # out of the same fused quantize launch
+        return fp8_quant.quant_pack_amax_tiles(x2, a2, key2, interpret=True)
+
+    def enc_frozen(x2, key2):
+        # receiver already holds the scales: plain quantize, no amax
+        return fp8_quant.quant_pack_tiles(x2, a2, key2, interpret=True)
+
+    t_c = _time(enc_current, x2, key2)
+    t_d = _time(enc_delayed, x2, key2)
+    t_f = _time(enc_frozen, x2, key2)
+    _row(rows, "wire_encode_scaling_current_0p5M", t_c,
+         f"fresh amax pass + dependent quantize launch, {n} elems")
+    _row(rows, "wire_encode_scaling_delayed_0p5M", t_d,
+         f"ONE fused quantize+amax launch; {t_c / max(t_d, 1e-9):.2f}x "
+         "vs current")
+    _row(rows, "wire_encode_scaling_frozen_0p5M", t_f,
+         f"plain quantize, no amax, no alpha riders; "
+         f"{t_c / max(t_f, 1e-9):.2f}x vs current")
+    rows.append({
+        "bench": "kernel", "name": "wire_encode_delayed_speedup",
+        "us_per_call": round(t_c / max(t_d, 1e-9), 2),
+        "derived": "current/delayed encode wall-clock ratio "
+                   "(the killed standalone amax reduction)",
+    })
+
+
+def _scaling_fed2d_benches(rows):
+    """The same three policies with the plane FSDP-sharded over the 2x4
+    federated mesh (clients x fsdp): each device encodes its LOCAL row
+    block. ``current`` needs a cross-shard pmax of the fresh amax BEFORE
+    any device can quantize (a collective on the critical path);
+    ``delayed`` quantizes immediately at the replicated history scales
+    and pmaxes only the byproduct amax row — one scalar per segment,
+    OFF the critical path; ``frozen`` has no collective at all. jnp
+    backend inside shard_map (scheduling is the subject)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_fed_mesh
+
+    if len(jax.devices()) < 8:
+        rows.append({
+            "bench": "kernel", "name": "wire_encode_scaling_fed2d_skipped",
+            "us_per_call": 0.0,
+            "derived": f"needs 8 devices ({len(jax.devices())} present) — "
+                       "run this module as the entry point",
+        })
+        return
+
+    mesh = make_fed_mesh(2, 4)
+    R = 512
+    x2 = jax.random.normal(jax.random.PRNGKey(9), (R, fp8_quant.WIRE_LANE),
+                           jnp.float32)
+    x2 = jax.device_put(x2, NamedSharding(mesh, P("fsdp", None)))
+    a_loc = jnp.full((R // 4, 1), 2.5, jnp.float32)
+    key2 = jnp.asarray([3, 4], jnp.uint32)
+
+    def body_current(xl, k2):
+        # fresh GLOBAL amax: local reduce + pmax collective, and only
+        # then can the local quantize start
+        a = jax.lax.pmax(jnp.max(jnp.abs(xl)), "fsdp")
+        a = jnp.maximum(a, fp8._ALPHA_FLOOR)
+        return dispatch.quant_pack_tiles(
+            xl, jnp.full((xl.shape[0], 1), a, jnp.float32), k2)
+
+    def body_delayed(xl, k2):
+        codes, rowmax = dispatch.quant_pack_amax_tiles(xl, a_loc, k2)
+        # history row: pmax of the fused byproduct — one scalar, and the
+        # codes are already produced when it runs
+        amax = jax.lax.pmax(jnp.max(rowmax), "fsdp")
+        return codes, amax
+
+    def body_frozen(xl, k2):
+        return dispatch.quant_pack_tiles(xl, a_loc, k2)
+
+    def timed(body):
+        fn = jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P("fsdp", None), P()),
+            out_specs=(P("fsdp", None), P()) if body is body_delayed
+            else P("fsdp", None), check_rep=False,
+        ))
+        return _time(fn, x2, key2)
+
+    t_c = timed(body_current)
+    t_d = timed(body_delayed)
+    t_f = timed(body_frozen)
+    _row(rows, "wire_encode_scaling_fed2d_current_2x4", t_c,
+         "fresh amax: local reduce + pmax gate the sharded quantize")
+    _row(rows, "wire_encode_scaling_fed2d_delayed_2x4", t_d,
+         f"fused quantize+amax, pmax of one byproduct scalar; "
+         f"{t_c / max(t_d, 1e-9):.2f}x vs current")
+    _row(rows, "wire_encode_scaling_fed2d_frozen_2x4", t_f,
+         f"no collective at all; {t_c / max(t_f, 1e-9):.2f}x vs current")
+
+
 def _interleaved(fn_a, fn_b, *args, n=20, outer=8):
     """min-of-interleaved wall-clocks (us) so load drift cancels."""
     jax.block_until_ready(fn_a(*args))
@@ -555,6 +681,8 @@ def run(out_rows=None):
     _quantizer_benches(rows)
     _matmul_benches(rows)
     _codec_benches(rows)
+    _scaling_benches(rows)
+    _scaling_fed2d_benches(rows)
     _plane_benches(rows)
     _fed_executor_benches(rows)
     _fed_sharded_benches(rows)

@@ -16,6 +16,10 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*",
                     help="subset of: kernel table1 table2 fig2 format async")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: only the scaling-policy encode rows "
+                         "(1D + 2x4 fed2d) — seconds of wall-clock, verifies "
+                         "the bench harness stays runnable")
     args = ap.parse_args()
     which = set(args.only or ["kernel", "table1", "table2", "fig2"])
 
@@ -24,6 +28,14 @@ def main() -> None:
 
     t0 = time.time()
     rows = []
+    if args.quick:
+        kernel_bench._scaling_benches(rows)
+        kernel_bench._scaling_fed2d_benches(rows)
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"kernel/{r['name']},{r['us_per_call']},{r['derived']}")
+        print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     if "kernel" in which:
         kernel_bench.run(out_rows=rows)
     if "table1" in which:
@@ -57,6 +69,10 @@ def main() -> None:
         elif r["bench"] == "format":
             print(f"format/qat-{r['qat_fmt']}/comm-{r['comm_fmt']},,"
                   f"acc={r['final_acc']}")
+        elif r["bench"] == "scaling":
+            print(f"scaling/{r['scaling']},,"
+                  f"acc={r['final_acc']} bytes={r['round_bytes']} "
+                  f"dacc={r['acc_delta_vs_current']}")
         elif r["bench"] == "async":
             print(f"async/{r['dist']},,sync_s={r['sync_s']} "
                   f"async_s={r['async_s']} speedup={r['speedup']}x")

@@ -107,6 +107,20 @@ def main():
                          "= the paper's E4M3 wire. delta:* applies to the "
                          "uplink only (its reference is the round's "
                          "broadcast, which the downlink receiver lacks)")
+    ap.add_argument("--scaling", default=None,
+                    help="FP8 scaling policy for the model exchange: "
+                         "'current' (default; fresh per-tile scales, "
+                         "bit-identical to the no-knob wire), "
+                         "'delayed[:H[:M]]' (TE-style rolling amax history "
+                         "— kills the standalone amax reduction in the "
+                         "encode hot path), or 'frozen' (downlink reuses "
+                         "the clip alphas the receiver already holds, "
+                         "dropping the alpha columns off the broadcast "
+                         "payload; needs scalar per-leaf clips, which the "
+                         "stacked-layer tinyllama backbone does not have "
+                         "— use delayed here). frozen applies to the "
+                         "downlink leg only; delayed drives both legs. "
+                         "Engine path (--mesh) only")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get("tinyllama_1_1b"))
@@ -140,6 +154,20 @@ def main():
         codec_kw["up_codec"] = args.codec
         if not args.codec.startswith("delta"):
             codec_kw["down_codec"] = args.codec
+    scaling_pol = None
+    if args.scaling:
+        from repro.core import scaling as scaling_lib
+
+        scaling_pol = scaling_lib.get_policy(args.scaling)
+        if not scaling_pol.is_current:
+            if mesh is None:
+                ap.error("--scaling needs the RoundEngine path: pass --mesh")
+            # frozen is a downlink-only policy (WireLink rejects a frozen
+            # uplink: the server holds no pre-shared scales for client
+            # deltas); delayed threads a history on both legs
+            codec_kw["down_scaling"] = args.scaling
+            if not isinstance(scaling_pol, scaling_lib.PerRoundFrozenScaling):
+                codec_kw["up_scaling"] = args.scaling
     fed = FedConfig(n_clients=args.clients, participation=args.active / args.clients,
                     local_steps=args.local_steps, batch_size=4,
                     comm_mode="none" if args.no_qat else "rand", qat=qcfg,
@@ -155,6 +183,16 @@ def main():
 
     opt = optim.adamw(1e-3, weight_decay=0.01)
     params = model.init(jax.random.PRNGKey(0))
+    if scaling_pol is not None and scaling_pol.name == "frozen":
+        # fail with the story, not a trace-time error: the tinyllama family
+        # stacks per-layer clips (L, 1, 1), so there is no single scalar
+        # alpha per leaf for the receiver to reuse
+        if not wire.make_wire_spec(params).alpha_cols_ok:
+            raise SystemExit(
+                "--scaling frozen needs one scalar clip per quantized leaf; "
+                f"the '{args.scale}' backbone stacks per-layer clips "
+                "(L, 1, ..., 1). Use --scaling delayed[:H[:M]] here."
+            )
     # both legs of the exchange as first-class wire codecs (core.codec);
     # byte accounting delegates to each codec's exact payload layout
     link = WireLink(down_codec=fed.resolved_down_codec,

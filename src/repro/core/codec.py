@@ -46,6 +46,32 @@ Registry: :func:`get_codec` maps names (``e4m3``, ``e5m2_det``, ``fp4``,
 :func:`codec_for` is the deprecation shim from the legacy ``(fmt, mode)``
 knobs. All codecs are frozen dataclasses — hashable, usable as static
 config fields.
+
+Scaling policies (``core.scaling``)
+===================================
+*How the per-leaf clip scales are derived* is orthogonal to *which grid
+the codec quantizes onto*, so it lives in a separate policy object
+(``ScalingPolicy``) threaded by ``engine.WireLink``:
+
+* ``current`` — the deprecation map: every no-policy call site (plain
+  ``encode``/``decode`` below) IS current scaling, bit-identical to the
+  historical behavior. The trained ``_qa`` alphas ride in ``other``.
+* ``delayed(H, M)`` — scales come from a rolling per-leaf amax history
+  carried in ``engine.ServerState.scales`` (a ``(down, up)`` state
+  tuple); the grid codecs' :meth:`Fp8Codec.encode_scaled` with
+  ``with_amax=True`` emits next round's amax row as a fused byproduct of
+  the quantize launch (``dispatch.quant_pack_amax_tiles``) — no
+  standalone reduction in the encode hot path. The effective scales ride
+  the payload as one extra ``(n_q,)`` FP32 rider.
+* ``frozen`` — downlink-only: the receiver derives the scales from the
+  broadcast model's own trained alphas, so ``encode_scaled(...,
+  drop_alphas=True)`` ships NO alpha riders (−4 bytes/quantized leaf)
+  and :meth:`decode_scaled` splices them back from the scale vector —
+  values bitwise-equal to ``current``, bytes strictly smaller.
+
+:func:`leg_nbytes` takes the policy and adds its exact payload delta, so
+static byte accounting == the engine's traced ``wire_bytes`` for every
+policy.
 """
 from __future__ import annotations
 
@@ -54,6 +80,7 @@ from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import fp8, wire
 from .fp8 import E4M3, E5M2, FP4_E2M1, FP4_E3M0, FP8Format
@@ -114,6 +141,29 @@ def _leaf_alpha_column(alphas: Array, spec: wire.WireSpec) -> Array:
         for qi, rows in enumerate(spec.q_rows)
     ]
     return jnp.concatenate(cols, axis=0)
+
+
+def _plane_segment_amax(rowmax: Array, spec: wire.WireSpec) -> Array:
+    """Per-row |x| maxima -> per-quantized-leaf (n_q,) amax, one gather.
+
+    ``rowmax`` is the (n_rows,) column a fused plane launch emitted; the
+    row->leaf segment ids are static (``spec.q_rows``), so this is a
+    single sorted ``segment_max`` — no per-leaf Python loop, no extra
+    pass over the model. Bitwise-equal to a per-leaf flat ``max|x|``:
+    the plane's zero fill never exceeds a row's abs-max and float max is
+    exactly associative.
+    """
+    seg = np.repeat(np.arange(len(spec.q_slots)), spec.q_rows)
+    return jax.ops.segment_max(
+        rowmax.reshape(-1), jnp.asarray(seg),
+        num_segments=len(spec.q_slots), indices_are_sorted=True,
+    )
+
+
+def _scaled_alpha_col(alphas: Array, spec: wire.WireSpec) -> Array:
+    """Explicit (n_q,) scale vector -> floored (n_rows, 1) clip column."""
+    a = jnp.maximum(_f32(alphas).reshape(-1), fp8._ALPHA_FLOOR)
+    return _leaf_alpha_column(a, spec)
 
 
 class WireCodec:
@@ -230,8 +280,98 @@ class Fp8Codec(WireCodec):
     def _encode_tiles(self, x2, a2, key2):
         return dispatch.quant_pack_tiles(x2, a2, key2, fmt=self.fmt)
 
+    def _encode_tiles_amax(self, x2, a2, key2):
+        return dispatch.quant_pack_amax_tiles(x2, a2, key2, fmt=self.fmt)
+
     def _decode_tiles(self, c2, a2):
         return dispatch.unpack_tiles(c2, a2, fmt=self.fmt)
+
+    # --- explicit-scale encode/decode (core.scaling policies) ------------
+    def encode_scaled(self, params, spec, key, alphas, *,
+                      drop_alphas: bool = False, with_amax: bool = False):
+        """Encode with an explicit (n_q,) scale vector instead of the
+        tree's trained alphas.
+
+        ``alphas`` replaces the per-leaf clip values for quantization
+        (floored at ``fp8._ALPHA_FLOOR``); the codes math is the SAME
+        fused kernel as :meth:`encode`. Payload layout per policy:
+
+        * default — ``alphas`` rides as one extra (n_q,) FP32 rider
+          appended to ``other`` (delayed scaling: the receiver holds no
+          history, so the effective scales must cross the wire).
+        * ``drop_alphas=True`` — the alpha riders are removed from
+          ``other`` entirely (frozen scaling: the receiver derives them
+          itself); −4 bytes per quantized leaf.
+
+        ``with_amax=True`` additionally returns the per-leaf raw amax of
+        THIS encode, computed as a fused byproduct of the quantize launch
+        (``dispatch.quant_pack_amax_tiles``) — delayed scaling's history
+        update, with no standalone reduction in the critical path.
+        """
+        leaves = list(jax.tree_util.tree_leaves(params))
+        other = tuple(leaves[i] for i in spec.other_slots)
+        if drop_alphas:
+            hidden = set(spec.alpha_pos)
+            out_other = tuple(
+                o for oi, o in enumerate(other) if oi not in hidden
+            )
+        else:
+            out_other = other + (_f32(alphas).reshape(-1),)
+        if not spec.q_slots:
+            payload = {"codes": jnp.zeros((0,), jnp.uint8),
+                       "other": out_other}
+            return ((payload, jnp.zeros((0,), jnp.float32))
+                    if with_amax else payload)
+        x2 = _tiles([_f32(leaves[i].reshape(-1)) for i in spec.q_slots], 0.0)
+        a_col = _scaled_alpha_col(alphas, spec)
+        key2 = _key_words(key) if self.rounding == "rand" else None
+        if with_amax:
+            codes2, rowmax = self._encode_tiles_amax(x2, a_col, key2)
+            amax = _plane_segment_amax(rowmax, spec)
+            return ({"codes": self._slice_codes(codes2, spec),
+                     "other": out_other}, amax)
+        codes2 = self._encode_tiles(x2, a_col, key2)
+        return {"codes": self._slice_codes(codes2, spec),
+                "other": out_other}
+
+    def decode_scaled(self, payload, spec, *, alphas=None,
+                      dropped: bool = False):
+        """Decode an :meth:`encode_scaled` payload.
+
+        ``dropped=False``: the scale vector is the payload's last rider.
+        ``dropped=True`` (frozen): ``alphas`` is the receiver-derived
+        (n_q,) vector; the alpha leaves it encodes are spliced back into
+        the tree at their recorded positions/shapes — bitwise-equal to
+        shipping them, since both ends hold the same broadcast model.
+        """
+        other_all = tuple(payload["other"])
+        if dropped:
+            if alphas is None:
+                raise ValueError(
+                    "decode_scaled(dropped=True) needs the receiver-side "
+                    "alphas= vector (core.scaling.leaf_alphas of the model "
+                    "both ends hold)"
+                )
+            a_vec = _f32(alphas).reshape(-1)
+            inv = {oi: qi for qi, oi in enumerate(spec.alpha_pos)}
+            it = iter(other_all)
+            other = tuple(
+                a_vec[inv[oi]].reshape(spec.alpha_shapes[inv[oi]])
+                if oi in inv else next(it)
+                for oi in range(len(spec.other_slots))
+            )
+        else:
+            rider, other = other_all[-1], other_all[:-1]
+            a_vec = _f32(rider).reshape(-1)
+        out: list = [None] * spec.n_leaves
+        for slot, leaf in zip(spec.other_slots, other):
+            out[slot] = leaf
+        if spec.q_slots:
+            c2 = self._codes_to_tiles(payload["codes"], spec)
+            vals2 = self._decode_tiles(c2, _scaled_alpha_col(a_vec, spec))
+            for qi, slot in enumerate(spec.q_slots):
+                out[slot] = wire.tiles_to_leaf(vals2, spec, qi)
+        return jax.tree_util.tree_unflatten(spec.treedef, out)
 
     def _leaf_code_sizes(self, spec):
         return [_nelem(s) for s in spec.q_shapes]
@@ -312,6 +452,9 @@ class PackedFpCodec(Fp8Codec):
     def _encode_tiles(self, x2, a2, key2):
         return dispatch.quant_pack_sub_tiles(x2, a2, key2, fmt=self.fmt)
 
+    def _encode_tiles_amax(self, x2, a2, key2):
+        return dispatch.quant_pack_sub_amax_tiles(x2, a2, key2, fmt=self.fmt)
+
     def _decode_tiles(self, c2, a2):
         return dispatch.unpack_sub_tiles(c2, a2, fmt=self.fmt)
 
@@ -370,11 +513,15 @@ class DeltaCodec(WireCodec):
             _f32(leaves[i].reshape(-1)) - _f32(rleaves[i].reshape(-1))
             for i in spec.q_slots
         ]
-        d_alpha = jnp.maximum(
-            jnp.stack([jnp.max(jnp.abs(r)) for r in resid]),
-            fp8._ALPHA_FLOOR,
-        )
         x2 = _tiles(resid, 0.0)
+        # one launch over the plane, not O(n_leaves) per-leaf reductions:
+        # per-row max then a static sorted segment-max back to each leaf.
+        # Bitwise-equal to the per-leaf flat max (zero fill never exceeds
+        # a row's abs-max; float max is exactly associative).
+        rowmax = jnp.max(jnp.abs(x2), axis=1)
+        d_alpha = jnp.maximum(
+            _plane_segment_amax(rowmax, spec), fp8._ALPHA_FLOOR
+        )
         a_col = _leaf_alpha_column(d_alpha, spec)
         key2 = _key_words(key) if self.inner.rounding == "rand" else None
         return leaves, x2, a_col, d_alpha, key2
@@ -567,14 +714,20 @@ def codec_for(fmt: FP8Format, mode: str) -> WireCodec:
     return PackedFpCodec(fmt, mode)
 
 
-def leg_nbytes(codec, spec: wire.WireSpec, r: int = 0) -> int:
+def leg_nbytes(codec, spec: wire.WireSpec, r: int = 0, policy=None) -> int:
     """Exact static bytes of one model copy on a leg using ``codec``.
 
     A tree with no quantized leaves rides FP32 whatever the codec says
     (there is nothing to compress); schedules resolve at round ``r``.
+    ``policy`` (a ``core.scaling.ScalingPolicy``) adds its exact payload
+    delta — +4 bytes/leaf for delayed's scale riders, −4 for frozen's
+    dropped alpha columns, 0 for current/None.
     """
     if isinstance(codec, CodecSchedule):
         codec = codec.at(r)
     if codec.quantized and spec.q_slots:
-        return codec.payload_nbytes(spec)
+        n = codec.payload_nbytes(spec)
+        if policy is not None:
+            n += policy.payload_delta(spec)
+        return n
     return _fp32_nbytes(spec)

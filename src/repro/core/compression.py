@@ -78,6 +78,8 @@ def fp8_wire_allgather(
     mode: str = "rand",
     codec=None,
     ref: PyTree | None = None,
+    alpha_override: Array | None = None,
+    collect_amax: bool = False,
 ) -> PyTree:
     """All-gather every silo's model as STACKED client trees ``(P, ...)``.
 
@@ -96,6 +98,14 @@ def fp8_wire_allgather(
     ``ref`` the previous global model every silo holds (the
     ``make_comm_round`` aggregator state threads it). ``None`` keeps the
     legacy ``(fmt, mode)`` behavior bit-for-bit.
+
+    ``alpha_override`` switches the leg to a :mod:`core.scaling` grid: all
+    silos encode at the given per-leaf scales (policy-derived, e.g. a
+    delayed-scaling history's effective alphas) instead of their trained
+    clips — no ``sync_alphas`` pmax, the override IS the shared grid.
+    ``collect_amax`` additionally returns the per-leaf amax byproduct of
+    the fused quantize launch, pmax'd over ``axis_names`` (the history row
+    every silo appends).
     """
     from . import codec as codec_lib
     from . import wire
@@ -108,6 +118,33 @@ def fp8_wire_allgather(
         return jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis_names), params
         )
+    if alpha_override is not None:
+        spec = wire.make_wire_spec(params)
+        if not spec.q_slots:
+            out = jax.tree.map(
+                lambda x: jax.lax.all_gather(x, axis_names), params
+            )
+            if collect_amax:
+                return out, jnp.zeros((0,), jnp.float32)
+            return out
+        if collect_amax:
+            payload, amax = codec.encode_scaled(
+                params, spec, key, alpha_override, with_amax=True
+            )
+            amax = jax.lax.pmax(amax, axis_names)
+        else:
+            payload = codec.encode_scaled(params, spec, key,
+                                          alpha_override)
+        codes_g = jax.lax.all_gather(payload["codes"], axis_names)
+        other_g = tuple(
+            jax.lax.all_gather(o, axis_names) for o in payload["other"]
+        )
+        out = jax.vmap(
+            lambda c, o: codec.decode_scaled(
+                {"codes": c, "other": o}, spec
+            )
+        )(codes_g, other_g)
+        return (out, amax) if collect_amax else out
     synced = sync_alphas(params, axis_names)
     spec = wire.make_wire_spec(synced)
     if not spec.q_slots:
@@ -134,6 +171,8 @@ def fp8_wire_allgather_clients(
     codec=None,
     ref: PyTree | None = None,
     fold_axes: tuple[str, ...] = (),
+    alpha_override: Array | None = None,
+    collect_amax: bool = False,
 ) -> PyTree:
     """Gather a cohort of client models sharded over mesh axes — u8 wire.
 
@@ -171,6 +210,14 @@ def fp8_wire_allgather_clients(
     model-axis-sharded operands stay in place. Name the model axis in
     ``fold_axes`` to fold its ``axis_index`` into the per-client keys so
     each shard draws decorrelated stochastic-rounding bits.
+
+    ``alpha_override`` switches the leg to a :mod:`core.scaling` grid:
+    every client encodes at the SAME policy-derived per-leaf scales (e.g.
+    a delayed-scaling history's effective alphas — both ends can derive
+    them, so no fresh reduction serializes the encode). ``collect_amax``
+    additionally gathers the per-client ``(n_q,)`` amax byproduct of the
+    fused quantize launch alongside the codes, returning
+    ``(decoded_stack, amax (n_keep, n_q))``.
     """
     from . import codec as codec_lib
     from . import wire
@@ -192,6 +239,41 @@ def fp8_wire_allgather_clients(
     if not codec.quantized:
         return keep(jax.tree.map(gather, stacked))
     spec = wire.make_wire_spec(jax.tree.map(lambda x: x[0], stacked))
+    if alpha_override is not None:
+        if not spec.q_slots:
+            out = keep(jax.tree.map(gather, stacked))
+            if collect_amax:
+                return out, jnp.zeros((1, 0), jnp.float32)
+            return out
+        for ax in fold_axes:
+            idx = jax.lax.axis_index(ax)
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, idx))(keys)
+        if collect_amax:
+            payloads, amax = jax.vmap(
+                lambda p, k: codec.encode_scaled(p, spec, k,
+                                                 alpha_override,
+                                                 with_amax=True)
+            )(stacked, keys)
+        else:
+            payloads = jax.vmap(
+                lambda p, k: codec.encode_scaled(p, spec, k,
+                                                 alpha_override)
+            )(stacked, keys)
+            amax = None
+        codes_g = gather(payloads["codes"])
+        other_g = tuple(gather(o) for o in payloads["other"])
+        amax_g = gather(amax) if collect_amax else None
+        if n_keep is not None:
+            codes_g = codes_g[:n_keep]
+            other_g = tuple(o[:n_keep] for o in other_g)
+            if collect_amax:
+                amax_g = amax_g[:n_keep]
+        out = jax.vmap(
+            lambda c, o: codec.decode_scaled(
+                {"codes": c, "other": o}, spec
+            )
+        )(codes_g, other_g)
+        return (out, amax_g) if collect_amax else out
     if not spec.q_slots:
         return keep(jax.tree.map(gather, stacked))
     for ax in fold_axes:

@@ -57,8 +57,9 @@ import jax
 import jax.numpy as jnp
 
 from . import codec as codec_lib
+from . import scaling as scaling_lib
 from . import wire
-from .codec import CodecSchedule, DeltaCodec, Fp32Codec, WireCodec
+from .codec import CodecSchedule, DeltaCodec, Fp32Codec, Fp8Codec, WireCodec
 from .faults import FaultModel, quorum_count
 from .fp8 import E4M3, E5M2, FP8Format
 from .qat import QATConfig
@@ -78,12 +79,17 @@ class ServerState(NamedTuple):
     as small as before. ``round`` is the round-index operand a per-round
     :class:`repro.core.codec.CodecSchedule` resolves against inside the
     jitted round; it stays ``()`` (no extra leaf, unchanged pytree) unless
-    the link carries a schedule.
+    the link carries a schedule. ``scales`` threads per-leg
+    :class:`repro.core.scaling.ScalingPolicy` state (a ``(down, up)``
+    tuple — the rolling amax history of a delayed leg) and likewise stays
+    ``()`` unless a leg scales away from ``current``, so every legacy
+    checkpoint keeps its exact pytree.
     """
 
     params: PyTree
     opt: PyTree
     round: PyTree = ()
+    scales: PyTree = ()
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +131,12 @@ class FedConfig:
     down_codec: Any = None
     up_codec: Any = None
     codec_schedule: Any = None
+    # per-leg scaling policies (core.scaling): a ScalingPolicy instance or
+    # a spec string ('current' | 'delayed[:H[:M]]' | 'frozen'). None is the
+    # deprecation map — the historical no-knob behavior IS 'current', so
+    # every pre-policy config resolves to the bit-identical default.
+    down_scaling: Any = None
+    up_scaling: Any = None
     aggregator: str = "auto"      # 'auto'|'mean'|'server_opt'|'fedavgm'|'fedadam'
     # cohort device mesh: shard the sampled-client axis over `client_axis`
     # of this jax.sharding.Mesh (ShardedExecutor; composes with `chunk` —
@@ -271,6 +283,10 @@ class FedConfig:
                 f"FedConfig.faults takes a core.faults.FaultModel (or "
                 f"None), got {type(self.faults).__name__}"
             )
+        # eager policy resolution: a typo'd scaling spec fails here with
+        # the accepted grammar named, not as a deep trace error
+        scaling_lib.get_policy(self.down_scaling)
+        scaling_lib.get_policy(self.up_scaling)
 
     @property
     def clients_per_round(self) -> int:
@@ -309,6 +325,16 @@ class FedConfig:
     def resolved_up_codec(self):
         """The uplink WireCodec (codec knobs win over legacy knobs)."""
         return self._resolved_codec(self.up_codec, self.resolved_up)
+
+    @property
+    def resolved_down_scaling(self):
+        """The downlink ScalingPolicy (None == 'current')."""
+        return scaling_lib.get_policy(self.down_scaling)
+
+    @property
+    def resolved_up_scaling(self):
+        """The uplink ScalingPolicy (None == 'current')."""
+        return scaling_lib.get_policy(self.up_scaling)
 
     @property
     def resolved_aggregator(self) -> str:
@@ -478,6 +504,13 @@ class WireLink:
     real size. ``ref`` is the round's reference model (the broadcast the
     cohort trained from) — consumed by :class:`DeltaCodec` legs; ``r`` is
     the round-index operand consumed by schedules.
+
+    ``down_scaling``/``up_scaling`` pick each leg's
+    :class:`~repro.core.scaling.ScalingPolicy` (instance or spec string;
+    None == ``'current'``, the bit-identical no-policy past). A non-current
+    policy replaces the trained-alpha clip with policy-derived scales, so
+    it requires a plain FP8-family leg codec (no FP32 passthrough, delta,
+    or schedule — scaled XOR scheduled); ``'frozen'`` is downlink-only.
     """
 
     down_fmt: FP8Format = E4M3
@@ -486,6 +519,8 @@ class WireLink:
     up_mode: str = "rand"
     down_codec: Any = None
     up_codec: Any = None
+    down_scaling: Any = None
+    up_scaling: Any = None
 
     def __post_init__(self):
         down = (codec_lib.get_codec(self.down_codec)
@@ -501,8 +536,27 @@ class WireLink:
                 "Use it on the uplink, where the reference is the round's "
                 "broadcast."
             )
+        down_p = scaling_lib.get_policy(self.down_scaling)
+        up_p = scaling_lib.get_policy(self.up_scaling)
+        for leg, pol, c in (("down", down_p, down), ("up", up_p, up)):
+            if not pol.is_current and not isinstance(c, Fp8Codec):
+                raise ValueError(
+                    f"{leg}_scaling={pol.name!r} needs a plain FP8-family "
+                    f"{leg}link codec (Fp8Codec/PackedFpCodec) — got "
+                    f"{type(c).__name__}; scaling policies do not compose "
+                    "with FP32 passthrough, DeltaCodec, or CodecSchedule"
+                )
+        if isinstance(up_p, scaling_lib.PerRoundFrozenScaling):
+            raise ValueError(
+                "up_scaling='frozen' is unsupported: the server has no "
+                "prior copy of a client's freshly-trained model, so there "
+                "are no already-held scales to reuse. Frozen scaling is a "
+                "downlink policy; use 'delayed' on the uplink."
+            )
         object.__setattr__(self, "_down_c", down)
         object.__setattr__(self, "_up_c", up)
+        object.__setattr__(self, "_down_p", down_p)
+        object.__setattr__(self, "_up_p", up_p)
 
     # resolved codecs (read-only views)
     @property
@@ -522,6 +576,100 @@ class WireLink:
     @property
     def needs_ref(self) -> bool:
         return isinstance(self._up_c, DeltaCodec)
+
+    # resolved scaling policies (read-only views)
+    @property
+    def down_p(self):
+        return self._down_p
+
+    @property
+    def up_p(self):
+        return self._up_p
+
+    @property
+    def scaled(self) -> bool:
+        """True when any leg scales away from ``current`` — only then do
+        the round builders thread ``ServerState.scales``."""
+        return not (self._down_p.is_current and self._up_p.is_current)
+
+    def scales_init(self, params: PyTree,
+                    spec: wire.WireSpec | None = None) -> PyTree:
+        """Initial ``ServerState.scales``: a ``(down, up)`` state tuple
+        seeded from the model's trained clip alphas (``()`` per stateless
+        leg)."""
+        if not self.scaled:
+            return ()
+        if spec is None:
+            spec = wire.make_wire_spec(params)
+        a0 = scaling_lib.leaf_alphas(params, spec)
+        return (self._down_p.init_state(a0), self._up_p.init_state(a0))
+
+    def down_scaled(self, params: PyTree, spec: wire.WireSpec, key: Array,
+                    st: PyTree, axis: str | None = None):
+        """Scaled server -> cohort broadcast: ``(received_tree, new_st)``.
+
+        Delayed legs encode at the history's effective scales and append
+        the per-leaf amax the fused quantize launch emitted (``pmax`` over
+        ``axis`` first when the plane is model-sharded, so every shard
+        appends the same global row). Frozen legs encode at the trained
+        alphas but DROP the alpha columns from the payload — the receiver
+        splices the values it already holds back in, bitwise."""
+        c, pol = self._down_c, self._down_p
+        if not (c.quantized and spec.q_slots):
+            return params, st
+        if isinstance(pol, scaling_lib.PerRoundFrozenScaling):
+            scaling_lib.require_column_alphas(spec, pol)
+            alphas = scaling_lib.leaf_alphas(params, spec)
+            payload = c.encode_scaled(params, spec, key, alphas,
+                                      drop_alphas=True)
+            out = c.decode_scaled(payload, spec, alphas=alphas,
+                                  dropped=True)
+            return out, st
+        a_eff = pol.effective(st)
+        payload, amax = c.encode_scaled(params, spec, key, a_eff,
+                                        with_amax=True)
+        out = c.decode_scaled(payload, spec)
+        if axis is not None:
+            amax = jax.lax.pmax(amax, axis)
+        return out, pol.update(st, amax)
+
+    def up_scaled(self, client_params: PyTree, spec: wire.WireSpec,
+                  key: Array, cohort: int, st: PyTree):
+        """Scaled cohort -> server uplink: ``(msgs, up_amax)``.
+
+        Every client encodes at the SAME effective scales (the server's
+        history — both ends can derive them without a fresh reduction);
+        ``up_amax`` is the per-client ``(cohort, n_q)`` amax byproduct.
+        The caller aggregates it into the history so fault masking can
+        drop rejected clients' rows first."""
+        c, pol = self._up_c, self._up_p
+        if not (c.quantized and spec.q_slots):
+            return client_params, jnp.zeros((cohort, 0), jnp.float32)
+        a_eff = pol.effective(st)
+        up_keys = jax.random.split(key, cohort)
+        payloads, amax = jax.vmap(
+            lambda p, pk: c.encode_scaled(p, spec, pk, a_eff,
+                                          with_amax=True)
+        )(client_params, up_keys)
+        msgs = jax.vmap(
+            lambda pl: c.decode_scaled(pl, spec)
+        )(payloads)
+        return msgs, amax
+
+    def up_gather_scaled(self, client_params: PyTree, keys: Array,
+                         axis: str, n_keep: int, st: PyTree,
+                         fold_axes: tuple[str, ...] = ()):
+        """Scaled uplink for the sharded executors (inside ``shard_map``):
+        same wire as :meth:`up_gather` plus the per-client amax gathered
+        alongside the codes — ``(msgs, up_amax)`` with ``up_amax`` of
+        shape ``(n_keep, n_q)`` replicated like the decoded stack."""
+        from .compression import fp8_wire_allgather_clients
+
+        a_eff = self._up_p.effective(st)
+        return fp8_wire_allgather_clients(
+            client_params, keys, (axis,), codec=self._up_c, n_keep=n_keep,
+            fold_axes=fold_axes, alpha_override=a_eff, collect_amax=True,
+        )
 
     def down(self, params: PyTree, spec: wire.WireSpec, key: Array,
              r: Array | None = None) -> PyTree:
@@ -584,12 +732,15 @@ class WireLink:
         return leg(c, client_params, keys)
 
     def down_bytes(self, spec: wire.WireSpec, r: int = 0) -> int:
-        """Exact bytes of one downlink model copy (static, per receiver)."""
-        return codec_lib.leg_nbytes(self._down_c, spec, r)
+        """Exact bytes of one downlink model copy (static, per receiver).
+        Policy-aware: a frozen leg drops its alpha columns, a delayed leg
+        ships one effective-scale scalar per quantized leaf."""
+        return codec_lib.leg_nbytes(self._down_c, spec, r,
+                                    policy=self._down_p)
 
     def up_bytes(self, spec: wire.WireSpec, r: int = 0) -> int:
         """Exact bytes of one uplink model copy (static, per client)."""
-        return codec_lib.leg_nbytes(self._up_c, spec, r)
+        return codec_lib.leg_nbytes(self._up_c, spec, r, policy=self._up_p)
 
     def leg_bytes_traced(self, spec: wire.WireSpec,
                          r: Array | None) -> tuple[Array, Array]:
@@ -599,16 +750,21 @@ class WireLink:
         constant. Exact — the fault path multiplies these by traced
         participation counts."""
 
-        def leg_traced(c):
+        def leg_traced(c, p):
             if isinstance(c, CodecSchedule):
+                # scaled XOR scheduled (validated): the policy here is
+                # always current, zero payload delta
                 table = jnp.asarray(
                     [codec_lib.leg_nbytes(cc, spec) for cc in c.codecs],
                     jnp.int32,
                 )
                 return jnp.take(table, c.phase(r))
-            return jnp.asarray(codec_lib.leg_nbytes(c, spec), jnp.int32)
+            return jnp.asarray(
+                codec_lib.leg_nbytes(c, spec, policy=p), jnp.int32
+            )
 
-        return leg_traced(self._down_c), leg_traced(self._up_c)
+        return (leg_traced(self._down_c, self._down_p),
+                leg_traced(self._up_c, self._up_p))
 
     def traced_round_bytes(self, spec: wire.WireSpec, cohort: int,
                            r: Array) -> Array:
@@ -1026,7 +1182,9 @@ def _stages_from_config(cfg: FedConfig):
     P = cfg.clients_per_round
     sampler = _SAMPLERS[cfg.sampler](cfg.n_clients, P)
     link = WireLink(down_codec=cfg.resolved_down_codec,
-                    up_codec=cfg.resolved_up_codec)
+                    up_codec=cfg.resolved_up_codec,
+                    down_scaling=cfg.resolved_down_scaling,
+                    up_scaling=cfg.resolved_up_scaling)
     if cfg.mesh is not None:
         executor = ShardedExecutor(cfg.mesh, cfg.client_axis, chunk=cfg.chunk,
                                    model_axis=cfg.model_axis)
@@ -1084,6 +1242,9 @@ class RoundEngine:
         # a CodecSchedule resolves against the round-index operand in
         # ServerState.round; only scheduled links thread the counter
         self.scheduled = bool(getattr(self.link, "has_schedule", False))
+        # likewise, only links with a non-current ScalingPolicy thread
+        # scaling state — 'current' rounds keep the legacy trace verbatim
+        self.scaled = bool(getattr(self.link, "scaled", False))
         self._local_update = make_local_update(loss_fn, optimizer, cfg)
         self.round_fn = self._build_round()
 
@@ -1092,6 +1253,7 @@ class RoundEngine:
             params=params,
             opt=self.aggregator.init(params),
             round=jnp.zeros((), jnp.int32) if self.scheduled else (),
+            scales=self.link.scales_init(params) if self.scaled else (),
         )
 
     def stateless(self) -> bool:
@@ -1145,6 +1307,12 @@ class RoundEngine:
         )
         local_update = self._local_update
         scheduled = self.scheduled
+        # per-leg static scaling gates: a 'current' leg takes the ORIGINAL
+        # branch below verbatim, so its trace (and bitwise contract) is
+        # exactly the pre-policy round's
+        scaled = self.scaled
+        down_scaled_leg = scaled and not link.down_p.is_current
+        up_scaled_leg = scaled and not link.up_p.is_current
         faults: FaultModel | None = self.faults
         lat_table = (faults.latencies(cfg.n_clients)
                      if faults is not None else None)
@@ -1156,6 +1324,7 @@ class RoundEngine:
             # the round-index operand: a CodecSchedule resolves its phase
             # from it in-jit (None on unscheduled links — no counter leaf)
             r = state.round if scheduled else None
+            st_down, st_up = state.scales if scaled else ((), ())
             # key-splitting order matches the legacy round exactly, so the
             # fedavg shim (and any same-key replay) is bit-identical
             k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
@@ -1167,7 +1336,11 @@ class RoundEngine:
             nk_sel = nk[idx]
 
             # --- stage 2a: downlink --------------------------------------
-            down = link.down(server_params, spec, k_down, r=r)
+            if down_scaled_leg:
+                down, st_down = link.down_scaled(server_params, spec,
+                                                 k_down, st_down)
+            else:
+                down = link.down(server_params, spec, k_down, r=r)
 
             # --- stage 3: local QAT training over the cohort -------------
             loc_keys = jax.random.split(k_loc, P)
@@ -1187,7 +1360,11 @@ class RoundEngine:
             # `down` is the round's reference model: every client started
             # local training from it, so a DeltaCodec uplink quantizes the
             # residual against a tree both ends hold
-            msgs = link.up(client_params, spec, k_up, P, ref=down, r=r)
+            if up_scaled_leg:
+                msgs, up_amax = link.up_scaled(client_params, spec, k_up,
+                                               P, st_up)
+            else:
+                msgs = link.up(client_params, spec, k_up, P, ref=down, r=r)
 
             # --- fault stage (statically elided when fault-free, so the
             # legacy trace — and its bitwise contract — is untouched).
@@ -1212,6 +1389,23 @@ class RoundEngine:
             else:
                 nk_agg = nk_sel
 
+            # --- delayed-uplink history append ---------------------------
+            # the server's next-round scales come from what it RECEIVED:
+            # rejected clients' amax rows are masked out first (amax >= 0,
+            # so a zeroed row never wins the max); an all-dead round
+            # appends the running history max — finite, and discarded by
+            # the quorum revert below anyway
+            if up_scaled_leg:
+                if faults is not None:
+                    acc = fd.accepted.astype(jnp.float32)[:, None]
+                    row = jnp.max(up_amax * acc, axis=0)
+                    row = jnp.where(n_alive > 0, row,
+                                    jnp.max(st_up, axis=0))
+                else:
+                    row = jnp.max(up_amax, axis=0)
+                st_up = link.up_p.update(st_up, row)
+            new_scales = (st_down, st_up) if scaled else ()
+
             # --- stage 4: server aggregation -----------------------------
             new_params, new_opt = aggregator(
                 server_params, msgs, nk_agg, k_srv, state.opt
@@ -1228,6 +1422,9 @@ class RoundEngine:
                 )
                 new_params = keep(new_params, server_params)
                 new_opt = keep(new_opt, state.opt)
+                if scaled:
+                    # a discarded round must not advance scaling history
+                    new_scales = keep(new_scales, state.scales)
 
             if faults is not None:
                 # static sub-GiB guard per phase, then the traced count:
@@ -1263,7 +1460,8 @@ class RoundEngine:
                     round_time=faults.round_time(fd),
                 )
             return ServerState(new_params, new_opt,
-                               (r + 1) if scheduled else ()), metrics
+                               (r + 1) if scheduled else (),
+                               new_scales), metrics
 
         return round_fn
 
@@ -1291,6 +1489,11 @@ class RoundEngine:
         sampler, link, aggregator = self.sampler, self.link, self.aggregator
         local_update = self._local_update
         scheduled = self.scheduled
+        # static per-leg scaling gates — 'current' legs keep the pinned
+        # legacy lowering (and its sharded==local bitwise contract)
+        scaled = self.scaled
+        down_scaled_leg = scaled and not link.down_p.is_current
+        up_scaled_leg = scaled and not link.up_p.is_current
         cfg = self.cfg
         faults: FaultModel | None = self.faults
         lat_table = (faults.latencies(cfg.n_clients)
@@ -1301,6 +1504,7 @@ class RoundEngine:
                      nk: Array, key: Array):
             server_params = state.params
             r = state.round if scheduled else None
+            st_down, st_up = state.scales if scaled else ((), ())
             k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
 
             spec = wire.make_wire_spec(server_params)
@@ -1310,7 +1514,11 @@ class RoundEngine:
             nk_sel = nk[idx]
 
             # --- stage 2a: downlink (replicated: ONE encode+decode) ------
-            down = link.down(server_params, spec, k_down, r=r)
+            if down_scaled_leg:
+                down, st_down = link.down_scaled(server_params, spec,
+                                                 k_down, st_down)
+            else:
+                down = link.down(server_params, spec, k_down, r=r)
 
             # same fan-out as the local round; the pad wraps cohort rows
             # (keys included) so padded clients are exact duplicates whose
@@ -1337,7 +1545,31 @@ class RoundEngine:
 
             sh = PartitionSpec(axis)
             rep = PartitionSpec()
-            if scheduled:
+            if up_scaled_leg:
+                # scaled uplink: the history's effective scales ride into
+                # the shard replicated; the per-client amax byproduct is
+                # gathered alongside the codes and comes back replicated
+                def shard_body_scaled(dn, d, l, lk, uk, st):
+                    client_params, losses = ex.run_shard(
+                        local_update, dn, d, l, lk, P
+                    )
+                    client_params, losses = jax.lax.optimization_barrier(
+                        (client_params, losses)
+                    )
+                    msgs, amax = link.up_gather_scaled(
+                        client_params, uk, axis, n_keep=P, st=st
+                    )
+                    g = jax.lax.all_gather(losses, axis)
+                    return msgs, g.reshape(-1)[:P], amax
+
+                msgs, losses, up_amax = shard_map(
+                    shard_body_scaled, mesh=mesh,
+                    in_specs=(rep, sh, sh, sh, sh, rep),
+                    out_specs=(rep, rep, rep),
+                    check_rep=False,
+                )(down, data[sel], labels[sel], loc_keys[pad_idx],
+                  up_keys[pad_idx], st_up)
+            elif scheduled:
                 # the round-index rides replicated into the shard so the
                 # scheduled uplink resolves its phase inside shard_map
                 msgs, losses = shard_map(
@@ -1378,6 +1610,20 @@ class RoundEngine:
             else:
                 nk_agg = nk_sel
 
+            # --- delayed-uplink history append (replicated; identical
+            # math to the local round, so the contract holds under
+            # scaling too) ------------------------------------------------
+            if up_scaled_leg:
+                if faults is not None:
+                    acc = fd.accepted.astype(jnp.float32)[:, None]
+                    row = jnp.max(up_amax * acc, axis=0)
+                    row = jnp.where(n_alive > 0, row,
+                                    jnp.max(st_up, axis=0))
+                else:
+                    row = jnp.max(up_amax, axis=0)
+                st_up = link.up_p.update(st_up, row)
+            new_scales = (st_down, st_up) if scaled else ()
+
             # --- stage 4: server aggregation (replicated) ----------------
             # inside its own fully-replicated shard_map: left to GSPMD, the
             # partitioner shards the (P, ...) client axis whenever D
@@ -1409,6 +1655,8 @@ class RoundEngine:
                 )
                 new_params = keep(new_params, server_params)
                 new_opt = keep(new_opt, state.opt)
+                if scaled:
+                    new_scales = keep(new_scales, state.scales)
 
             if faults is not None:
                 for pr in (_schedule_probe_rounds(link)
@@ -1440,7 +1688,8 @@ class RoundEngine:
                     round_time=faults.round_time(fd),
                 )
             return ServerState(new_params, new_opt,
-                               (r + 1) if scheduled else ()), metrics
+                               (r + 1) if scheduled else (),
+                               new_scales), metrics
 
         return round_fn
 
@@ -1496,6 +1745,14 @@ class RoundEngine:
         sampler, link, aggregator = self.sampler, self.link, self.aggregator
         local_update = self._local_update
         scheduled = self.scheduled
+        # static per-leg scaling gates — 'current' legs keep the pinned
+        # 2D lowering verbatim. Scaled legs run per-DEVICE over the local
+        # plane (the local spec has the same leaf segmentation as the
+        # global one), with amax pmax'd over the model axis so every
+        # shard appends the same global history row.
+        scaled = self.scaled
+        down_scaled_leg = scaled and not link.down_p.is_current
+        up_scaled_leg = scaled and not link.up_p.is_current
         cfg = self.cfg
         faults: FaultModel | None = self.faults
         lat_table = (faults.latencies(cfg.n_clients)
@@ -1515,6 +1772,7 @@ class RoundEngine:
                      nk: Array, key: Array):
             server_params = state.params
             r = state.round if scheduled else None
+            st_down, st_up = state.scales if scaled else ((), ())
             k_sel, k_down, k_up, k_loc, k_srv = jax.random.split(key, 5)
 
             # GLOBAL wire spec: byte accounting only (executor-invariant)
@@ -1545,7 +1803,21 @@ class RoundEngine:
                 lspec = wire.make_wire_spec(p)
                 return link.down(p, lspec, kd, r=r_op)
 
-            if scheduled:
+            if down_scaled_leg:
+                # per-device scaled encode over the LOCAL plane; the
+                # delayed amax is pmax'd over the model axis inside, so
+                # the state update leaves the shard replicated
+                def down_body_scaled(p, kd, st):
+                    lspec = wire.make_wire_spec(p)
+                    return link.down_scaled(p, lspec, kd, st, axis=maxis)
+
+                down, st_down = shard_map(
+                    down_body_scaled, mesh=mesh,
+                    in_specs=(pspecs, rep, rep),
+                    out_specs=(pspecs, rep),
+                    check_rep=False,
+                )(server_params, k_down, st_down)
+            elif scheduled:
                 down = shard_map(
                     down_body, mesh=mesh,
                     in_specs=(pspecs, rep, rep), out_specs=pspecs,
@@ -1593,7 +1865,22 @@ class RoundEngine:
                                       r=r_op)
 
             out_stk = _lead(spec_leaves, None, treedef)
-            if scheduled:
+            if up_scaled_leg:
+                # scaled uplink: per-device amax over the local shard,
+                # pmax'd over the model axis so the gathered (P, n_q)
+                # row set is globally consistent and fully replicated
+                def up_body_scaled(cp, uk, st):
+                    m, amax = link.up_gather_scaled(
+                        cp, uk, caxis, n_keep=P, st=st
+                    )
+                    return m, jax.lax.pmax(amax, maxis)
+
+                msgs, up_amax = shard_map(
+                    up_body_scaled, mesh=mesh,
+                    in_specs=(stk_specs, PartitionSpec(caxis), rep),
+                    out_specs=(out_stk, rep), check_rep=False,
+                )(stacked, up_keys[pad_idx], st_up)
+            elif scheduled:
                 msgs = shard_map(
                     up_body, mesh=mesh,
                     in_specs=(stk_specs, PartitionSpec(caxis), pspecs, rep),
@@ -1631,6 +1918,19 @@ class RoundEngine:
             else:
                 nk_agg = nk_sel
 
+            # --- delayed-uplink history append (replicated; identical
+            # math to the local round) ------------------------------------
+            if up_scaled_leg:
+                if faults is not None:
+                    acc = fd.accepted.astype(jnp.float32)[:, None]
+                    row = jnp.max(up_amax * acc, axis=0)
+                    row = jnp.where(n_alive > 0, row,
+                                    jnp.max(st_up, axis=0))
+                else:
+                    row = jnp.max(up_amax, axis=0)
+                st_up = link.up_p.update(st_up, row)
+            new_scales = (st_down, st_up) if scaled else ()
+
             # --- stage 4: server aggregation -----------------------------
             def tail_fn(sp, m, w, k, st, l_):
                 new_p, new_o = aggregator(sp, m, w, k, st)
@@ -1667,6 +1967,8 @@ class RoundEngine:
                 )
                 new_params = keep(new_params, server_params)
                 new_opt = keep(new_opt, state.opt)
+                if scaled:
+                    new_scales = keep(new_scales, state.scales)
 
             if faults is not None:
                 for pr in (_schedule_probe_rounds(link)
@@ -1697,6 +1999,7 @@ class RoundEngine:
                     round_time=faults.round_time(fd),
                 )
             return ServerState(new_params, new_opt,
-                               (r + 1) if scheduled else ()), metrics
+                               (r + 1) if scheduled else (),
+                               new_scales), metrics
 
         return round_fn

@@ -68,13 +68,21 @@ def round_bytes_for(params: PyTree, cfg: Any, r: int = 0) -> int:
     """Static round-byte estimate for a :class:`repro.core.engine.FedConfig`,
     honoring its per-direction codecs (legacy (fmt, mode) knobs resolve
     through the same registry). ``r`` selects the round for configs with a
-    ``codec_schedule``."""
+    ``codec_schedule``. Scaling policies (``down_scaling``/``up_scaling``)
+    adjust each leg's rider bytes — a frozen leg drops its alpha columns,
+    a delayed leg ships one effective-scale scalar per quantized leaf."""
     from . import codec as codec_lib
     from . import wire
 
     spec = wire.make_wire_spec(params)
-    down = codec_lib.leg_nbytes(cfg.resolved_down_codec, spec, r)
-    up = codec_lib.leg_nbytes(cfg.resolved_up_codec, spec, r)
+    down = codec_lib.leg_nbytes(
+        cfg.resolved_down_codec, spec, r,
+        policy=getattr(cfg, "resolved_down_scaling", None),
+    )
+    up = codec_lib.leg_nbytes(
+        cfg.resolved_up_codec, spec, r,
+        policy=getattr(cfg, "resolved_up_scaling", None),
+    )
     return cfg.clients_per_round * (down + up)
 
 
@@ -95,8 +103,14 @@ def partial_round_bytes(params: PyTree, cfg: Any, n_transmitted: int,
             f"n_transmitted must be in [0, cohort={P}], got {n_transmitted}"
         )
     spec = wire.make_wire_spec(params)
-    down = codec_lib.leg_nbytes(cfg.resolved_down_codec, spec, r)
-    up = codec_lib.leg_nbytes(cfg.resolved_up_codec, spec, r)
+    down = codec_lib.leg_nbytes(
+        cfg.resolved_down_codec, spec, r,
+        policy=getattr(cfg, "resolved_down_scaling", None),
+    )
+    up = codec_lib.leg_nbytes(
+        cfg.resolved_up_codec, spec, r,
+        policy=getattr(cfg, "resolved_up_scaling", None),
+    )
     return P * down + n_transmitted * up
 
 

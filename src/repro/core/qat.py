@@ -20,6 +20,7 @@ weight-quantized (paper: "< 2% of parameters", kept FP32).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -46,6 +47,16 @@ class QATConfig:
     # Paper default: deterministic QAT (Remark 4). 'rand' exists for the
     # Table 2 ablation.
     mode: str = "det"
+    # Hybrid activation/gradient recipe (TE's fp8_hybrid, opened by the
+    # scaling-policy work): when set, activation sites additionally
+    # fake-quantize their BACKWARD gradient to this format (typically
+    # E5M2 — wider dynamic range for the gradient-like tensor) at a fresh
+    # per-tensor amax scale shifted by 2**bwd_margin (TE's fp8_margin;
+    # current-scaling semantics — the gradient exists only inside one
+    # step, so there is no history to delay against). None keeps the
+    # forward-only QAT of the paper bit-for-bit.
+    bwd_fmt: FP8Format | None = None
+    bwd_margin: int = 0
 
     def replace(self, **kw) -> "QATConfig":
         return dataclasses.replace(self, **kw)
@@ -111,15 +122,52 @@ def wq(w: Array, alpha: Array, cfg: QATConfig, key: Array | None = None) -> Arra
     return dispatch.quantize_det(w, alpha, cfg.fmt)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _grad_quant(x: Array, fmt: FP8Format, margin: int) -> Array:
+    """Identity forward; the BACKWARD gradient is fake-quantized to ``fmt``.
+
+    The hybrid-recipe bwd leg: the activation gradient is a one-step
+    tensor (no cross-round history), so it uses current scaling — a fresh
+    per-tensor amax, shifted by the exact power of two ``2**margin``
+    (mantissas untouched) and floored like every other clip in the repo.
+    """
+    return x
+
+
+def _grad_quant_fwd(x, fmt, margin):
+    return x, None
+
+
+def _grad_quant_bwd(fmt, margin, _res, g):
+    a = jnp.maximum(
+        jnp.exp2(jnp.float32(margin)) * jnp.max(jnp.abs(g)),
+        fp8._ALPHA_FLOOR,
+    )
+    return (fp8.quantize_det(g, a, fmt),)
+
+
+_grad_quant.defvjp(_grad_quant_fwd, _grad_quant_bwd)
+
+
 def aq(x: Array, beta: Array, cfg: QATConfig) -> Array:
-    """Fake-quantize an activation tensor (always deterministic, sep. clip beta)."""
+    """Fake-quantize an activation tensor (always deterministic, sep. clip beta).
+
+    With ``cfg.bwd_fmt`` set, the site becomes the hybrid
+    activation/gradient recipe: forward stays ``cfg.fmt`` (E4M3 QAT,
+    value-identical to the forward-only path), while the backward
+    activation gradient is additionally fake-quantized to ``bwd_fmt``
+    (E5M2 by convention) before it reaches the forward quantizer's STE.
+    """
     if not (cfg.enabled and cfg.quantize_acts):
         return x
     from ..kernels import dispatch
 
     # Activations are quantized symmetrically like weights (paper §2).
     beta = _lsq_grad_scale(beta, x.size, cfg.fmt)
-    return dispatch.quantize_det(x, beta, cfg.fmt)
+    out = dispatch.quantize_det(x, beta, cfg.fmt)
+    if cfg.bwd_fmt is not None:
+        out = _grad_quant(out, cfg.bwd_fmt, cfg.bwd_margin)
+    return out
 
 
 # ---------------------------------------------------------------------------

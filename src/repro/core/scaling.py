@@ -1,0 +1,193 @@
+"""ScalingPolicy — how FP8 wire scales are derived per round.
+
+The paper's wire (and this repo's default) clips each quantized leaf at a
+*trained* clipping value (the ``_qa`` scalars riding in the tree), so the
+encode hot path never reduces over the model. Production FP8 recipes go
+further (TransformerEngine's ``DelayedScaling``; Micikevicius et al.,
+*FP8 Formats for Deep Learning*): the scale of step ``t`` comes from an
+amax *history* filled as a byproduct of step ``t-1``'s quantize launch,
+never from a fresh reduction in the critical path. This module makes that
+choice a first-class, threadable policy object:
+
+* :class:`CurrentScaling` (``"current"``, the default) — today's trained
+  per-leaf clip alphas, bit-identical to the no-policy past. Stateless.
+* :class:`DelayedScaling` (``"delayed[:H[:M]]"``) — per-segment scales
+  from a rolling ``(H, n_q)`` amax history carried in ``ServerState``
+  (margin ``M`` shifts the scale by an exact power of two, TE's
+  ``fp8_margin``). The history row for the next round is produced by the
+  fused quantize+amax kernel (``kernels.fp8_quant.quant_pack_amax_tiles``)
+  — no standalone reduction. The effective scales ride the payload as one
+  extra FP32 scalar per quantized leaf.
+* :class:`PerRoundFrozenScaling` (``"frozen"``) — the downlink reuses the
+  scales the receiver can already derive: the broadcast model's own
+  trained alphas (which the client holds once decoded). Alpha columns
+  drop off the payload entirely (−4 bytes per quantized leaf) and, since
+  the values match ``current`` exactly, the decoded tree is bitwise
+  identical — the win is pure wire bytes. Downlink only.
+
+Policies are frozen dataclasses (hashable, static config fields).
+``engine.WireLink`` resolves them from strings via :func:`get_policy`;
+``engine.ServerState.scales`` threads the per-leg state (a ``(down, up)``
+tuple; ``()`` for stateless policies) through jitted rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8
+from .plane import f32 as _f32
+
+
+class ScalingPolicy:
+    """Base policy: how a wire leg derives its per-leaf FP8 scales."""
+
+    name: str = "base"
+    #: True only for CurrentScaling — legs with a current policy run the
+    #: original (policy-free) code path verbatim, keeping it bitwise.
+    is_current: bool = False
+    #: True when the policy threads state (an amax history) across rounds.
+    stateful: bool = False
+
+    def payload_delta(self, spec) -> int:
+        """Extra payload bytes per model copy vs the ``current`` layout."""
+        return 0
+
+    def init_state(self, alphas0):
+        """Initial per-leg state from the model's trained alphas."""
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CurrentScaling(ScalingPolicy):
+    """Fresh trained-alpha scaling — the bit-identical default."""
+
+    name: str = "current"
+    is_current: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedScaling(ScalingPolicy):
+    """TE-style delayed scaling from a rolling per-segment amax history.
+
+    ``history_len`` rounds of per-leaf amax are kept in a ``(H, n_q)``
+    float32 buffer; the effective clip is ``2**margin * max(history)``
+    (floored at ``fp8._ALPHA_FLOOR``). The history is seeded from the
+    trained alphas so round 0 matches the no-history recipe, and each
+    round appends the amax the fused quantize launch emitted.
+    """
+
+    history_len: int = 16
+    margin: int = 0
+    name: str = "delayed"
+    stateful: bool = True
+
+    def __post_init__(self):
+        if self.history_len < 1:
+            raise ValueError("delayed scaling needs history_len >= 1")
+
+    def payload_delta(self, spec) -> int:
+        # the effective scales ride as one FP32 scalar per quantized leaf
+        # (the receiver holds no history)
+        return 4 * len(spec.q_slots)
+
+    def init_state(self, alphas0):
+        a0 = _f32(alphas0).reshape(-1)
+        return jnp.tile(a0[None, :], (self.history_len, 1))
+
+    def effective(self, hist):
+        """Effective per-leaf clip alphas from the history buffer."""
+        # 2**margin is an exact power-of-two multiply: mantissas untouched
+        a = jnp.exp2(jnp.float32(self.margin)) * jnp.max(hist, axis=0)
+        return jnp.maximum(a, fp8._ALPHA_FLOOR)
+
+    def update(self, hist, amax):
+        """Rotate the window: drop the oldest row, append this round's."""
+        row = _f32(amax).reshape(1, -1)
+        return jnp.concatenate([hist[1:], row], axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerRoundFrozenScaling(ScalingPolicy):
+    """Downlink reuse of the scales the receiver already holds.
+
+    The round's broadcast model was produced last round, so "last round's
+    scales" ARE its own trained alpha leaves — both ends can derive them,
+    and no alpha needs to cross the wire. Stateless; downlink only.
+    """
+
+    name: str = "frozen"
+
+    def payload_delta(self, spec) -> int:
+        # alpha columns drop off the payload entirely
+        return -4 * len(spec.q_slots)
+
+
+CURRENT = CurrentScaling()
+
+
+def leaf_alphas(params, spec):
+    """Trained per-quantized-leaf clip alphas of ``params`` as an (n_q,).
+
+    For scalar ``_qa`` clip leaves (``spec.alpha_cols_ok``, the QAT
+    default) this is the raw trained value, bit for bit. Stacked
+    per-layer clips ``(L, 1, ..., 1)`` reduce to their max — the
+    conservative one-scalar-per-leaf scale delayed scaling seeds from
+    (frozen additionally *requires* scalar clips, see
+    :func:`require_column_alphas`).
+
+    RAW values (no floor): the floor is applied where the clip column is
+    built (``codec._scaled_alpha_col``), exactly as the no-policy wire
+    floors at ``wire._alpha_tiles`` — so frozen splice-back stays bitwise
+    equal to shipping the alpha leaves.
+    """
+    flat = jax.tree_util.tree_leaves(params)
+    vals = [
+        jnp.max(_f32(flat[spec.other_slots[ai]]))
+        for ai in spec.alpha_pos
+    ]
+    return jnp.stack(vals) if vals else jnp.zeros((0,), jnp.float32)
+
+
+def require_column_alphas(spec, policy):
+    """Non-current policies need one scalar clip per quantized leaf."""
+    if not spec.alpha_cols_ok:
+        raise ValueError(
+            f"scaling policy '{policy.name}' requires scalar per-leaf clip "
+            "alphas (spec.alpha_cols_ok); per-channel clips are unsupported"
+        )
+
+
+def get_policy(p: Any) -> ScalingPolicy:
+    """Resolve a policy spec: None/'' -> current (the deprecation map —
+    the historical no-knob behavior IS ``current``), a name string
+    ('current', 'frozen'/'per_round_frozen', 'delayed', 'delayed:H',
+    'delayed:H:M'), or a ScalingPolicy instance passthrough."""
+    if p is None or p == "":
+        return CURRENT
+    if isinstance(p, ScalingPolicy):
+        return p
+    if isinstance(p, str):
+        s = p.strip().lower()
+        if s == "current":
+            return CURRENT
+        if s in ("frozen", "per_round_frozen"):
+            return PerRoundFrozenScaling()
+        if s == "delayed":
+            return DelayedScaling()
+        if s.startswith("delayed:"):
+            parts = s.split(":")[1:]
+            if len(parts) == 1:
+                return DelayedScaling(history_len=int(parts[0]))
+            if len(parts) == 2:
+                return DelayedScaling(history_len=int(parts[0]),
+                                      margin=int(parts[1]))
+            raise ValueError(f"bad delayed scaling spec: {p!r}")
+        raise ValueError(
+            f"unknown scaling policy {p!r} (want current | delayed[:H[:M]] "
+            "| frozen)"
+        )
+    raise TypeError(f"scaling policy must be str or ScalingPolicy, got {type(p)}")

@@ -99,6 +99,7 @@ class WireSpec:
     alpha_pos: tuple[int, ...]         # index into `other` of each leaf's alpha
     n_other_elems: int
     alpha_cols_ok: bool = False        # every alpha scalar -> (R, 1) column
+    alpha_shapes: tuple = ()           # per-leaf alpha shape (splice-back)
 
     @property
     def n_leaves(self) -> int:
@@ -153,6 +154,9 @@ def make_wire_spec(params: PyTree) -> WireSpec:
         n_other_elems=n_other,
         alpha_cols_ok=all(
             int(flat[other_slots[ai]][1].size) == 1 for ai in alpha_pos
+        ),
+        alpha_shapes=tuple(
+            tuple(flat[other_slots[ai]][1].shape) for ai in alpha_pos
         ),
     )
 

@@ -325,6 +325,47 @@ def unpack_sub_tiles(c2: Array, a2: Array, fmt: FP8Format | None = None) -> Arra
     return fp8.unpack_fp8(code, a2, fmt).astype(jnp.float32)
 
 
+def _rowmax_jnp(x2):
+    return jnp.max(jnp.abs(x2.astype(jnp.float32)), axis=1, keepdims=True)
+
+
+def quant_pack_amax_tiles(
+    x2: Array,                   # (R, LANE) wire tile layout
+    a2: Array,                   # (R, 1) or (R, LANE) clipping values
+    key2: Array | None = None,   # (2,) u32 key -> stochastic; None -> det
+    fmt: FP8Format = E4M3,
+) -> tuple[Array, Array]:
+    """:func:`quant_pack_tiles` + per-row raw amax from the SAME launch.
+
+    Delayed scaling's history update (``core.scaling.DelayedScaling``)
+    consumes the ``(R, 1)`` rowmax — computed as a byproduct of the
+    quantize kernel, never as a standalone reduction. Codes are
+    bit-identical to :func:`quant_pack_tiles`.
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.quant_pack_amax_tiles(
+            x2, a2, key2, fmt=fmt, interpret=interp
+        )
+    return _quant_codes_jnp(x2, a2, key2, fmt), _rowmax_jnp(x2)
+
+
+def quant_pack_sub_amax_tiles(
+    x2: Array,                   # (R, LANE) wire tile layout
+    a2: Array,                   # (R, 1) or (R, LANE) clipping values
+    key2: Array | None = None,   # (2,) u32 key -> stochastic; None -> det
+    fmt: FP8Format | None = None,
+) -> tuple[Array, Array]:
+    """Sub-byte :func:`quant_pack_sub_tiles` + fused per-row raw amax."""
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.quant_pack_sub_amax_tiles(
+            x2, a2, key2, fmt=fmt, interpret=interp
+        )
+    codes = fp8_quant.fold_codes(_quant_codes_jnp(x2, a2, key2, fmt), fmt)
+    return codes, _rowmax_jnp(x2)
+
+
 # ---------------------------------------------------------------------------
 # Parameter-plane entry points (see core.plane): fused tiled Q_det with a
 # custom VJP, and a differentiable quantize-dequantize for the UQ+ server
@@ -420,3 +461,43 @@ def fake_quant_tiles(
             x2, a2, key2, fmt=fmt, interpret=interp
         )
     return fp8_quant.fake_quant_tiles_jnp(x2, a2, key2, fmt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant_amax_plane(x2, a_col, key2, fmt):
+    """:func:`fake_quant_plane` + fused per-row raw amax, differentiable.
+
+    Forward returns ``(q (R, LANE), rowmax (R, 1))`` from one launch; the
+    backward is the SAME STE as ``fake_quant_plane`` (the amax output is a
+    monitoring byproduct — its cotangent is ignored, matching TE's
+    non-differentiable amax history).
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return fp8_quant.fake_quant_amax_tiles(
+            x2, a_col, key2, fmt=fmt, interpret=interp
+        )
+    return fp8_quant.fake_quant_amax_tiles_jnp(x2, a_col, key2, fmt)
+
+
+def _fake_quant_amax_plane_fwd(x2, a_col, key2, fmt):
+    q, mx = fake_quant_amax_plane(x2, a_col, key2, fmt)
+    return (q, mx), (x2, a_col, key2, q)
+
+
+def _fake_quant_amax_plane_bwd(fmt, res, g):
+    x2, a_col, key2, q = res
+    gq, _g_amax = g
+    a = jnp.maximum(a_col, fp8._ALPHA_FLOOR)
+    inside = (jnp.abs(x2) <= a).astype(jnp.float32)
+    xc = jnp.clip(x2, -a, a)
+    gx = gq * inside
+    ga_row = jnp.sum(
+        gq * (jnp.sign(x2) * (1.0 - inside) + (q - xc) / a),
+        axis=1, keepdims=True,
+    )
+    return gx, ga_row, _zero_bits_cotangent(key2)
+
+
+fake_quant_amax_plane.defvjp(_fake_quant_amax_plane_fwd,
+                             _fake_quant_amax_plane_bwd)

@@ -269,7 +269,7 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
                     wire: str = "fp8", aggregator=None,
                     state_specs: PyTree | None = None,
                     codec=None, partial: bool = False,
-                    min_quorum: int = 0):
+                    min_quorum: int = 0, scaling=None):
     """FedAvg round boundary over ``fl_axes`` as a shard_map'd collective.
 
     ``wire='fp8'`` moves uint8 codes (the paper's 4x compression as actual
@@ -312,8 +312,41 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
     participates in the *collective* (SPMD programs cannot drop a
     participant mid-step); what the mask models is its *payload* being
     rejected at the boundary.
+
+    ``scaling`` (aggregator path only): a ``core.scaling`` policy —
+    ``'current'``/None keeps today's trained-clip grid bit-for-bit;
+    ``'delayed[:H[:M]]'`` derives the boundary's shared grid from a
+    rolling amax history threaded in ``comm_state["scales"]`` (seed it
+    via ``comm_round_state(..., scaling=...)``), updated each boundary
+    from the fused quantize launch's amax byproduct pmax'd across silos
+    — no fresh reduction, and no ``sync_alphas`` pmax either (the
+    history IS the shared grid). ``'frozen'`` is rejected: the gathered
+    models are freshly trained per silo, so there are no already-held
+    scales to reuse (the same reason the simulator rejects frozen
+    uplinks). Under ``partial=True`` the history row is the
+    pre-rejection pmax — a dead silo's amax still rode the collective,
+    which is conservative (never under-scales), and a below-quorum
+    discarded round leaves the history untouched.
     """
     from jax.experimental.shard_map import shard_map
+
+    from ..core import scaling as scaling_lib
+
+    policy = scaling_lib.get_policy(scaling)
+    if not policy.is_current:
+        if aggregator is None:
+            raise ValueError(
+                "scaling= needs the aggregator path (the fused "
+                "in-collective mean owns its own grid); pass an Aggregator"
+            )
+        if not isinstance(policy, scaling_lib.DelayedScaling):
+            raise ValueError(
+                f"make_comm_round supports scaling='current' or "
+                f"'delayed[:H[:M]]' only, got {policy.name!r} (frozen is a "
+                "simulator downlink policy — freshly-trained silo models "
+                "have no already-held scales to reuse)"
+            )
+    scaled = not policy.is_current
 
     def _perturb(params):
         # In the dry-run, params enter pod-replicated; real FL silos hold
@@ -375,12 +408,25 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
     if state_specs is None:
         state_specs = aggregator_state_specs(aggregator, param_specs)
     comm_specs = {"prev": param_specs, "opt": state_specs}
+    if scaled:
+        comm_specs["scales"] = P()
 
     resolved_codec = None
     if codec is not None:
         from ..core import codec as codec_lib
 
         resolved_codec = codec_lib.get_codec(codec)
+    if scaled:
+        from ..core import codec as codec_lib
+
+        boundary_codec = (resolved_codec if resolved_codec is not None
+                          else codec_lib.codec_for(qcfg.fmt, mode))
+        if not isinstance(boundary_codec, codec_lib.Fp8Codec):
+            raise ValueError(
+                f"scaling={policy.name!r} needs a plain FP8-family "
+                f"boundary codec, got {type(boundary_codec).__name__} "
+                "(no FP32 passthrough or DeltaCodec)"
+            )
 
     def body_agg(params, comm_state, key, alive=None):
         params = _perturb(params)
@@ -389,10 +435,19 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
         # 'none' (f32 gather — the FP32 baseline); codec= overrides with a
         # first-class wire codec, ref = the previous global model (the one
         # tree every silo is guaranteed to share — see docstring)
-        stacked = compression.fp8_wire_allgather(
-            params, k_wire, fl_axes, qcfg.fmt, mode=mode,
-            codec=resolved_codec, ref=comm_state["prev"],
-        )
+        if scaled:
+            a_eff = policy.effective(comm_state["scales"])
+            stacked, amax = compression.fp8_wire_allgather(
+                params, k_wire, fl_axes, qcfg.fmt, mode=mode,
+                codec=resolved_codec, alpha_override=a_eff,
+                collect_amax=True,
+            )
+            new_scales = policy.update(comm_state["scales"], amax)
+        else:
+            stacked = compression.fp8_wire_allgather(
+                params, k_wire, fl_axes, qcfg.fmt, mode=mode,
+                codec=resolved_codec, ref=comm_state["prev"],
+            )
         nk = jnp.ones((n_silos,), jnp.float32)
         if alive is not None:
             # the simulator fault layer's contract at the silo boundary:
@@ -420,7 +475,13 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
             )
             new_params = keep(new_params, comm_state["prev"])
             new_opt = keep(new_opt, comm_state["opt"])
-        return new_params, {"prev": new_params, "opt": new_opt}
+            if scaled:
+                # a discarded round must not advance the amax history
+                new_scales = keep(new_scales, comm_state["scales"])
+        out_state = {"prev": new_params, "opt": new_opt}
+        if scaled:
+            out_state["scales"] = new_scales
+        return new_params, out_state
 
     if partial:
         from ..core.faults import quorum_count
@@ -443,15 +504,30 @@ def make_comm_round(mesh, param_specs: PyTree, fl_axes: tuple[str, ...],
     )
 
 
-def comm_round_state(aggregator, params: PyTree) -> dict:
+def comm_round_state(aggregator, params: PyTree, scaling=None) -> dict:
     """Initial threaded state for ``make_comm_round(aggregator=...)``: the
     global model every silo starts from + the aggregator's opt state.
+
+    Pass the same ``scaling`` given to :func:`make_comm_round` — a delayed
+    policy adds a ``"scales"`` history seeded from the model's trained
+    clip alphas (round 0 matches the no-history recipe).
 
     ``prev`` is a COPY, not an alias: trainers donate their param buffers
     to the jitted step (``donate_argnums``), which would delete an aliased
     ``prev`` out from under the next boundary / checkpoint."""
-    return {"prev": jax.tree.map(lambda x: jnp.array(x), params),
-            "opt": aggregator.init(params)}
+    state = {"prev": jax.tree.map(lambda x: jnp.array(x), params),
+             "opt": aggregator.init(params)}
+    from ..core import scaling as scaling_lib
+
+    policy = scaling_lib.get_policy(scaling)
+    if not policy.is_current:
+        from ..core import wire as wire_lib
+
+        spec = wire_lib.make_wire_spec(params)
+        state["scales"] = policy.init_state(
+            scaling_lib.leaf_alphas(params, spec)
+        )
+    return state
 
 
 def make_prefill_step(model: Model, qcfg: QATConfig):

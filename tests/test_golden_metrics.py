@@ -95,6 +95,12 @@ VARIANTS = {
         comm_mode="rand", qat=QATConfig(),
         codec_schedule=CodecSchedule(("e5m2", "fp4"), (1,)),
     ),
+    # --- scaling-policy variants (ISSUE 8): delayed / frozen wires ------
+    "delayed_wire_mean": dict(comm_mode="rand", qat=QATConfig(),
+                              down_scaling="delayed:4",
+                              up_scaling="delayed:4:1"),
+    "frozen_down_mean": dict(comm_mode="rand", qat=QATConfig(),
+                             down_scaling="frozen"),
     # --- 2D federated mesh variants (ISSUE 7): clients x fsdp -----------
     # ``mesh2d`` resolves lazily to make_fed_mesh(C, F) + model_axis so
     # importing this module never touches device state; the test skips
