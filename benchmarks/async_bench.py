@@ -25,6 +25,13 @@ version and the sync server averages a ``cohort``-sized batch per round
 — ``buffer_size == cohort`` here, so both apply equally many client
 updates per model step. Async additionally keeps ``concurrency`` clients
 busy, which is the whole point: utilization does not stall on the tail.
+
+**Fault-matched sweep** (``bench: "async_fault"`` rows, ISSUE 9): the
+same pareto fleet under one full :class:`FaultModel` (dropout + deadline
++ corruption), hardened-async (deadline cancellation, push-boundary
+rejection, staleness cutoff, EMA pacing) against the sync engine under
+each quorum policy (``skip``/``degrade``) — time-to-accuracy and exact
+cumulative bytes per engine, plus the async fault counters.
 """
 from __future__ import annotations
 
@@ -137,16 +144,127 @@ def run(full: bool = False, out_rows=None, seed: int = 0):
     return rows
 
 
+def run_faulted(full: bool = False, out_rows=None, seed: int = 0):
+    """The ROADMAP comparison: hardened-async vs sync quorum policies on
+    the SAME fleet under the SAME FaultModel (pareto stragglers + 10%
+    dropout + 5% corruption + a finite deadline)."""
+    if full:
+        scale = dict(k=100, n_train=20000, n_test=4000, local_steps=20,
+                     batch=32, cohort=10, concurrency=30, rounds=120,
+                     eval_every=2)
+    else:
+        scale = dict(k=24, n_train=3000, n_test=800, local_steps=8,
+                     batch=32, cohort=6, concurrency=12, rounds=30,
+                     eval_every=2)
+    rows = out_rows if out_rows is not None else []
+    params, loss, apply, opt, data, evald = _setup(scale, seed)
+    cx, cy, nk = data
+    P = scale["cohort"]
+    fm = FaultModel(dropout=0.1, straggler="pareto", straggler_scale=1.0,
+                    straggler_param=1.1, deadline=8.0, corrupt=0.05,
+                    seed=seed)
+    base = dict(n_clients=scale["k"], participation=P / scale["k"],
+                local_steps=scale["local_steps"], batch_size=scale["batch"])
+
+    # --- hardened async: same fleet/fault model, no barrier -------------
+    acfg = AsyncConfig(buffer_size=P, concurrency=scale["concurrency"],
+                       staleness_alpha=0.5, staleness_cutoff=10,
+                       pacing="ema", seed=seed)
+    eng = BufferedAsyncEngine(loss, opt, FedConfig(**base), acfg)
+    _, h_async = eng.run(
+        params, cx, cy, jax.random.PRNGKey(seed + 99),
+        folds=scale["rounds"], faults=fm, predict_fn=apply,
+        eval_data=evald, eval_every=scale["eval_every"],
+    )
+
+    # --- sync quorum policies under the identical FaultModel ------------
+    for policy in ("skip", "degrade"):
+        sync_cfg = FedConfig(faults=fm, min_quorum=0.5,
+                             quorum_policy=policy, **base)
+        sim = FedSim(params, loss, apply, opt, sync_cfg, cx, cy, nk)
+        h_sync = sim.run(scale["rounds"], jax.random.PRNGKey(seed + 99),
+                         eval_data=evald, eval_every=scale["eval_every"])
+        target = round(0.98 * min(h_sync.best_accuracy(),
+                                  h_async.best_accuracy()), 4)
+        t_sync = h_sync.time_to_accuracy(target)
+        t_async = h_async.time_to_accuracy(target)
+        rows.append({
+            "bench": "async_fault",
+            "dist": "pareto",
+            "quorum_policy": policy,
+            "target_acc": target,
+            "sync_s": None if t_sync is None else round(t_sync, 2),
+            "async_s": None if t_async is None else round(t_async, 2),
+            "speedup": (
+                None if not t_sync or not t_async
+                else round(t_sync / t_async, 3)
+            ),
+            "sync_best_acc": round(h_sync.best_accuracy(), 4),
+            "async_best_acc": round(h_async.best_accuracy(), 4),
+            "sync_mbytes": round(h_sync.cumulative_bytes[-1] / 1e6, 3),
+            "async_mbytes": round(h_async.cumulative_bytes[-1] / 1e6, 3),
+            "async_n_cancelled": h_async.n_cancelled[-1],
+            "async_n_rejected": h_async.n_rejected[-1],
+            "async_n_folded": h_async.n_folded[-1],
+            "async_mean_staleness": (
+                round(h_async.mean_staleness[-1], 3)
+                if h_async.mean_staleness else 0.0
+            ),
+        })
+    return rows
+
+
+def smoke(out_rows=None):
+    """Seconds-scale hardened-async fold check for the CI bench-smoke
+    job: a tiny faulted fleet (deadline + dropout + corruption + cutoff +
+    EMA pacing) must fold — the engine asserts static == traced byte
+    accounting at every snapshot, so merely completing IS the check."""
+    rows = out_rows if out_rows is not None else []
+    scale = dict(k=8, n_train=480, n_test=160, local_steps=2, batch=16,
+                 cohort=2, concurrency=4, rounds=2, eval_every=1)
+    params, loss, apply, opt, data, evald = _setup(scale)
+    cx, cy, _ = data
+    fm = FaultModel(dropout=0.2, straggler="pareto", straggler_scale=1.0,
+                    straggler_param=1.1, deadline=6.0, corrupt=0.1)
+    acfg = AsyncConfig(buffer_size=scale["cohort"],
+                       concurrency=scale["concurrency"],
+                       staleness_alpha=0.5, staleness_cutoff=6,
+                       pacing="ema")
+    eng = BufferedAsyncEngine(
+        loss, opt,
+        FedConfig(n_clients=scale["k"], participation=0.5,
+                  local_steps=scale["local_steps"],
+                  batch_size=scale["batch"]),
+        acfg,
+    )
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0),
+                      folds=scale["rounds"], faults=fm, predict_fn=apply,
+                      eval_data=evald, eval_every=scale["eval_every"])
+    assert hist.n_folded[-1] >= scale["rounds"] * scale["cohort"] // 2
+    rows.append({
+        "bench": "async_smoke",
+        "name": "hardened_fold",
+        "folds": len(hist.versions),
+        "n_cancelled": hist.n_cancelled[-1],
+        "n_rejected": hist.n_rejected[-1],
+        "n_folded": hist.n_folded[-1],
+        "mbytes": round(hist.cumulative_bytes[-1] / 1e6, 3),
+    })
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     rows = run(args.full)
+    run_faulted(args.full, out_rows=rows)
     with open("BENCH_async.json", "w") as f:
         json.dump(rows, f, indent=2)
-    print("dist,target_acc,sync_s,async_s,speedup")
+    print("dist,policy,target_acc,sync_s,async_s,speedup")
     for r in rows:
-        print(f"{r['dist']},{r['target_acc']},{r['sync_s']},"
+        print(f"{r['dist']},{r.get('quorum_policy', '-')},"
+              f"{r['target_acc']},{r['sync_s']},"
               f"{r['async_s']},{r['speedup']}")
 
 

@@ -17,9 +17,10 @@ def main() -> None:
     ap.add_argument("--only", nargs="*",
                     help="subset of: kernel table1 table2 fig2 format async")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke mode: only the scaling-policy encode rows "
-                         "(1D + 2x4 fed2d) — seconds of wall-clock, verifies "
-                         "the bench harness stays runnable")
+                    help="CI smoke mode: the scaling-policy encode rows "
+                         "(1D + 2x4 fed2d) plus a seconds-scale "
+                         "hardened-async fold check — verifies the bench "
+                         "harness AND the async event loop stay runnable")
     args = ap.parse_args()
     which = set(args.only or ["kernel", "table1", "table2", "fig2"])
 
@@ -31,9 +32,17 @@ def main() -> None:
     if args.quick:
         kernel_bench._scaling_benches(rows)
         kernel_bench._scaling_fed2d_benches(rows)
+        async_bench.smoke(rows)
         print("name,us_per_call,derived")
         for r in rows:
-            print(f"kernel/{r['name']},{r['us_per_call']},{r['derived']}")
+            if r["bench"] == "async_smoke":
+                print(f"async-smoke/{r['name']},,folds={r['folds']} "
+                      f"cancelled={r['n_cancelled']} "
+                      f"rejected={r['n_rejected']} folded={r['n_folded']} "
+                      f"MB={r['mbytes']}")
+            else:
+                print(f"kernel/{r['name']},{r['us_per_call']},"
+                      f"{r['derived']}")
         print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
         return
     if "kernel" in which:
@@ -48,6 +57,7 @@ def main() -> None:
         format_ablation.run(full=args.full, out_rows=rows)
     if "async" in which:
         async_bench.run(full=args.full, out_rows=rows)
+        async_bench.run_faulted(full=args.full, out_rows=rows)
 
     # uniform CSV: name,us_per_call,derived
     print("name,us_per_call,derived")
@@ -76,6 +86,12 @@ def main() -> None:
         elif r["bench"] == "async":
             print(f"async/{r['dist']},,sync_s={r['sync_s']} "
                   f"async_s={r['async_s']} speedup={r['speedup']}x")
+        elif r["bench"] == "async_fault":
+            print(f"async-fault/{r['dist']}/{r['quorum_policy']},,"
+                  f"sync_s={r['sync_s']} async_s={r['async_s']} "
+                  f"speedup={r['speedup']}x "
+                  f"cancelled={r['async_n_cancelled']} "
+                  f"rejected={r['async_n_rejected']}")
     print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -38,25 +38,69 @@ threaded). The momentum buffer travels in ``ServerState.opt`` exactly
 like the sync engine's FedAvgM state, so checkpoints treat both engines
 identically.
 
+**Staleness guards.** Two further knobs harden the fold against very
+stale updates: a hard ``staleness_cutoff`` drops any buffered update with
+``s > cutoff`` *before* the fold — the surviving weights renormalize
+(``w / sum(w)`` over the survivors), and a buffer with no survivor at all
+discards its fold entirely (version unchanged, the event loop keeps
+collecting) — and ``clip_norm`` caps each update's whole-tree L2 norm at
+``clip_norm * (1 + s) ** -staleness_alpha`` so a stale (or merely huge)
+update cannot dominate the fold even when its weight survives. Both
+default to off (``inf``) and are statically elided: the default fold is
+the verbatim pre-guard computation.
+
+**Faults.** The sync fault contract (``core.faults.FaultModel``) carries
+over per *job*, with the same transmitted-payloads-only byte accounting:
+
+* **Dropout** — iid Bernoulli(``dropout``) per job: the client pulled
+  (downlink charged) but its push never arrives — 0 uplink bytes.
+* **Deadline cancellation** — a job whose latency exceeds
+  ``faults.deadline`` is cancelled *at the deadline instant*: its slot
+  frees then (not at its would-be completion), its base version is
+  released then, and it charges the pull plus the deadline-proportional
+  partial uplink ``floor(push_bytes * deadline / latency)`` it managed to
+  transmit before the cut. The cancelled update never reaches the buffer.
+* **Corruption rejection at the push boundary** — Bernoulli(``corrupt``)
+  per transmitted push, drawn from the *job key* (the same fold-in tag
+  the sync draw uses). With ``corrupt_detect`` the server checksum
+  rejects the damaged payload: it charges **full uplink bytes** (it
+  transmitted!) but is excluded from the buffer — mirroring the sync
+  detected-corrupt contract. Without detection the damage goes through:
+  ``corrupt_tree`` flips real bits in the f32 update and the fold eats it
+  (the ablation showing why the checksum is not optional).
+
+**Adaptive pacing.** ``pacing='uniform'`` (default) dispatches a freed
+slot to a uniformly-sampled idle client — trajectory-identical to the
+pre-fault event loop. ``pacing='ema'`` damps each client's dispatch
+probability by an exponential moving average of its observed outcome
+record (1 = push entered the buffer, 0 = dropped/cancelled/rejected), so
+chronically-failing clients stop monopolizing slots; ``pacing_floor``
+keeps every idle client dispatchable (no starvation).
+
 **Timing and byte accounting.** The event loop is a simulated clock over
 the pool's deterministic per-client latencies: a freed slot immediately
-dispatches the next (uniformly sampled, currently-idle) client; its push
-lands ``latency[c]`` simulated seconds later. Every dispatched job
-charges one downlink model copy (the pull) at dispatch and one uplink
-payload (the push) at completion — a client that *drops* (an active
-``FaultModel``'s dropout applied per job) charges the pull but never the
-push, the same transmitted-payloads-only contract as the sync fault
-layer. All counts delegate to the link codecs, so they are exact for
-FP8 / sub-byte / delta wires alike.
+dispatches the next idle client; its push lands ``latency[c]`` simulated
+seconds later (or its cancellation at the deadline). Every dispatched
+job charges one downlink model copy (the pull) at dispatch; completions
+charge the uplink per the fault outcome above. All counts delegate to
+the link codecs, so they are exact for FP8 / sub-byte / delta wires
+alike, and the loop asserts at every history snapshot that the traced
+cumulative charge equals the static reconstruction
+``pulls * pull_b + full_pushes * push_b + sum(partials)`` and respects
+the static worst-case bound ``pulls * (pull_b + push_b)``.
 
 The loop is deterministic in ``(seed, configuration)`` — sampling comes
 from a seeded numpy generator and per-job jax keys are folded out of one
-root key — so golden tests can pin its trajectory.
+root key — so golden tests can pin its trajectory. A fleet that can
+never fold (every latency past the deadline, or a long run of rejected
+pushes) terminates with a ``RuntimeWarning`` instead of spinning forever.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -65,11 +109,28 @@ import numpy as np
 
 from . import wire
 from .engine import FedConfig, ServerState, WireLink, make_local_update
-from .faults import FaultModel
+from .faults import _FAULT_TAG, FaultModel
 from ..optim.base import Optimizer
 
 Array = jax.Array
 PyTree = Any
+
+# consecutive events without a buffered push before the loop declares the
+# fleet degenerate and stops (P[trip] under a legitimate 90%-failure fleet
+# is 0.9^1000 ~ 1e-46 — this only fires when no push can ever land)
+_STALL_LIMIT = 1000
+
+
+def _active_fault(fm: FaultModel | None) -> FaultModel | None:
+    """Normalize a FaultModel to None when it is statically inert for the
+    async loop (no dropout/corruption/straggler AND no finite deadline —
+    unlike the sync engine, a bare finite deadline is active here: it
+    cancels against whatever latency table is in effect)."""
+    if fm is None:
+        return None
+    if fm.is_none and math.isinf(fm.deadline):
+        return None
+    return fm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +143,13 @@ class AsyncConfig:
     server_lr: float = 1.0       # eta on the folded delta
     server_momentum: float = 0.0  # beta on the server momentum buffer
     seed: int = 0                # dispatch-sampling seed
+    # --- staleness guards (inf == off, statically elided) ----------------
+    staleness_cutoff: float = math.inf  # drop updates with s > cutoff
+    clip_norm: float = math.inf  # L2 cap per update: clip*(1+s)^-alpha
+    # --- adaptive pacing (uniform == the pre-fault dispatch, verbatim) ---
+    pacing: str = "uniform"      # uniform | ema
+    pacing_decay: float = 0.9    # EMA memory of the per-client record
+    pacing_floor: float = 0.05   # minimum dispatch weight (no starvation)
 
     def __post_init__(self):
         if self.buffer_size <= 0:
@@ -104,6 +172,32 @@ class AsyncConfig:
                 f"AsyncConfig.server_momentum must be in [0, 1), got "
                 f"{self.server_momentum}"
             )
+        if math.isnan(self.staleness_cutoff) or self.staleness_cutoff < 0:
+            raise ValueError(
+                f"AsyncConfig.staleness_cutoff must be >= 0 (inf = off), "
+                f"got {self.staleness_cutoff}"
+            )
+        if math.isnan(self.clip_norm) or self.clip_norm <= 0:
+            raise ValueError(
+                f"AsyncConfig.clip_norm must be > 0 (inf = off), got "
+                f"{self.clip_norm}"
+            )
+        if self.pacing not in ("uniform", "ema"):
+            raise ValueError(
+                f"AsyncConfig.pacing {self.pacing!r}: 'uniform' (the "
+                "trajectory-identical default) or 'ema' (damp dispatch by "
+                "each client's outcome record)"
+            )
+        if not 0.0 <= self.pacing_decay < 1.0:
+            raise ValueError(
+                f"AsyncConfig.pacing_decay must be in [0, 1), got "
+                f"{self.pacing_decay}"
+            )
+        if not 0.0 < self.pacing_floor <= 1.0:
+            raise ValueError(
+                f"AsyncConfig.pacing_floor must be in (0, 1], got "
+                f"{self.pacing_floor}"
+            )
 
     @property
     def has_momentum(self) -> bool:
@@ -112,7 +206,13 @@ class AsyncConfig:
 
 @dataclasses.dataclass
 class AsyncHistory:
-    """Trajectory of one async run, sampled every ``eval_every`` folds."""
+    """Trajectory of one async run, sampled every ``eval_every`` folds.
+
+    The fault counters are cumulative at each snapshot: ``n_cancelled``
+    jobs cut at the deadline, ``n_rejected`` pushes refused by the
+    checksum, ``n_folded`` updates that actually entered the model (folds
+    minus staleness-cutoff discards).
+    """
 
     versions: list[int] = dataclasses.field(default_factory=list)
     time: list[float] = dataclasses.field(default_factory=list)
@@ -120,6 +220,9 @@ class AsyncHistory:
     loss: list[float] = dataclasses.field(default_factory=list)
     cumulative_bytes: list[int] = dataclasses.field(default_factory=list)
     mean_staleness: list[float] = dataclasses.field(default_factory=list)
+    n_cancelled: list[int] = dataclasses.field(default_factory=list)
+    n_rejected: list[int] = dataclasses.field(default_factory=list)
+    n_folded: list[int] = dataclasses.field(default_factory=list)
 
     def best_accuracy(self) -> float:
         return max(self.accuracy) if self.accuracy else 0.0
@@ -144,9 +247,12 @@ class BufferedAsyncEngine:
     solver, :class:`WireLink` (any non-scheduled codec pair, DeltaCodec
     uplink included) for both wire legs, and ``ServerState`` (``opt`` =
     momentum buffer or ``()``, ``round`` = the int32 version counter) for
-    the threaded state. CodecSchedules are rejected: the schedule's
-    round-index contract is a *sync* notion (one global round counter);
-    async updates land against whatever version they pulled.
+    the threaded state. Sync-only knobs are rejected eagerly instead of
+    silently half-applied: CodecSchedules (the schedule's round-index
+    contract assumes one global round counter) and
+    ``FedConfig.min_quorum``/``quorum_policy`` (a cohort-barrier notion —
+    the async server folds fixed-size buffers; use
+    ``AsyncConfig.buffer_size``/``staleness_cutoff`` instead).
     """
 
     def __init__(
@@ -169,6 +275,13 @@ class BufferedAsyncEngine:
                 "BufferedAsyncEngine does not take a CodecSchedule: "
                 "per-round schedules assume the sync engine's single "
                 "global round counter"
+            )
+        if cfg.min_quorum or cfg.quorum_policy != "skip":
+            raise ValueError(
+                "FedConfig.min_quorum/quorum_policy are sync-round "
+                "(cohort-barrier) notions the async engine cannot honor — "
+                "it folds fixed-size buffers; use AsyncConfig.buffer_size "
+                "and staleness_cutoff instead"
             )
         self._local_update = make_local_update(loss_fn, optimizer, cfg)
         self._job = jax.jit(self._build_job())
@@ -203,15 +316,35 @@ class BufferedAsyncEngine:
         return job
 
     def _build_fold(self):
-        """Fold K buffered updates into the global model (see module
-        docstring for the staleness math)."""
+        """Fold the buffered updates into the global model (see module
+        docstring for the staleness math). The clip-norm guard is gated
+        statically: with ``clip_norm=inf`` the emitted computation is the
+        verbatim pre-guard fold."""
         acfg = self.acfg
 
         def fold(state: ServerState, stacked: PyTree, staleness: Array):
-            w = (1.0 + staleness.astype(jnp.float32)) ** (
+            disc = (1.0 + staleness.astype(jnp.float32)) ** (
                 -acfg.staleness_alpha
             )
-            w = w / jnp.sum(w)
+            w = disc / jnp.sum(disc)
+            if math.isfinite(acfg.clip_norm):
+                sq = sum(
+                    jnp.sum(
+                        jnp.square(u.astype(jnp.float32)),
+                        axis=tuple(range(1, u.ndim)),
+                    )
+                    for u in jax.tree.leaves(stacked)
+                )
+                cap = acfg.clip_norm * disc
+                scale = jnp.minimum(
+                    1.0, cap / jnp.maximum(jnp.sqrt(sq), 1e-12)
+                )
+                stacked = jax.tree.map(
+                    lambda u: u * scale.reshape(
+                        (-1,) + (1,) * (u.ndim - 1)
+                    ),
+                    stacked,
+                )
 
             def wmean(u):
                 wc = w.reshape((-1,) + (1,) * (u.ndim - 1))
@@ -248,9 +381,48 @@ class BufferedAsyncEngine:
 
     def job_bytes(self, params: PyTree) -> tuple[int, int]:
         """(pull, push) bytes of one client job — exact, per the link
-        codecs. A dropped job charges only the pull."""
+        codecs. A dropped job charges only the pull; a cancelled job the
+        pull plus ``floor(push * deadline / latency)``; a rejected push
+        the full pull + push."""
         spec = wire.make_wire_spec(params)
         return self.link.down_bytes(spec), self.link.up_bytes(spec)
+
+    def fold_buffer(
+        self,
+        state: ServerState,
+        updates: list[PyTree],
+        staleness: list[int],
+        losses: list[float],
+    ) -> tuple[ServerState, float | None, int]:
+        """Apply one buffer fold under the staleness guards.
+
+        Updates with ``s > staleness_cutoff`` are dropped before the fold
+        — the surviving weights renormalize inside ``_fold`` (its
+        ``w / sum(w)`` now runs over the survivor subset). When nothing
+        survives the fold is discarded: the returned state is the input
+        state (version unchanged). Returns ``(state, fold_loss, n_kept)``
+        where ``fold_loss`` is the staleness-weighted mean of the
+        surviving clients' local losses (None when discarded).
+        """
+        cut = self.acfg.staleness_cutoff
+        if math.isfinite(cut):
+            keep = [i for i, s in enumerate(staleness) if s <= cut]
+            if not keep:
+                return state, None, 0
+            updates = [updates[i] for i in keep]
+            staleness = [staleness[i] for i in keep]
+            losses = [losses[i] for i in keep]
+        stacked = jax.tree.map(lambda *us: jnp.stack(us), *updates)
+        state = self._fold(
+            state, stacked, jnp.asarray(staleness, jnp.int32)
+        )
+        w = (1.0 + np.asarray(staleness, np.float64)) ** (
+            -self.acfg.staleness_alpha
+        )
+        fold_loss = float(
+            np.sum(w * np.asarray(losses, np.float64)) / np.sum(w)
+        )
+        return state, fold_loss, len(updates)
 
     # --- the event loop ----------------------------------------------------
 
@@ -273,18 +445,37 @@ class BufferedAsyncEngine:
 
         ``latencies`` is the pool's per-client job duration table
         (``data.federated.client_latencies``); defaults to all-ones
-        (homogeneous fleet). ``faults`` contributes its latency table
-        (when ``latencies`` is not given) and its per-job dropout —
-        deadline/corruption knobs are sync-round notions and are ignored
-        here. Evaluation (``predict_fn`` on ``eval_data``) runs every
+        (homogeneous fleet) or to the fault model's straggler table.
+        ``faults`` applies the full per-job failure contract — dropout,
+        deadline cancellation, corruption rejection (module docstring) —
+        and defaults to ``FedConfig.faults`` when not given; passing a
+        *different* model in both places, or an explicit ``latencies``
+        table alongside a straggler distribution, is ambiguous and raises.
+        Evaluation (``predict_fn`` on ``eval_data``) runs every
         ``eval_every`` folds on the simulated clock.
         """
         cfg, acfg = self.cfg, self.acfg
         n_clients = int(client_data.shape[0])
+
+        fm_run, fm_cfg = _active_fault(faults), _active_fault(cfg.faults)
+        if fm_run is not None and fm_cfg is not None and fm_run != fm_cfg:
+            raise ValueError(
+                "two FaultModels: FedConfig.faults and run(faults=...) "
+                "disagree — set one (or pass the same model)"
+            )
+        fm = fm_run if fm_run is not None else fm_cfg
+        if (latencies is not None and fm is not None
+                and fm.straggler != "none"):
+            raise ValueError(
+                "two latency tables: run(latencies=...) and the fault "
+                f"model's straggler={fm.straggler!r} both define per-client"
+                " latencies — drop latencies= to use the fault model's "
+                "table, or use straggler='none'"
+            )
         if latencies is None:
             latencies = (
-                faults.latencies(n_clients)
-                if faults is not None and faults.straggler != "none"
+                fm.latencies(n_clients)
+                if fm is not None and fm.straggler != "none"
                 else np.ones(n_clients, np.float32)
             )
         latencies = np.asarray(latencies, np.float64)
@@ -293,7 +484,18 @@ class BufferedAsyncEngine:
                 f"latencies must be shaped ({n_clients},), got "
                 f"{latencies.shape}"
             )
-        drop_p = float(faults.dropout) if faults is not None else 0.0
+        bad = np.flatnonzero(~np.isfinite(latencies) | (latencies <= 0.0))
+        if bad.size:
+            raise ValueError(
+                f"latencies must be finite and > 0; {bad.size} bad "
+                f"entries, first at clients {bad[:8].tolist()} (values "
+                f"{latencies[bad[:8]].tolist()}) — a zero entry lets one "
+                "client monopolize dispatch and a negative/NaN entry runs "
+                "the simulated clock backwards"
+            )
+        drop_p = float(fm.dropout) if fm is not None else 0.0
+        deadline = float(fm.deadline) if fm is not None else math.inf
+        corrupt_p = float(fm.corrupt) if fm is not None else 0.0
         M = min(acfg.concurrency, n_clients)
 
         rng = np.random.default_rng(
@@ -301,6 +503,15 @@ class BufferedAsyncEngine:
         )
         state = self.init(params)
         pull_b, push_b = self.job_bytes(params)
+
+        if math.isfinite(deadline) and bool(np.all(latencies > deadline)):
+            warnings.warn(
+                "degenerate fleet: every client's latency exceeds "
+                f"faults.deadline={deadline} — no push can ever complete, "
+                "so the buffer cannot fold; returning after 0 folds",
+                RuntimeWarning, stacklevel=2,
+            )
+            return state, AsyncHistory()
 
         # model versions still referenced by in-flight jobs: version -> (tree,
         # refcount). At most M+1 versions are live at once.
@@ -314,48 +525,124 @@ class BufferedAsyncEngine:
             if versions[v][1] == 0 and v != int(state.round):
                 del versions[v]
 
-        # event heap: (completion_time, job_id, client, base_version)
-        events: list[tuple[float, int, int, int]] = []
+        # event heap: (completion-or-cancellation time, job_id, client,
+        # base_version, cancelled). job_id is unique, so the trailing
+        # fields never participate in heap ordering.
+        events: list[tuple[float, int, int, int, bool]] = []
         busy: set[int] = set()
         job_id = 0
         t_now = 0.0
+        # traced cumulative charge + the counters its static
+        # reconstruction is asserted against at every snapshot
         total_bytes = 0
+        n_pulls = 0
+        n_full_pushes = 0
+        partial_bytes = 0
+        n_cancelled = n_rejected = n_folded = 0
+        # per-client outcome record (read only under pacing='ema')
+        record = np.ones(n_clients, np.float64)
+
+        def observe(c, outcome):
+            record[c] = (acfg.pacing_decay * record[c]
+                         + (1.0 - acfg.pacing_decay) * outcome)
 
         def dispatch(t: float):
-            nonlocal job_id, total_bytes
+            nonlocal job_id, total_bytes, n_pulls
             idle = [c for c in range(n_clients) if c not in busy]
-            c = int(rng.choice(idle))
+            if acfg.pacing == "ema":
+                w = (acfg.pacing_floor
+                     + (1.0 - acfg.pacing_floor) * record[idle])
+                c = int(rng.choice(idle, p=w / w.sum()))
+            else:
+                c = int(rng.choice(idle))
             busy.add(c)
             v = int(state.round)
             retain(v)
-            heapq.heappush(events, (t + float(latencies[c]), job_id, c, v))
+            lat = float(latencies[c])
+            # cancellation is deterministic (the latency table is): a job
+            # past the deadline frees its slot AT the deadline instant
+            cancelled = lat > deadline
+            heapq.heappush(
+                events, (t + min(lat, deadline), job_id, c, v, cancelled)
+            )
             job_id += 1
             total_bytes += pull_b  # the pull happens at dispatch
+            n_pulls += 1
 
         for _ in range(M):
             dispatch(0.0)
 
         buffer: list[PyTree] = []
         buffer_staleness: list[int] = []
+        buffer_losses: list[float] = []
         hist = AsyncHistory()
         applied = 0
         staleness_seen: list[int] = []
+        last_fold_loss = float("nan")
+        stall = 0  # consecutive events that buffered nothing
 
         while applied < folds:
-            t_now, jid, c, base_v = heapq.heappop(events)
-            busy.discard(c)
-            dropped = drop_p > 0.0 and rng.random() < drop_p
-            if not dropped:
-                k_job = jax.random.fold_in(key, jid)
-                update, loss = self._job(
-                    versions[base_v][0], client_data[c], client_labels[c],
-                    k_job,
+            if stall >= _STALL_LIMIT:
+                warnings.warn(
+                    f"no push entered the buffer for {_STALL_LIMIT} "
+                    "consecutive events (every job cancelled, dropped, or "
+                    f"rejected) — stopping after {applied}/{folds} folds",
+                    RuntimeWarning, stacklevel=2,
                 )
-                s = int(state.round) - base_v
-                buffer.append(update)
-                buffer_staleness.append(s)
-                staleness_seen.append(s)
-                total_bytes += push_b  # the push: transmitted payloads only
+                break
+            t_now, jid, c, base_v, cancelled = heapq.heappop(events)
+            busy.discard(c)
+            if cancelled:
+                # the deadline-proportional slice of the push that made it
+                # out before the cut — pull-only when it floors to zero
+                part = math.floor(push_b * deadline / float(latencies[c]))
+                total_bytes += part
+                partial_bytes += part
+                n_cancelled += 1
+                observe(c, 0.0)
+                stall += 1
+            else:
+                dropped = drop_p > 0.0 and rng.random() < drop_p
+                if dropped:
+                    observe(c, 0.0)
+                    stall += 1
+                else:
+                    k_job = jax.random.fold_in(key, jid)
+                    corrupt_hit = corrupt_p > 0.0 and bool(
+                        jax.random.bernoulli(
+                            jax.random.fold_in(k_job, _FAULT_TAG),
+                            corrupt_p,
+                        )
+                    )
+                    if corrupt_hit and fm.corrupt_detect:
+                        # detected at the push boundary: full uplink
+                        # transmitted, checksum rejects it — the update is
+                        # never materialized server-side
+                        total_bytes += push_b
+                        n_full_pushes += 1
+                        n_rejected += 1
+                        observe(c, 0.0)
+                        stall += 1
+                    else:
+                        update, loss = self._job(
+                            versions[base_v][0], client_data[c],
+                            client_labels[c], k_job,
+                        )
+                        if corrupt_hit:  # undetected: the damage folds in
+                            one = jax.tree.map(lambda x: x[None], update)
+                            one = fm.corrupt_tree(
+                                one, jnp.ones((1,), bool), k_job
+                            )
+                            update = jax.tree.map(lambda x: x[0], one)
+                        s = int(state.round) - base_v
+                        buffer.append(update)
+                        buffer_staleness.append(s)
+                        buffer_losses.append(float(loss))
+                        staleness_seen.append(s)
+                        total_bytes += push_b  # transmitted payloads only
+                        n_full_pushes += 1
+                        observe(c, 1.0)
+                        stall = 0
             release(base_v)
 
             # fold BEFORE re-dispatching the freed slot: the push and the
@@ -363,45 +650,55 @@ class BufferedAsyncEngine:
             # must see the post-fold version (serial M=1/K=1 operation is
             # then staleness-free, as it should be)
             if len(buffer) >= acfg.buffer_size:
-                stacked = jax.tree.map(
-                    lambda *us: jnp.stack(us), *buffer
-                )
-                state = self._fold(
-                    state, stacked, jnp.asarray(buffer_staleness, jnp.int32)
+                state_new, fold_loss, n_kept = self.fold_buffer(
+                    state, buffer, buffer_staleness, buffer_losses
                 )
                 buffer.clear()
                 buffer_staleness.clear()
-                applied += 1
-                v = int(state.round)
-                versions[v] = [state.params, 0]
-                # drop no-longer-referenced old versions
-                for old in [u for u, (_, rc) in versions.items()
-                            if rc == 0 and u != v]:
-                    del versions[old]
+                buffer_losses.clear()
+                n_folded += n_kept
+                if n_kept:  # an all-stale buffer discards its fold
+                    state = state_new
+                    last_fold_loss = fold_loss
+                    applied += 1
+                    v = int(state.round)
+                    versions[v] = [state.params, 0]
+                    # drop no-longer-referenced old versions
+                    for old in [u for u, (_, rc) in versions.items()
+                                if rc == 0 and u != v]:
+                        del versions[old]
 
-                if applied % eval_every == 0 or applied == folds:
-                    hist.versions.append(v)
-                    hist.time.append(t_now)
-                    hist.cumulative_bytes.append(total_bytes)
-                    hist.mean_staleness.append(
-                        float(np.mean(staleness_seen))
-                        if staleness_seen else 0.0
-                    )
-                    # a fold implies this event pushed, so `loss` is fresh
-                    hist.loss.append(float(loss))
-                    if predict_fn is not None and eval_data is not None:
-                        logits = predict_fn(
-                            state.params, eval_data[0], cfg.qat
+                    if applied % eval_every == 0 or applied == folds:
+                        # static == traced, and the worst-case bound
+                        assert total_bytes == (
+                            n_pulls * pull_b + n_full_pushes * push_b
+                            + partial_bytes
+                        ), "async byte accounting drifted from its counters"
+                        assert total_bytes <= n_pulls * (pull_b + push_b)
+                        hist.versions.append(v)
+                        hist.time.append(t_now)
+                        hist.cumulative_bytes.append(total_bytes)
+                        hist.mean_staleness.append(
+                            float(np.mean(staleness_seen))
+                            if staleness_seen else 0.0
                         )
-                        acc = float(jnp.mean(
-                            (jnp.argmax(logits, -1) == eval_data[1])
-                            .astype(jnp.float32)
-                        ))
-                        hist.accuracy.append(acc)
-                        if verbose:
-                            print(
-                                f"fold {v:4d}  t {t_now:8.2f}  acc "
-                                f"{acc:.4f}  MB {total_bytes / 1e6:.1f}"
+                        hist.loss.append(last_fold_loss)
+                        hist.n_cancelled.append(n_cancelled)
+                        hist.n_rejected.append(n_rejected)
+                        hist.n_folded.append(n_folded)
+                        if predict_fn is not None and eval_data is not None:
+                            logits = predict_fn(
+                                state.params, eval_data[0], cfg.qat
                             )
+                            acc = float(jnp.mean(
+                                (jnp.argmax(logits, -1) == eval_data[1])
+                                .astype(jnp.float32)
+                            ))
+                            hist.accuracy.append(acc)
+                            if verbose:
+                                print(
+                                    f"fold {v:4d}  t {t_now:8.2f}  acc "
+                                    f"{acc:.4f}  MB {total_bytes / 1e6:.1f}"
+                                )
             dispatch(t_now)  # the freed slot starts the next client now
         return state, hist

@@ -52,6 +52,12 @@ corruption through ``0 * NaN``. The minimum-quorum policy
 too few survive: ``'skip'`` discards the round (server state unchanged —
 the production choice), ``'degrade'`` proceeds with whatever survived
 (>= 1; an empty round is always skipped).
+
+The buffered async engine (``core.async_engine``) applies the same model
+per *job* instead of per round: dropout per push, ``deadline`` as the
+job-cancellation instant (slot freed then, partial uplink bytes charged),
+and corruption rejection at the push boundary drawn from the job key —
+see its module docstring for the async byte-accounting contract.
 """
 from __future__ import annotations
 
@@ -103,7 +109,8 @@ class FaultModel:
     straggler: str = "none"         # latency dist: none|uniform|lognormal|pareto
     straggler_scale: float = 1.0    # latency scale (simulated seconds)
     straggler_param: float = 1.0    # dist shape: sigma / width / pareto alpha
-    deadline: float = math.inf      # sync-round cutoff (same units as scale)
+    deadline: float = math.inf      # round cutoff (sync) / per-job
+                                    # cancellation instant (async engine)
     corrupt: float = 0.0            # corruption prob per transmitted payload
     corrupt_detect: bool = True     # checksum rejects damaged payloads
     corrupt_frac: float = 1e-3      # fraction of elements flipped if undetected

@@ -59,20 +59,34 @@ def client_latencies(k: int, dist: str = "lognormal", scale: float = 1.0,
     if scale <= 0:
         raise ValueError(f"latency scale must be positive, got {scale}")
     rng = np.random.default_rng(np.random.SeedSequence([seed, k, 0x1A7E]))
-    if dist == "none":
-        lat = np.ones(k)
-    elif dist == "uniform":
-        if not 0 < param < 2:
-            raise ValueError(f"uniform latency width must be in (0, 2), "
-                             f"got {param}")
-        lat = 1.0 + param * (rng.random(k) - 0.5)
-    elif dist == "lognormal":
-        lat = np.exp(param * rng.standard_normal(k))
-    else:  # pareto
-        if param <= 0:
-            raise ValueError(f"pareto shape must be positive, got {param}")
-        lat = 1.0 + rng.pareto(param, k)
-    return (scale * lat).astype(np.float32)
+    with np.errstate(over="ignore"):  # overflow -> inf, caught below
+        if dist == "none":
+            lat = np.ones(k)
+        elif dist == "uniform":
+            if not 0 < param < 2:
+                raise ValueError(f"uniform latency width must be in (0, 2), "
+                                 f"got {param}")
+            lat = 1.0 + param * (rng.random(k) - 0.5)
+        elif dist == "lognormal":
+            lat = np.exp(param * rng.standard_normal(k))
+        else:  # pareto
+            if param <= 0:
+                raise ValueError(f"pareto shape must be positive, "
+                                 f"got {param}")
+            lat = 1.0 + rng.pareto(param, k)
+        out = (scale * lat).astype(np.float32)
+    # the event loops divide by and heap-sort on these: a non-finite or
+    # <= 0 entry (float32 overflow in an extreme tail draw, or underflow
+    # of a tiny scale) would monopolize dispatch or run the clock backwards
+    bad = np.flatnonzero(~np.isfinite(out) | (out <= 0.0))
+    if bad.size:
+        raise ValueError(
+            f"client_latencies(dist={dist!r}, scale={scale}, param={param})"
+            f" produced {bad.size} non-finite or <= 0 entries (first at "
+            f"clients {bad[:8].tolist()}) — shrink param/scale to keep the"
+            " table inside float32 range"
+        )
+    return out
 
 
 def arrival_times(latencies: np.ndarray, n_jobs: int) -> np.ndarray:

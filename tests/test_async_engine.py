@@ -1,16 +1,28 @@
-"""Buffered-async engine (ISSUE 6): determinism, staleness math, byte
-accounting, momentum threading, and config validation.
+"""Buffered-async engine (ISSUE 6 + the ISSUE 9 fault hardening):
+determinism, staleness math, byte accounting, momentum threading, fault
+semantics, and config validation.
 
 The contracts pinned here:
 
-* the event loop is bit-deterministic in (seed, configuration);
+* the event loop is bit-deterministic in (seed, configuration) — with
+  and without cancellation/rejection faults;
 * the fold applies the ``(1 + s)^-alpha``-weighted mean of the buffered
-  updates (verified against an independent computation);
-* every dispatched job charges exactly one pull, every TRANSMITTED push
-  one uplink payload — dropped jobs charge the pull only;
+  updates (verified against an independent computation), with the
+  staleness-cutoff renormalizing over the survivors and the clip-norm
+  guard capping each update's whole-tree L2;
+* every dispatched job charges exactly one pull; a transmitted push one
+  full uplink payload; a dropped job the pull only; a deadline-cancelled
+  job the pull plus ``floor(push * deadline / latency)``; a
+  checksum-rejected push the FULL uplink (it transmitted) — and the
+  traced total equals the static reconstruction from the counters;
+* degenerate fleets (all-cancelled, all-rejected) terminate with a
+  warning instead of spinning forever;
+* sync-only knobs (CodecSchedule, quorum) and ambiguous fault/latency
+  double-specification raise eagerly;
 * the server momentum buffer travels in ``ServerState.opt``.
 """
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +35,8 @@ from repro.core.codec import CodecSchedule
 from repro.core.engine import FedConfig, WireLink
 from repro.core.faults import FaultModel
 from repro.core.qat import QATConfig, clip_value_mask, weight_decay_mask
-from repro.data import partition_iid, synthetic_classification
+from repro.data import client_latencies, partition_iid, \
+    synthetic_classification
 from repro.models import small
 
 
@@ -199,6 +212,341 @@ def test_async_config_validation():
         AsyncConfig(staleness_alpha=-0.1)
     with pytest.raises(ValueError, match="server_momentum"):
         AsyncConfig(server_momentum=1.0)
+
+
+# --- ISSUE 9: fault-aware async ----------------------------------------
+
+
+def _hist_equal(h0, h1):
+    assert h0.time == h1.time
+    assert h0.accuracy == h1.accuracy
+    assert h0.cumulative_bytes == h1.cumulative_bytes
+    assert h0.mean_staleness == h1.mean_staleness
+    assert h0.loss == h1.loss
+    assert h0.n_cancelled == h1.n_cancelled
+    assert h0.n_rejected == h1.n_rejected
+    assert h0.n_folded == h1.n_folded
+
+
+def test_hardened_run_deterministic():
+    """Cancellation + rejection keep the loop bit-deterministic in
+    (seed, configuration), counters included."""
+    params, loss, apply, opt, (cx, cy), evald = _setup()
+    lat = np.asarray([0.5, 0.5, 0.5, 3.0, 3.0, 0.7, 0.7, 0.7], np.float32)
+    fm = FaultModel(deadline=1.0, corrupt=0.3, seed=2)
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, staleness_alpha=0.5,
+                       seed=1)
+    outs = []
+    for _ in range(2):
+        eng = _engine(loss, opt, acfg)
+        outs.append(eng.run(params, cx, cy, jax.random.PRNGKey(3),
+                            folds=5, latencies=lat, faults=fm,
+                            predict_fn=apply, eval_data=evald,
+                            eval_every=1))
+    (s0, h0), (s1, h1) = outs
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _hist_equal(h0, h1)
+    assert h0.n_cancelled[-1] > 0, "fleet crafted to cancel"
+    assert h0.n_rejected[-1] > 0, "corrupt=0.3 over 10+ pushes"
+    assert h0.n_folded[-1] == 5 * 2
+
+
+def test_cancelled_partial_bytes_static_eq_traced():
+    """One chronically-slow client past the deadline: every one of its
+    jobs is cut at the deadline instant and charges pull + the exact
+    partial uplink floor(push * deadline / latency). The traced history
+    total is reconstructed from the snapshot counters."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    M, K, folds = 3, 2, 4
+    lat = np.asarray([1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 4.0], np.float32)
+    fm = FaultModel(deadline=2.0)
+    acfg = AsyncConfig(buffer_size=K, concurrency=M, seed=3)
+    eng = _engine(loss, opt, acfg)
+    pull_b, push_b = eng.job_bytes(params)
+    partial_b = math.floor(push_b * 2.0 / 4.0)
+    assert 0 < partial_b < push_b
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=folds,
+                      latencies=lat, faults=fm, eval_every=1)
+    assert hist.n_cancelled[-1] > 0, "the slow client must get dispatched"
+    assert hist.n_rejected == [0] * folds
+    for f, n_c, got in zip(range(1, folds + 1), hist.n_cancelled,
+                           hist.cumulative_bytes):
+        # events at snapshot f: f*K buffered pushes + n_c cancellations;
+        # every event except the fold-triggering one has re-dispatched
+        want = ((M + f * K + n_c - 1) * pull_b + f * K * push_b
+                + n_c * partial_b)
+        assert got == want, (f, n_c, got, want)
+
+
+def test_cancelled_before_deadline_zero_edge_is_pull_only():
+    """A latency so large the partial floors to 0: the cancelled job
+    charges the pull only."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    M, K, folds = 3, 2, 3
+    big = 1e7
+    lat = np.asarray([1.0] * 7 + [big], np.float32)
+    fm = FaultModel(deadline=1.5)
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=K, concurrency=M,
+                                         seed=3))
+    pull_b, push_b = eng.job_bytes(params)
+    assert math.floor(push_b * 1.5 / big) == 0
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=folds,
+                      latencies=lat, faults=fm, eval_every=1)
+    assert hist.n_cancelled[-1] > 0
+    for f, n_c, got in zip(range(1, folds + 1), hist.n_cancelled,
+                           hist.cumulative_bytes):
+        assert got == (M + f * K + n_c - 1) * pull_b + f * K * push_b
+
+
+def test_rejected_pushes_charge_full_uplink():
+    """Detected-corrupt pushes transmit (full uplink bytes) but never
+    enter the buffer — static reconstruction from the counters."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    M, K, folds = 4, 2, 3
+    fm = FaultModel(corrupt=0.4, seed=7)
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=K, concurrency=M,
+                                         seed=5))
+    pull_b, push_b = eng.job_bytes(params)
+    _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=folds,
+                      faults=fm, eval_every=folds)
+    n_r = hist.n_rejected[-1]
+    assert n_r > 0, "corrupt=0.4 over 6+ pushes"
+    assert hist.n_folded[-1] == folds * K
+    want = ((M + folds * K + n_r - 1) * pull_b
+            + (folds * K + n_r) * push_b)
+    assert hist.cumulative_bytes[-1] == want
+
+
+def test_undetected_corruption_folds_damage():
+    """corrupt_detect=False lets the bit-flipped update into the fold:
+    nothing is rejected, and the trajectory diverges from the clean run."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, seed=5)
+    runs = {}
+    for name, fm in (("clean", None),
+                     ("flip", FaultModel(corrupt=0.9, corrupt_detect=False,
+                                         corrupt_frac=0.5))):
+        eng = _engine(loss, opt, acfg)
+        s, h = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=3,
+                       faults=fm, eval_every=3)
+        runs[name] = (s, h)
+    assert runs["flip"][1].n_rejected[-1] == 0
+    # same bytes (the payload transmitted either way) ...
+    assert (runs["flip"][1].cumulative_bytes
+            == runs["clean"][1].cumulative_bytes)
+    # ... different model (the damage went through)
+    diffs = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(runs["clean"][0].params),
+                             jax.tree.leaves(runs["flip"][0].params))]
+    assert any(diffs), "bit flips must perturb the folded model"
+
+
+def test_all_cancelled_fleet_terminates():
+    """Every latency past the deadline: no push can ever complete — the
+    run warns and returns immediately instead of spinning forever."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2, concurrency=4))
+    with pytest.warns(RuntimeWarning, match="degenerate fleet"):
+        state, hist = eng.run(
+            params, cx, cy, jax.random.PRNGKey(0), folds=3,
+            latencies=np.full(8, 5.0, np.float32),
+            faults=FaultModel(deadline=1.0),
+        )
+    assert hist.cumulative_bytes == [] and hist.accuracy == []
+    for p0, p1 in zip(jax.tree.leaves(params),
+                      jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+
+def test_all_rejected_fleet_terminates():
+    """corrupt=1.0 with detection: every push is rejected, the buffer can
+    never fill — the stall guard stops the loop with a warning."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2, concurrency=4))
+    with pytest.warns(RuntimeWarning, match="consecutive events"):
+        _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=2,
+                          faults=FaultModel(corrupt=1.0))
+    assert hist.cumulative_bytes == []
+
+
+def test_staleness_cutoff_renormalizes_survivors():
+    """fold_buffer drops s > cutoff and the surviving weights renormalize:
+    reconstructed against an independent computation."""
+    params, loss, apply, opt, _, _ = _setup()
+    acfg = AsyncConfig(buffer_size=3, staleness_alpha=1.0, server_lr=1.0,
+                       staleness_cutoff=2)
+    eng = _engine(loss, opt, acfg)
+    state = eng.init(params)
+    mk = lambda v: jax.tree.map(lambda p: jnp.full_like(p, v), params)
+    new, fold_loss, n_kept = eng.fold_buffer(
+        state, [mk(1.0), mk(3.0), mk(100.0)], [0, 1, 7], [1.0, 3.0, 9.0])
+    assert n_kept == 2
+    # survivors s=[0,1]: w = [1, 1/2] -> [2/3, 1/3]; delta = 2/3 + 1 = 5/3
+    want = 2.0 / 3.0 * 1.0 + 1.0 / 3.0 * 3.0
+    for p0, p1 in zip(jax.tree.leaves(params), jax.tree.leaves(new.params)):
+        np.testing.assert_allclose(np.asarray(p1) - np.asarray(p0), want,
+                                   rtol=1e-5)
+    np.testing.assert_allclose(fold_loss, 2.0 / 3.0 * 1.0 + 1.0 / 3.0 * 3.0,
+                               rtol=1e-9)
+    assert int(new.round) == 1
+
+
+def test_staleness_cutoff_all_stale_discards_fold():
+    params, loss, apply, opt, _, _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2,
+                                         staleness_cutoff=1))
+    state = eng.init(params)
+    u = jax.tree.map(jnp.ones_like, params)
+    new, fold_loss, n_kept = eng.fold_buffer(state, [u, u], [5, 9],
+                                             [1.0, 1.0])
+    assert n_kept == 0 and fold_loss is None
+    assert new is state, "a discarded fold must leave the state untouched"
+
+
+def test_clip_norm_caps_update_l2():
+    """clip_norm clips each update's whole-tree L2 to clip*(1+s)^-alpha
+    before the weighted mean."""
+    params, loss, apply, opt, _, _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=1, staleness_alpha=0.0,
+                                         server_lr=1.0, clip_norm=1.0))
+    state = eng.init(params)
+    u = jax.tree.map(jnp.ones_like, params)
+    norm = math.sqrt(sum(int(np.prod(p.shape))
+                         for p in jax.tree.leaves(params)))
+    stacked = jax.tree.map(lambda x: x[None], u)
+    new = eng._fold(state, stacked, jnp.zeros(1, jnp.int32))
+    for p0, p1 in zip(jax.tree.leaves(params), jax.tree.leaves(new.params)):
+        np.testing.assert_allclose(np.asarray(p1) - np.asarray(p0),
+                                   1.0 / norm, rtol=1e-5)
+    # below the cap the update passes through unclipped
+    eng2 = _engine(loss, opt, AsyncConfig(buffer_size=1,
+                                          staleness_alpha=0.0,
+                                          clip_norm=norm * 10.0))
+    new2 = eng2._fold(eng2.init(params), stacked, jnp.zeros(1, jnp.int32))
+    for p0, p1 in zip(jax.tree.leaves(params),
+                      jax.tree.leaves(new2.params)):
+        np.testing.assert_allclose(np.asarray(p1) - np.asarray(p0), 1.0,
+                                   rtol=1e-5)
+
+
+def test_fold_loss_is_staleness_weighted_mean():
+    params, loss, apply, opt, _, _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2,
+                                         staleness_alpha=1.0))
+    state = eng.init(params)
+    u = jax.tree.map(jnp.ones_like, params)
+    _, fold_loss, _ = eng.fold_buffer(state, [u, u], [0, 1], [1.0, 3.0])
+    # w = [1, 1/2] -> [2/3, 1/3]: loss = 2/3 + 1 = 5/3
+    np.testing.assert_allclose(fold_loss, 5.0 / 3.0, rtol=1e-9)
+
+
+def test_fault_table_matches_explicit_latencies():
+    """run(faults=straggler-model) must walk the identical trajectory as
+    run(latencies=client_latencies(same knobs)) — the two spellings of
+    one fleet."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, seed=9)
+    fm = FaultModel(straggler="lognormal", straggler_scale=1.0,
+                    straggler_param=0.5, seed=4)
+    eng = _engine(loss, opt, acfg)
+    s0, h0 = eng.run(params, cx, cy, jax.random.PRNGKey(1), folds=4,
+                     faults=fm, eval_every=1)
+    eng = _engine(loss, opt, acfg)
+    s1, h1 = eng.run(params, cx, cy, jax.random.PRNGKey(1), folds=4,
+                     latencies=client_latencies(8, dist="lognormal",
+                                                scale=1.0, param=0.5,
+                                                seed=4),
+                     eval_every=1)
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _hist_equal(h0, h1)
+
+
+def test_ema_pacing_starves_failing_client():
+    """pacing='ema' damps dispatch to a chronically-cancelling client:
+    strictly fewer cancellations than uniform pacing on the same fleet."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    lat = np.asarray([100.0] * 4 + [1.0] * 4, np.float32)
+    fm = FaultModel(deadline=2.0)
+    counts = {}
+    for pacing in ("uniform", "ema"):
+        acfg = AsyncConfig(buffer_size=2, concurrency=4, seed=11,
+                           pacing=pacing, pacing_decay=0.5)
+        eng = _engine(loss, opt, acfg)
+        _, hist = eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=10,
+                          latencies=lat, faults=fm, eval_every=10)
+        counts[pacing] = hist.n_cancelled[-1]
+    assert counts["uniform"] > 0
+    assert counts["ema"] < counts["uniform"], counts
+
+
+def test_cfg_faults_default_and_conflict():
+    """FedConfig.faults is no longer silently ignored: run() defaults to
+    it, and a conflicting run(faults=...) raises."""
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    fm = FaultModel(dropout=0.5, seed=3)
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, seed=5)
+    eng_cfg = _engine(loss, opt, acfg, faults=fm)
+    s0, h0 = eng_cfg.run(params, cx, cy, jax.random.PRNGKey(0), folds=3,
+                         eval_every=1)
+    eng_arg = _engine(loss, opt, acfg)
+    s1, h1 = eng_arg.run(params, cx, cy, jax.random.PRNGKey(0), folds=3,
+                         faults=fm, eval_every=1)
+    assert h0.cumulative_bytes == h1.cumulative_bytes
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="two FaultModels"):
+        eng_cfg.run(params, cx, cy, jax.random.PRNGKey(0), folds=1,
+                    faults=FaultModel(dropout=0.9))
+
+
+def test_double_latency_spec_rejected():
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2, concurrency=4))
+    with pytest.raises(ValueError, match="two latency tables"):
+        eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=1,
+                latencies=np.ones(8, np.float32),
+                faults=FaultModel(straggler="pareto", straggler_param=1.1))
+
+
+def test_quorum_knobs_rejected_eagerly():
+    params, loss, apply, opt, _, _ = _setup()
+    with pytest.raises(ValueError, match="quorum"):
+        _engine(loss, opt, AsyncConfig(), min_quorum=0.5)
+    with pytest.raises(ValueError, match="quorum"):
+        _engine(loss, opt, AsyncConfig(), quorum_policy="degrade")
+
+
+def test_bad_latency_entries_rejected():
+    params, loss, apply, opt, (cx, cy), _ = _setup()
+    eng = _engine(loss, opt, AsyncConfig(buffer_size=2, concurrency=4))
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        lat = np.ones(8, np.float64)
+        lat[3] = bad
+        with pytest.raises(ValueError, match="finite and > 0"):
+            eng.run(params, cx, cy, jax.random.PRNGKey(0), folds=1,
+                    latencies=lat)
+
+
+def test_client_latencies_output_guard():
+    """A tail draw that overflows float32 must raise, not hand the event
+    loop an inf latency."""
+    with pytest.raises(ValueError, match="non-finite"):
+        client_latencies(32, dist="lognormal", param=500.0, seed=0)
+
+
+def test_hardened_config_validation():
+    with pytest.raises(ValueError, match="staleness_cutoff"):
+        AsyncConfig(staleness_cutoff=-1.0)
+    with pytest.raises(ValueError, match="clip_norm"):
+        AsyncConfig(clip_norm=0.0)
+    with pytest.raises(ValueError, match="pacing"):
+        AsyncConfig(pacing="bogus")
+    with pytest.raises(ValueError, match="pacing_decay"):
+        AsyncConfig(pacing_decay=1.0)
+    with pytest.raises(ValueError, match="pacing_floor"):
+        AsyncConfig(pacing_floor=0.0)
 
 
 def test_async_learns():
