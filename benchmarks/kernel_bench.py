@@ -20,6 +20,9 @@ trajectory:
   full-cohort vmap at K=512 LeNet clients — XLA compiled temp-buffer size
   (the live-memory envelope) and wall-clock. The chunked executor's temps
   must scale with the chunk size, not the cohort size.
+* the 16-lane interleaved rANS entropy coder (ISSUE 10): the sender-side
+  encode scan and the fused decode kernel vs its bit-identical jnp twin,
+  on a matched-prior byte stream;
 * the sharded cohort executor (ISSUE 4): the same K=512 round spread over
   a 1- vs 8-virtual-device ``clients`` mesh (this module forces 8 CPU
   host devices when it is the entry point). ``memory_analysis`` of the
@@ -232,6 +235,50 @@ def _codec_benches(rows):
     _row(rows, "wire_decode_fp8_tiles_0p5M", t8d, "fused unpack-dequantize")
     _row(rows, "wire_decode_fp4_packed_0p5M", t4d,
          "fused unfold+dequantize from the half-size payload")
+
+
+def _rans_benches(rows):
+    """16-lane interleaved rANS coder (ISSUE 10): encode (reverse
+    ``lax.scan``, sender-side only — no kernel form) and decode, fused
+    Pallas kernel (interpret mode) vs the jnp ``lax.scan`` fallback.
+    The two decoders share one per-row step function so their symbols
+    are bit-identical by construction — asserted here on top of the
+    roundtrip, mirroring tests/test_entropy.py. Stream: a LeNet-scale
+    32 KiB byte payload drawn FROM the static fp4 table itself (the
+    matched-prior case the wire sees)."""
+    from repro.core.entropy import byte_table
+    from repro.core.fp8 import FP4_E2M1
+    from repro.kernels import rans as rk
+
+    n = 1 << 15
+    freq_np, cum_np, s2s_np = byte_table(FP4_E2M1, 0.28)
+    freq, cum, s2s = (jnp.asarray(freq_np), jnp.asarray(cum_np),
+                      jnp.asarray(s2s_np))
+    # uniform slots through slot2sym == exact table distribution
+    slots = jax.random.randint(jax.random.PRNGKey(13), (n,), 0, rk.TAB)
+    syms = s2s[slots].astype(jnp.int32)
+
+    enc = jax.jit(lambda s: rk.rans_encode(s, freq, cum))
+    t_enc = _time(enc, syms, n=10)
+    buf, state, lens = enc(syms)
+    coded = float(jnp.sum(lens))
+    _row(rows, "rans_encode_32k", t_enc,
+         f"reverse lax.scan, {rk.LANES} lanes; {coded:.0f}/{n} coded B "
+         f"({8 * coded / n:.2f} bits/byte)")
+
+    dec_jnp = jax.jit(lambda b, st, ln: rk.rans_decode_jnp(
+        b, st, ln, n, freq, cum, s2s))
+    dec_pal = jax.jit(lambda b, st, ln: rk.rans_decode_pallas(
+        b, st, ln, n, freq, cum, s2s, interpret=True))
+    assert bool(jnp.all(dec_jnp(buf, state, lens) == syms))
+    assert bool(jnp.all(dec_pal(buf, state, lens) == syms))
+    t_j = _time(dec_jnp, buf, state, lens, n=10)
+    t_p = _time(dec_pal, buf, state, lens, n=10)
+    _row(rows, "rans_decode_jnp_32k", t_j,
+         "lax.scan fallback (bit-identical to the kernel)")
+    _row(rows, "rans_decode_pallas_interp_32k", t_p,
+         "fused fori_loop decode, table + buffer in VMEM "
+         "(structural only on CPU)")
 
 
 def _scaling_benches(rows):
@@ -681,6 +728,7 @@ def run(out_rows=None):
     _quantizer_benches(rows)
     _matmul_benches(rows)
     _codec_benches(rows)
+    _rans_benches(rows)
     _scaling_benches(rows)
     _scaling_fed2d_benches(rows)
     _plane_benches(rows)

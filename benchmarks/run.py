@@ -18,9 +18,12 @@ def main() -> None:
                     help="subset of: kernel table1 table2 fig2 format async")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: the scaling-policy encode rows "
-                         "(1D + 2x4 fed2d) plus a seconds-scale "
-                         "hardened-async fold check — verifies the bench "
-                         "harness AND the async event loop stay runnable")
+                         "(1D + 2x4 fed2d), the rANS coder rows, a "
+                         "seconds-scale hardened-async fold check, and an "
+                         "ef / ef+rans round smoke (two-lane byte contract "
+                         "asserted) — verifies the bench harness, the "
+                         "async event loop, and the compression stack "
+                         "stay runnable")
     args = ap.parse_args()
     which = set(args.only or ["kernel", "table1", "table2", "fig2"])
 
@@ -32,10 +35,17 @@ def main() -> None:
     if args.quick:
         kernel_bench._scaling_benches(rows)
         kernel_bench._scaling_fed2d_benches(rows)
+        kernel_bench._rans_benches(rows)
         async_bench.smoke(rows)
+        format_ablation.smoke(rows)
         print("name,us_per_call,derived")
         for r in rows:
-            if r["bench"] == "async_smoke":
+            if r["bench"] == "ef_smoke":
+                print(f"ef-smoke/{r['cell']},,"
+                      f"bound={r['round_bytes']} "
+                      f"traced={r['measured_round_bytes']} "
+                      f"loss={r['final_loss']}")
+            elif r["bench"] == "async_smoke":
                 print(f"async-smoke/{r['name']},,folds={r['folds']} "
                       f"cancelled={r['n_cancelled']} "
                       f"rejected={r['n_rejected']} folded={r['n_folded']} "

@@ -42,6 +42,18 @@ from repro.data.federated import label_distribution_skew
 from repro.models import small
 
 
+def _downlink_codec(name: str) -> str:
+    """Strip the uplink-only wrappers off a codec spec: ef (per-client
+    residual memory) and delta (receiver-side reference) cannot ride the
+    downlink; rans and the grid formats can."""
+    if name == "ef":
+        return "e4m3"
+    if name.startswith("ef:"):
+        name = name[len("ef:"):]
+    parts = [p for p in name.split(":") if p != "delta"]
+    return ":".join(parts) or "e4m3"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
@@ -54,6 +66,19 @@ def main():
                          "'clients' mesh axis (ShardedExecutor; composes "
                          "with --chunk). Needs the devices to exist — see "
                          "the module docstring for virtual CPU devices")
+    ap.add_argument("--codec", default=None,
+                    help="extra method row: UPLINK wire codec by registry "
+                         "name — grids (e4m3, fp4_e2m1_det), delta:<grid>, "
+                         "error feedback (ef:<grid>, e.g. ef:fp4_e2m1_det "
+                         "— biased det grid made convergent by per-client "
+                         "residual memory), entropy coding (rans:<...>), "
+                         "or stacks (ef:rans:fp4_e2m1_det). The downlink "
+                         "reuses the spec with the uplink-only wrappers "
+                         "(ef/delta) stripped. Prints per-leg payload "
+                         "bytes; rans legs charge the TRACED entropy-coded "
+                         "ledger (printed next to the static bound). Not "
+                         "with --mesh for rans legs (the fused sharded "
+                         "all-gather needs fixed-size payloads)")
     args = ap.parse_args()
 
     mesh = None
@@ -98,14 +123,38 @@ def main():
         "uq-d":  FedConfig(comm_mode="rand", qat=QATConfig(),
                            up_codec="delta:e4m3", **base),
     }
+    codec_row = None
+    if args.codec:
+        codec_row = f"c:{args.codec}"
+        methods[codec_row] = FedConfig(
+            comm_mode="rand", qat=QATConfig(),
+            down_codec=_downlink_codec(args.codec), up_codec=args.codec,
+            **base)
     for name, cfg in methods.items():
         sim = FedSim(params, loss, apply, optim.sgd(0.05, weight_decay=1e-3,
                                wd_mask=qat_masks[0], trust_mask=qat_masks[1]),
                      cfg, jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(nk))
+        if name == codec_row:
+            from repro.core import wire
+
+            spec = wire.make_wire_spec(params)
+            down_c, up_c = cfg.resolved_down_codec, cfg.resolved_up_codec
+            dyn = bool(getattr(sim.engine, "dynamic", False))
+            print(f"{name}: per-leg payload bound — "
+                  f"down[{down_c.tag}] {down_c.payload_nbytes(spec)} "
+                  f"B/client, up[{up_c.tag}] {up_c.payload_nbytes(spec)} "
+                  f"B/client"
+                  + (" (rans legs charge the traced ledger below)"
+                     if dyn else ""))
         hist = sim.run(args.rounds, jax.random.PRNGKey(7),
                        eval_data=(xt, yt), eval_every=5, verbose=False)
-        print(f"{name:5s} best_acc={hist.best_accuracy():.3f} "
-              f"total_MB={hist.cumulative_bytes[-1]/1e6:.1f}")
+        line = (f"{name:5s} best_acc={hist.best_accuracy():.3f} "
+                f"total_MB={hist.cumulative_bytes[-1]/1e6:.1f}")
+        if name == codec_row:
+            measured = hist.cumulative_bytes[-1] / args.rounds
+            line += (f" round_B={measured:.0f}"
+                     f" (bound {sim.bytes_per_round})")
+        print(line)
 
 
 if __name__ == "__main__":

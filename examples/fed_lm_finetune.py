@@ -76,6 +76,18 @@ from repro.data.synthetic import synthetic_lm_tokens
 from repro.models.registry import get_model
 
 
+def _downlink_codec(name: str) -> str:
+    """Strip the uplink-only wrappers off a codec spec: ef (per-client
+    residual memory) and delta (receiver-side reference) cannot ride the
+    downlink; rans and the grid formats can."""
+    if name == "ef":
+        return "e4m3"
+    if name.startswith("ef:"):
+        name = name[len("ef:"):]
+    parts = [p for p in name.split(":") if p != "delta"]
+    return ":".join(parts) or "e4m3"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=8)
@@ -103,10 +115,18 @@ def main():
                          "dims) so the 2D mesh shards something real")
     ap.add_argument("--codec", default=None,
                     help="wire codec registry name for the model exchange "
-                         "(e.g. e4m3, e5m2_det, fp4, delta:e4m3); default "
-                         "= the paper's E4M3 wire. delta:* applies to the "
-                         "uplink only (its reference is the round's "
-                         "broadcast, which the downlink receiver lacks)")
+                         "(e.g. e4m3, e5m2_det, fp4, delta:e4m3, "
+                         "rans:delta:e4m3, ef:fp4_e2m1_det, "
+                         "ef:rans:fp4_e2m1_det); default = the paper's "
+                         "E4M3 wire. The uplink-only wrappers stay on the "
+                         "uplink: delta needs the round's broadcast as "
+                         "reference, ef needs per-client residual memory "
+                         "(engine path — pass --mesh D; not CxF). rans "
+                         "legs have DATA-DEPENDENT size: the loop prints "
+                         "the true entropy-coded bytes per leg next to "
+                         "the static bound (loop path only — the sharded "
+                         "engine's fused all-gather needs fixed-size "
+                         "payloads)")
     ap.add_argument("--scaling", default=None,
                     help="FP8 scaling policy for the model exchange: "
                          "'current' (default; fresh per-tile scales, "
@@ -149,11 +169,18 @@ def main():
         mesh = make_client_mesh(shape[0])
     codec_kw = {}
     if args.codec:
-        # delta codecs ride the uplink only: the downlink receiver holds no
-        # reference model (WireLink rejects delta-down)
+        # uplink-only wrappers (delta: reference model, ef: residual
+        # memory) are stripped off the downlink spec; rans/grids keep it
         codec_kw["up_codec"] = args.codec
-        if not args.codec.startswith("delta"):
-            codec_kw["down_codec"] = args.codec
+        down = _downlink_codec(args.codec)
+        if down != "e4m3" or not (args.codec.startswith("delta")
+                                  or args.codec.startswith("ef")):
+            codec_kw["down_codec"] = down
+        if (args.codec == "ef" or args.codec.startswith("ef:")) \
+                and mesh is None:
+            ap.error("--codec ef:* is stateful (per-client residual "
+                     "memory) and needs the RoundEngine path: pass "
+                     "--mesh D")
     scaling_pol = None
     if args.scaling:
         from repro.core import scaling as scaling_lib
@@ -227,12 +254,18 @@ def main():
             key, kr = jax.random.split(key)
             state, m = round_fn(state, cdata, clabels, nk, kr)
             traced = int(m["wire_bytes"])
-            # the byte contract the tests pin, asserted live: the traced
-            # per-round count equals the static codec accounting exactly
-            assert traced == static_bytes, (traced, static_bytes)
+            # the byte contract the tests pin, asserted live: a static
+            # link's traced count equals the codec accounting exactly; a
+            # dynamic (rans) link stays under its structural bound
+            if eng.dynamic:
+                assert 0 < traced <= static_bytes, (traced, static_bytes)
+            else:
+                assert traced == static_bytes, (traced, static_bytes)
             total_bytes += traced
             print(f"round {r+1}: mean local loss "
                   f"{float(m['local_loss']):.4f}  "
+                  f"wire {traced/1e6:.2f} MB "
+                  f"(bound {static_bytes/1e6:.2f})  "
                   f"cum MB {total_bytes/1e6:.1f}  ({desc})")
         print(f"payload/model: {per_down/1e6:.2f} MB down, "
               f"{per_up/1e6:.2f} MB up ({wire_desc})")
@@ -248,9 +281,33 @@ def main():
     # materializing the payload) — delta codecs take the round's broadcast
     # as their reference
     spec = wire.make_wire_spec(params)
-    up_transit = jax.jit(
-        lambda p, k, ref: link.up_c.fake_quant(p, spec, k, ref=ref)
-    )
+    # a dynamic (rans) leg's true size only exists on its materialized
+    # payload, so those legs run the real encode->decode and report the
+    # traced coded bytes next to the static bound; static legs keep the
+    # payload-free fake_quant fast path and charge their exact bound
+    down_dyn = bool(getattr(link.down_c, "dynamic", False))
+    up_dyn = bool(getattr(link.up_c, "dynamic", False))
+    if up_dyn:
+        def _up(p, k, ref):
+            payload = link.up_c.encode(p, spec, k, ref=ref)
+            return (link.up_c.decode(payload, spec, ref=ref),
+                    link.up_c.payload_nbytes_traced(payload, spec))
+        up_transit = jax.jit(_up)
+    else:
+        up_transit = jax.jit(
+            lambda p, k, ref: (link.up_c.fake_quant(p, spec, k, ref=ref),
+                               jnp.asarray(per_up))
+        )
+    if down_dyn:
+        def _down(p, k):
+            payload = link.down_c.encode(p, spec, k)
+            return (link.down_c.decode(payload, spec),
+                    link.down_c.payload_nbytes_traced(payload, spec))
+        down_transit = jax.jit(_down)
+    else:
+        down_transit = jax.jit(
+            lambda p, k: (link.down(p, spec, k), jnp.asarray(per_down))
+        )
 
     # the server tail: same Aggregator objects the engine/simulator use;
     # stateful ones carry momentum in agg_state between rounds
@@ -262,8 +319,9 @@ def main():
         active = np.asarray(
             jax.random.permutation(k_sel, args.clients)[: args.active]
         )
-        down = link.down(params, spec, k_down)
-        msgs, losses = [], []
+        down, down_b = down_transit(params, k_down)
+        down_b = int(down_b)
+        msgs, losses, up_b = [], [], 0
         for i, c in enumerate(active):
             xb, yb = client_batches_for(int(c), fed.local_steps)
             # tensorize one big "client dataset" and run U local steps
@@ -271,15 +329,24 @@ def main():
             flat_y = yb.reshape(-1, args.seq)
             p_c, l_c = local_update(down, flat_x, flat_y,
                                     jax.random.fold_in(k_loc, i))
-            msgs.append(up_transit(p_c, jax.random.fold_in(k_up, i), down))
+            msg, tb = up_transit(p_c, jax.random.fold_in(k_up, i), down)
+            msgs.append(msg)
+            up_b += int(tb)
             losses.append(float(l_c))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *msgs)
         params, agg_state = aggregator(
             params, stacked, jnp.ones((len(active),)), k_srv, agg_state
         )
-        total_bytes += len(active) * (per_down + per_up)
-        print(f"round {r+1}: mean local loss {np.mean(losses):.4f}  "
-              f"cum MB {total_bytes/1e6:.1f}")
+        assert down_b <= per_down and up_b <= len(active) * per_up
+        total_bytes += len(active) * down_b + up_b
+        line = (f"round {r+1}: mean local loss {np.mean(losses):.4f}  "
+                f"cum MB {total_bytes/1e6:.1f}")
+        if down_dyn or up_dyn:
+            line += (f"  [down {down_b} B/client"
+                     f"{f' (bound {per_down})' if down_dyn else ''}, "
+                     f"up {up_b // len(active)} B/client"
+                     f"{f' (bound {per_up})' if up_dyn else ''}]")
+        print(line)
     print(f"payload/model: {per_down/1e6:.2f} MB down, "
           f"{per_up/1e6:.2f} MB up ({wire_desc})")
 

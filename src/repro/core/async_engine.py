@@ -276,6 +276,21 @@ class BufferedAsyncEngine:
                 "per-round schedules assume the sync engine's single "
                 "global round counter"
             )
+        if getattr(self.link, "up_is_ef", False):
+            raise ValueError(
+                "BufferedAsyncEngine does not take an ErrorFeedbackCodec "
+                "uplink: EF residual memory assumes the sync engine's "
+                "cohort gather/scatter of ServerState.clients — the async "
+                "push path already carries its own bias correction "
+                "(delta-coded updates against the pulled base)"
+            )
+        if getattr(self.link, "dynamic", False):
+            raise ValueError(
+                "BufferedAsyncEngine does not take RansCodec legs: its "
+                "byte ledger charges the static per-job (pull, push) "
+                "sizes, which would over-charge an entropy-coded wire — "
+                "use the sync RoundEngine for dynamic-payload accounting"
+            )
         if cfg.min_quorum or cfg.quorum_policy != "skip":
             raise ValueError(
                 "FedConfig.min_quorum/quorum_policy are sync-round "

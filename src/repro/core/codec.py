@@ -72,6 +72,31 @@ the codec quantizes onto*, so it lives in a separate policy object
 :func:`leg_nbytes` takes the policy and adds its exact payload delta, so
 static byte accounting == the engine's traced ``wire_bytes`` for every
 policy.
+
+Dynamic payloads (the two-lane byte protocol)
+=============================================
+Entropy-coded payloads (``core.entropy.RansCodec``, and
+``core.ef.ErrorFeedbackCodec`` over one) have DATA-DEPENDENT size, so
+"static == traced" splits into two lanes with an invariant between them:
+
+* ``payload_nbytes(spec)`` — the static lane — becomes the worst-case
+  structural BOUND: what wire buffers are sized to, what
+  ``engine.round_bytes`` / ``metrics.round_bytes`` / FedSim's
+  ``bytes_per_round`` report, and what the sub-GiB int32 guard checks.
+  For every non-dynamic codec it remains the exact payload size.
+* ``payload_nbytes_traced(payload, spec)`` — the traced lane — charges
+  the TRUE coded bytes of one concrete payload (int32, vmap-safe),
+  computed inside the jitted round from the payload itself. The engine's
+  ``wire_bytes`` metric, FedSim's cumulative byte ledger, and the fault
+  path's partial accounting (P downlinks + transmitted uplinks only)
+  all switch to this lane when a leg's codec has ``dynamic = True``.
+  The base-class default returns the static bound, so the two lanes
+  coincide for every ordinary codec.
+
+The invariant — static bound >= traced bytes, payload by payload — holds
+by construction (rANS emits at most 2 bytes/symbol/lane into a buffer
+sized exactly so) and is asserted across codecs, legs, and fault
+realizations in tests/test_entropy.py and tests/test_ef.py.
 """
 from __future__ import annotations
 
@@ -179,6 +204,10 @@ class WireCodec:
     # with their `tag` properties.
     tag = "?"
     quantized: ClassVar[bool] = True
+    # True when payload size is data-dependent (see "Dynamic payloads"
+    # in the module docstring): payload_nbytes is then a static BOUND
+    # and payload_nbytes_traced the true coded size
+    dynamic: ClassVar[bool] = False
 
     def encode(self, params: PyTree, spec: wire.WireSpec, key: Array,
                ref: PyTree | None = None) -> dict:
@@ -197,6 +226,15 @@ class WireCodec:
 
     def code_nbytes(self, spec: wire.WireSpec) -> int:
         raise NotImplementedError
+
+    def payload_nbytes_traced(self, payload: dict,
+                              spec: wire.WireSpec) -> Array:
+        """True wire bytes of ONE concrete payload, traced (int32).
+
+        Defaults to the static ``payload_nbytes`` — exact for every
+        codec with ``dynamic = False``; dynamic codecs override it with
+        the data-dependent count (always <= the static bound)."""
+        return jnp.int32(self.payload_nbytes(spec))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -621,9 +659,24 @@ class CodecSchedule:
             raise ValueError(f"boundaries must increase: {self.boundaries}")
         for c in self.codecs:
             if not isinstance(c, Fp8Codec):  # Fp8Codec or PackedFpCodec
+                kind = type(c).__name__
+                if kind == "ErrorFeedbackCodec":
+                    raise ValueError(
+                        "CodecSchedule cannot hold ErrorFeedbackCodec: EF "
+                        "is stateful (per-client residual memory) and must "
+                        "be the leg's sole codec — wrap the whole schedule "
+                        "idea as ef:<grid> on the uplink instead"
+                    )
+                if kind == "RansCodec":
+                    raise ValueError(
+                        "CodecSchedule cannot hold RansCodec: schedule "
+                        "branches must agree on payload schema, and the "
+                        "entropy-coded payload adds a dynamic 'rans' entry "
+                        "— use rans:<grid> as the leg's sole codec instead"
+                    )
                 raise ValueError(
                     "CodecSchedule members must be grid codecs (Fp8Codec/"
-                    f"PackedFpCodec); got {type(c).__name__}"
+                    f"PackedFpCodec); got {kind}"
                 )
 
     quantized: ClassVar[bool] = True
@@ -672,18 +725,33 @@ register_codec("delta", DeltaCodec(Fp8Codec(E4M3, "rand")))
 
 def get_codec(c) -> WireCodec:
     """Resolve a codec spec: a WireCodec/CodecSchedule instance passes
-    through; a string looks up the registry (``delta:<inner>`` composes)."""
+    through; a string looks up the registry. Prefixes compose recursively:
+    ``delta:<inner>`` (residual coding), ``rans:<inner>`` (static-table
+    entropy coding, ``core.entropy``), ``ef:<inner>`` (error feedback,
+    ``core.ef`` — uplink only). Bare ``rans``/``ef`` default their inner
+    to the registry default, mirroring bare ``delta``."""
     if isinstance(c, (WireCodec, CodecSchedule)):
         return c
     if isinstance(c, str):
         name = c.lower()
         if name.startswith("delta:"):
             return DeltaCodec(get_codec(name[len("delta:"):]))
+        if name.startswith("rans:") or name == "rans":
+            # imported lazily: entropy builds on this module
+            from .entropy import RansCodec
+
+            inner = name[len("rans:"):] or "e4m3"
+            return RansCodec(get_codec(inner))
+        if name.startswith("ef:") or name == "ef":
+            from .ef import ErrorFeedbackCodec
+
+            inner = name[len("ef:"):] or "e4m3"
+            return ErrorFeedbackCodec(get_codec(inner))
         if name in _REGISTRY:
             return _REGISTRY[name]
         raise KeyError(
             f"unknown codec {c!r}; registered: {sorted(_REGISTRY)} "
-            "(or 'delta:<name>')"
+            "(or composed 'delta:<name>' / 'rans:<name>' / 'ef:<name>')"
         )
     raise TypeError(f"cannot resolve a codec from {type(c).__name__}")
 

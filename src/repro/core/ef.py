@@ -1,0 +1,202 @@
+"""EF21-style error feedback — persistent per-client residual memory.
+
+Biased det-mode codecs diverge under FedAvg: the rounding error of
+``Q_det`` has a systematic component that the weighted mean never cancels
+(the fp4_e2m1_det cell of BENCH_formats.json craters to ~0.79 accuracy
+while its stochastic twin holds parity). Error feedback fixes this
+without touching the codec: each client REMEMBERS what compression
+destroyed and adds it back before the next encode (Seide et al.,
+*1-bit SGD*; Richtarik et al., *EF21*):
+
+    compensated = client_params + e_i          (client i's memory)
+    message     = Q(compensated)               (what crosses the wire)
+    e_i        <- compensated - message        (what Q destroyed)
+
+The residual is a contraction for any reasonable compressor, so the
+accumulated bias stays bounded and the fixed points of the aggregation
+are exactly the uncompressed ones — biased-but-cheap codecs become
+convergent (verified on the format-ablation task: ef:fp4_e2m1_det
+recovers fp32-parity accuracy).
+
+:class:`ErrorFeedbackCodec` is the registry plug-in (``ef:<inner>``),
+but unlike every other codec it CANNOT be driven through the stateless
+``encode``/``decode`` protocol: the residual must persist across rounds,
+per client. It is the subsystem that forces the first persistent
+per-client state through the engine — a :class:`ClientState` pytree
+carried in ``engine.ServerState.clients``, gathered/scattered by cohort
+index each round, threaded through every executor, the fault path, and
+checkpointing (``ServerState.clients`` rides the path-flattened
+checkpoint like any other leaf). The engine calls :meth:`up_transit`
+with the cohort's residual rows; plain ``encode``/``fake_quant`` raise
+with pointers to the right entry point.
+
+Semantics decided here (and asserted in tests/test_ef.py):
+
+* The residual covers the QUANTIZED plane only — non-quantized leaves
+  ride FP32 exactly, so their error is identically zero.
+* Residuals update for every client that TRANSMITTED, including
+  corrupted-but-transmitted ones: the memory is client-side state and
+  the client cannot know the server's checksum rejected its payload.
+  Dropped/timed-out clients keep their old residual (they never
+  encoded).
+* A quorum-skipped round still updates residuals even though the server
+  reverts params/opt — same reasoning: the clients did compress.
+* Error feedback lives on the UPLINK. The downlink broadcast goes to
+  freshly-sampled clients that hold no memory of previous broadcasts,
+  so there is no residual to feed back — rejected eagerly by
+  ``engine.WireLink`` (same pattern as DeltaCodec's downlink rejection).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import wire
+from .codec import DeltaCodec, Fp8Codec, WireCodec
+from .entropy import RansCodec
+from .plane import f32 as _f32, nelem as _nelem
+
+Array = jax.Array
+PyTree = Any
+
+
+class ClientState(NamedTuple):
+    """Persistent per-client engine state (the pytree carried in
+    ``ServerState.clients``). ``resid`` is the (n_clients, spec.total)
+    f32 error-feedback memory — row i is client i's flattened
+    quantized-plane residual, zero until the client's first
+    transmission."""
+
+    resid: Array
+
+
+def init_client_state(n_clients: int, spec: wire.WireSpec) -> ClientState:
+    return ClientState(
+        resid=jnp.zeros((n_clients, spec.total), jnp.float32)
+    )
+
+
+def flatten_q(params: PyTree, spec: wire.WireSpec) -> Array:
+    """Quantized leaves -> one (spec.total,) f32 vector (``spec.q_offsets``
+    order, no tile padding — the same layout the FP8 code buffer uses)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    if not spec.q_slots:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate(
+        [_f32(leaves[i].reshape(-1)) for i in spec.q_slots]
+    )
+
+
+def add_resid(params: PyTree, e: Array, spec: wire.WireSpec) -> PyTree:
+    """``params + e`` on the quantized leaves only (EF compensation)."""
+    leaves = list(jax.tree_util.tree_leaves(params))
+    for qi, slot in enumerate(spec.q_slots):
+        off = spec.q_offsets[qi]
+        n = _nelem(spec.q_shapes[qi])
+        leaves[slot] = (
+            _f32(leaves[slot])
+            + e[off:off + n].reshape(spec.q_shapes[qi])
+        ).astype(spec.q_dtypes[qi])
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCodec(WireCodec):
+    """Error-feedback wrapper over a grid (or rans-stacked) codec.
+
+    ``inner`` quantizes the COMPENSATED parameters; the engine supplies
+    and receives the residual memory through :meth:`up_transit`. Inner
+    may be a grid codec (``Fp8Codec``/``PackedFpCodec``) or a
+    :class:`~repro.core.entropy.RansCodec` over one — byte accounting,
+    ``quantized``, and ``dynamic`` all delegate to it. ``DeltaCodec`` is
+    rejected: delta's reference-residual and EF's memory-residual are
+    competing mechanisms whose composition double-counts the reference
+    (and delta's unbiased-SR rationale is exactly what EF makes
+    unnecessary).
+    """
+
+    inner: WireCodec = Fp8Codec()
+
+    quantized: ClassVar[bool] = True
+
+    def __post_init__(self):
+        inner = self.inner
+        bad_delta = isinstance(inner, DeltaCodec) or (
+            isinstance(inner, RansCodec)
+            and isinstance(inner.inner, DeltaCodec)
+        )
+        if bad_delta:
+            raise ValueError(
+                "ErrorFeedbackCodec over DeltaCodec is not supported: EF "
+                "memory-residuals and delta reference-residuals are "
+                "competing mechanisms — use ef:<grid> or ef:rans:<grid> "
+                "(EF already makes biased det grids convergent)"
+            )
+        if not isinstance(inner, (Fp8Codec, RansCodec)):
+            raise ValueError(
+                "ErrorFeedbackCodec composes over a grid codec (Fp8Codec/"
+                "PackedFpCodec) or RansCodec; got "
+                f"{type(inner).__name__}"
+            )
+
+    @property
+    def tag(self) -> str:
+        return f"ef:{self.inner.tag}"
+
+    @property
+    def dynamic(self) -> bool:
+        return bool(getattr(self.inner, "dynamic", False))
+
+    # --- the engine-driven transit ---------------------------------------
+    def up_transit(self, stacked: PyTree, spec: wire.WireSpec,
+                   keys: Array, e_sel: Array):
+        """One uplink leg for a stacked cohort with residual memory.
+
+        ``stacked`` — (P, ...)-leading client params; ``keys`` — (P, 2)
+        per-client encode keys; ``e_sel`` — (P, spec.total) the cohort's
+        gathered residual rows. Returns ``(msgs, new_e, payloads)``:
+        the decoded (P, ...) messages the server aggregates, the updated
+        residual rows to scatter back, and the stacked inner payloads
+        (used only by dynamic inners for traced byte accounting — dead
+        code otherwise, which XLA removes).
+        """
+
+        def one(p, k, e):
+            comp = add_resid(p, e, spec)
+            payload = self.inner.encode(comp, spec, k)
+            dec = self.inner.decode(payload, spec)
+            new_e = flatten_q(comp, spec) - flatten_q(dec, spec)
+            return dec, new_e, payload
+
+        return jax.vmap(one)(stacked, keys, e_sel)
+
+    # --- stateless protocol: refuse, with pointers -----------------------
+    _NEEDS_ENGINE = (
+        "ErrorFeedbackCodec is stateful (per-client residual memory) and "
+        "cannot run through the stateless encode/decode protocol — drive "
+        "it through engine.RoundEngine (uplink leg), which threads "
+        "ClientState.resid, or call up_transit() with explicit residual "
+        "rows"
+    )
+
+    def encode(self, params, spec, key, ref=None):
+        raise ValueError(self._NEEDS_ENGINE)
+
+    def decode(self, payload, spec, ref=None):
+        raise ValueError(self._NEEDS_ENGINE)
+
+    def fake_quant(self, params, spec, key, ref=None):
+        raise ValueError(self._NEEDS_ENGINE)
+
+    # --- byte accounting: EF adds nothing to the wire --------------------
+    def payload_nbytes(self, spec):
+        return self.inner.payload_nbytes(spec)
+
+    def code_nbytes(self, spec):
+        return self.inner.code_nbytes(spec)
+
+    def payload_nbytes_traced(self, payload, spec):
+        return self.inner.payload_nbytes_traced(payload, spec)

@@ -57,9 +57,11 @@ import jax
 import jax.numpy as jnp
 
 from . import codec as codec_lib
+from . import ef as ef_lib
 from . import scaling as scaling_lib
 from . import wire
 from .codec import CodecSchedule, DeltaCodec, Fp32Codec, Fp8Codec, WireCodec
+from .ef import ErrorFeedbackCodec
 from .faults import FaultModel, quorum_count
 from .fp8 import E4M3, E5M2, FP8Format
 from .qat import QATConfig
@@ -83,13 +85,20 @@ class ServerState(NamedTuple):
     :class:`repro.core.scaling.ScalingPolicy` state (a ``(down, up)``
     tuple — the rolling amax history of a delayed leg) and likewise stays
     ``()`` unless a leg scales away from ``current``, so every legacy
-    checkpoint keeps its exact pytree.
+    checkpoint keeps its exact pytree. ``clients`` is persistent
+    PER-CLIENT state — today a :class:`repro.core.ef.ClientState` holding
+    the ``(n_clients, spec.total)`` error-feedback residual memory of an
+    :class:`~repro.core.ef.ErrorFeedbackCodec` uplink — gathered by
+    cohort index each round and scattered back after the uplink; it
+    stays ``()`` on every non-EF link (same conditional-leaf discipline
+    as ``round``/``scales``), so legacy checkpoints are untouched.
     """
 
     params: PyTree
     opt: PyTree
     round: PyTree = ()
     scales: PyTree = ()
+    clients: PyTree = ()
 
 
 # ---------------------------------------------------------------------------
@@ -536,6 +545,14 @@ class WireLink:
                 "Use it on the uplink, where the reference is the round's "
                 "broadcast."
             )
+        if isinstance(down, ErrorFeedbackCodec):
+            raise ValueError(
+                "ErrorFeedbackCodec cannot run on the downlink: the "
+                "receivers are freshly-sampled clients holding no memory "
+                "of previous broadcasts, so there is no residual to feed "
+                "back. Use it on the uplink, where the engine threads "
+                "per-client residual state (ServerState.clients)."
+            )
         down_p = scaling_lib.get_policy(self.down_scaling)
         up_p = scaling_lib.get_policy(self.up_scaling)
         for leg, pol, c in (("down", down_p, down), ("up", up_p, up)):
@@ -576,6 +593,28 @@ class WireLink:
     @property
     def needs_ref(self) -> bool:
         return isinstance(self._up_c, DeltaCodec)
+
+    @property
+    def up_is_ef(self) -> bool:
+        """True when the uplink is an :class:`ErrorFeedbackCodec` — the
+        engine must thread per-client residual state through the round."""
+        return isinstance(self._up_c, ErrorFeedbackCodec)
+
+    @property
+    def down_dynamic(self) -> bool:
+        return bool(getattr(self._down_c, "dynamic", False))
+
+    @property
+    def up_dynamic(self) -> bool:
+        return bool(getattr(self._up_c, "dynamic", False))
+
+    @property
+    def dynamic(self) -> bool:
+        """True when any leg's coded size is data-dependent (a RansCodec,
+        possibly under EF) — the round builders then charge ``wire_bytes``
+        from the traced lane (``payload_nbytes_traced``) while the static
+        ``payload_nbytes`` bound keeps sizing buffers and guards."""
+        return self.down_dynamic or self.up_dynamic
 
     # resolved scaling policies (read-only views)
     @property
@@ -730,6 +769,86 @@ class WireLink:
         if isinstance(c, CodecSchedule):
             return _sched_switch(c, r, leg, client_params, keys)
         return leg(c, client_params, keys)
+
+    # --- dynamic / error-feedback legs (engine-driven) -------------------
+
+    def down_traced(self, params: PyTree, spec: wire.WireSpec, key: Array):
+        """Dynamic downlink: ``(received_tree, traced_bytes)`` of ONE
+        model copy — same transit as :meth:`down`, but the payload is
+        kept long enough to charge its true coded size."""
+        c = self._down_c
+        if not (c.quantized and spec.q_slots):
+            return params, jnp.int32(
+                codec_lib.leg_nbytes(c, spec, policy=self._down_p)
+            )
+        payload = c.encode(params, spec, key)
+        return c.decode(payload, spec), c.payload_nbytes_traced(payload,
+                                                               spec)
+
+    def up_traced(self, client_params: PyTree, spec: wire.WireSpec,
+                  key: Array, cohort: int, ref: PyTree | None = None):
+        """Dynamic uplink: ``(msgs, per_client_bytes)`` — the decoded
+        cohort stack plus each client's true coded size, (cohort,) i32."""
+        c = self._up_c
+        if not (c.quantized and spec.q_slots):
+            return client_params, jnp.full(
+                (cohort,), codec_lib.leg_nbytes(c, spec,
+                                                policy=self._up_p),
+                jnp.int32,
+            )
+        up_keys = jax.random.split(key, cohort)
+        payloads = jax.vmap(
+            lambda p, pk: c.encode(p, spec, pk, ref=ref)
+        )(client_params, up_keys)
+        msgs = jax.vmap(lambda pl: c.decode(pl, spec, ref=ref))(payloads)
+        per = jax.vmap(
+            lambda pl: c.payload_nbytes_traced(pl, spec)
+        )(payloads)
+        return msgs, per
+
+    def up_ef(self, client_params: PyTree, spec: wire.WireSpec,
+              key: Array, cohort: int, e_sel: Array):
+        """Error-feedback uplink: ``(msgs, new_e, per_client_bytes)``.
+
+        ``e_sel`` is the cohort's gathered (cohort, spec.total) residual
+        rows; ``new_e`` is the updated rows the engine scatters back
+        (fault masking — dropped clients keep old rows — is the
+        engine's job, since only it sees the draw)."""
+        c = self._up_c
+        if not (c.quantized and spec.q_slots):
+            return client_params, e_sel, jnp.full(
+                (cohort,), codec_lib.leg_nbytes(c, spec,
+                                                policy=self._up_p),
+                jnp.int32,
+            )
+        up_keys = jax.random.split(key, cohort)
+        msgs, new_e, payloads = c.up_transit(client_params, spec,
+                                             up_keys, e_sel)
+        if getattr(c, "dynamic", False):
+            inner = c.inner
+            per = jax.vmap(
+                lambda pl: inner.payload_nbytes_traced(pl, spec)
+            )(payloads)
+        else:
+            per = jnp.full(
+                (cohort,), codec_lib.leg_nbytes(c, spec,
+                                                policy=self._up_p),
+                jnp.int32,
+            )
+        return msgs, new_e, per
+
+    def up_gather_ef(self, comp_params: PyTree, keys: Array, axis: str,
+                     n_keep: int):
+        """Error-feedback uplink for the sharded executor (inside
+        ``shard_map``): the caller has already COMPENSATED this shard's
+        client stack (``ef.add_resid``); the inner grid codec crosses
+        the wire exactly like :meth:`up_gather`."""
+        from .compression import fp8_wire_allgather_clients
+
+        return fp8_wire_allgather_clients(
+            comp_params, keys, (axis,), codec=self._up_c.inner,
+            n_keep=n_keep,
+        )
 
     def down_bytes(self, spec: wire.WireSpec, r: int = 0) -> int:
         """Exact bytes of one downlink model copy (static, per receiver).
@@ -1245,6 +1364,33 @@ class RoundEngine:
         # likewise, only links with a non-current ScalingPolicy thread
         # scaling state — 'current' rounds keep the legacy trace verbatim
         self.scaled = bool(getattr(self.link, "scaled", False))
+        # an ErrorFeedbackCodec uplink threads per-client residual memory
+        # (ServerState.clients); a dynamic leg (RansCodec) switches the
+        # wire_bytes metric to the traced lane. Both gates are static, so
+        # non-EF / non-dynamic links keep the legacy trace verbatim.
+        self.ef_up = bool(getattr(self.link, "up_is_ef", False))
+        self.dynamic = bool(getattr(self.link, "dynamic", False))
+        # residual rows are indexed by GLOBAL client id — follow the
+        # sampler's pool, like the cohort follows the sampler
+        self.pool = getattr(self.sampler, "n_clients", cfg.n_clients)
+        if isinstance(self.executor, ShardedExecutor):
+            if self.dynamic:
+                raise ValueError(
+                    "RansCodec legs do not compose with ShardedExecutor: "
+                    "the fused u8 uplink all-gather moves fixed-size code "
+                    "buffers and cannot carry the per-lane 'rans' state "
+                    "entry. Use VmapExecutor/ChunkedExecutor for "
+                    "entropy-coded links, or drop the rans: wrapper on "
+                    "the sharded run."
+                )
+            if self.ef_up and self.executor.model_axis is not None:
+                raise ValueError(
+                    "ErrorFeedbackCodec does not compose with a 2D "
+                    "(clients x fsdp) mesh: the residual memory is laid "
+                    "out over the GLOBAL wire spec while the fed2d round "
+                    "encodes per-device local planes. Use the 1D sharded "
+                    "round (model_axis=None) or an unsharded executor."
+                )
         self._local_update = make_local_update(loss_fn, optimizer, cfg)
         self.round_fn = self._build_round()
 
@@ -1254,6 +1400,11 @@ class RoundEngine:
             opt=self.aggregator.init(params),
             round=jnp.zeros((), jnp.int32) if self.scheduled else (),
             scales=self.link.scales_init(params) if self.scaled else (),
+            clients=(
+                ef_lib.init_client_state(self.pool,
+                                         wire.make_wire_spec(params))
+                if self.ef_up else ()
+            ),
         )
 
     def stateless(self) -> bool:
@@ -1313,6 +1464,12 @@ class RoundEngine:
         scaled = self.scaled
         down_scaled_leg = scaled and not link.down_p.is_current
         up_scaled_leg = scaled and not link.up_p.is_current
+        # static EF / dynamic gates: non-EF, non-dynamic links take every
+        # ORIGINAL branch below verbatim (legacy trace, bitwise contract)
+        ef_up = self.ef_up
+        down_dyn = bool(getattr(link, "down_dynamic", False))
+        up_dyn = bool(getattr(link, "up_dynamic", False))
+        dyn = down_dyn or up_dyn
         faults: FaultModel | None = self.faults
         lat_table = (faults.latencies(cfg.n_clients)
                      if faults is not None else None)
@@ -1339,6 +1496,9 @@ class RoundEngine:
             if down_scaled_leg:
                 down, st_down = link.down_scaled(server_params, spec,
                                                  k_down, st_down)
+            elif down_dyn:
+                down, down_tb = link.down_traced(server_params, spec,
+                                                 k_down)
             else:
                 down = link.down(server_params, spec, k_down, r=r)
 
@@ -1363,6 +1523,16 @@ class RoundEngine:
             if up_scaled_leg:
                 msgs, up_amax = link.up_scaled(client_params, spec, k_up,
                                                P, st_up)
+            elif ef_up:
+                # gather the cohort's residual rows, compensate-encode-
+                # update through the EF codec, scatter back below (after
+                # the fault draw decides who actually transmitted)
+                e_sel = state.clients.resid[idx]
+                msgs, new_e, up_tb = link.up_ef(client_params, spec,
+                                                k_up, P, e_sel)
+            elif up_dyn:
+                msgs, up_tb = link.up_traced(client_params, spec, k_up,
+                                             P, ref=down)
             else:
                 msgs = link.up(client_params, spec, k_up, P, ref=down, r=r)
 
@@ -1388,6 +1558,22 @@ class RoundEngine:
                                    jnp.ones_like(nk_agg))
             else:
                 nk_agg = nk_sel
+
+            # --- residual commit (EF): client-side memory. Every client
+            # that TRANSMITTED updates its row — including corrupted ones
+            # (the client cannot see the server's checksum reject);
+            # dropped/timed-out clients never encoded, so they keep their
+            # old rows. A quorum-skipped round still commits (the clients
+            # did compress) — see the core.ef docstring.
+            if ef_up:
+                if faults is not None:
+                    new_e = jnp.where(fd.transmitted[:, None], new_e,
+                                      e_sel)
+                new_clients = state.clients._replace(
+                    resid=state.clients.resid.at[idx].set(new_e)
+                )
+            else:
+                new_clients = state.clients
 
             # --- delayed-uplink history append ---------------------------
             # the server's next-round scales come from what it RECEIVED:
@@ -1427,13 +1613,33 @@ class RoundEngine:
                     new_scales = keep(new_scales, state.scales)
 
             if faults is not None:
-                # static sub-GiB guard per phase, then the traced count:
-                # P downlink copies + only the TRANSMITTED uplink payloads
+                # static sub-GiB guard per phase (at the BOUND for dynamic
+                # legs), then the traced count: P downlink copies + only
+                # the TRANSMITTED uplink payloads, dynamic legs charged at
+                # their true coded size (bound >= traced by construction)
                 for pr in (_schedule_probe_rounds(link)
                            if scheduled else [0]):
                     _exact_round_bytes(link, spec, P, pr)
                 down_b, up_b = link.leg_bytes_traced(spec, r)
-                wire_b = P * down_b + n_tx * up_b
+                if down_dyn:
+                    down_b = down_tb
+                if ef_up or up_dyn:
+                    up_total = jnp.sum(
+                        up_tb * fd.transmitted.astype(jnp.int32)
+                    )
+                else:
+                    up_total = n_tx * up_b
+                wire_b = P * down_b + up_total
+            elif dyn:
+                # static sub-GiB guard at the bound, then the true coded
+                # bytes from the traced lane
+                _exact_round_bytes(link, spec, P)
+                down_b, up_b = link.leg_bytes_traced(spec, r)
+                if down_dyn:
+                    down_b = down_tb
+                up_total = (jnp.sum(up_tb) if (ef_up or up_dyn)
+                            else P * up_b)
+                wire_b = P * down_b + up_total
             elif scheduled:
                 # per-phase static sub-GiB guard, then the traced per-round
                 # count resolved from the round-index operand
@@ -1461,7 +1667,7 @@ class RoundEngine:
                 )
             return ServerState(new_params, new_opt,
                                (r + 1) if scheduled else (),
-                               new_scales), metrics
+                               new_scales, new_clients), metrics
 
         return round_fn
 
@@ -1485,7 +1691,7 @@ class RoundEngine:
         P = self.cohort
         ex: ShardedExecutor = self.executor
         mesh, axis = ex.mesh, ex.axis
-        _, padded = ex.pad_to_shards(P)
+        local, padded = ex.pad_to_shards(P)
         sampler, link, aggregator = self.sampler, self.link, self.aggregator
         local_update = self._local_update
         scheduled = self.scheduled
@@ -1494,6 +1700,9 @@ class RoundEngine:
         scaled = self.scaled
         down_scaled_leg = scaled and not link.down_p.is_current
         up_scaled_leg = scaled and not link.up_p.is_current
+        # EF gate (dynamic legs are rejected for this executor, so the
+        # inner codec here is always a fixed-size grid codec)
+        ef_up = self.ef_up
         cfg = self.cfg
         faults: FaultModel | None = self.faults
         lat_table = (faults.latencies(cfg.n_clients)
@@ -1569,6 +1778,45 @@ class RoundEngine:
                     check_rep=False,
                 )(down, data[sel], labels[sel], loc_keys[pad_idx],
                   up_keys[pad_idx], st_up)
+            elif ef_up:
+                # EF uplink fused into the shard: residual rows ride in
+                # cohort-sharded, each shard compensates ITS clients, the
+                # inner grid codec crosses the wire exactly like the
+                # legacy gather, and the new residual rows come back
+                # sharded. Padded rows duplicate cohort rows (same keys,
+                # same residual), so slicing [:P] outside recovers the
+                # exact cohort-order rows the local round computes.
+                def shard_body_ef(dn, d, l, lk, uk, e):
+                    client_params, losses = ex.run_shard(
+                        local_update, dn, d, l, lk, P
+                    )
+                    client_params, losses = jax.lax.optimization_barrier(
+                        (client_params, losses)
+                    )
+                    comp = jax.vmap(
+                        lambda p, ei: ef_lib.add_resid(p, ei, spec)
+                    )(client_params, e)
+                    msgs = link.up_gather_ef(comp, uk, axis, n_keep=P)
+                    # this shard's decoded twins: row j here is cohort
+                    # client (start + j) % P of the replicated stack
+                    start = jax.lax.axis_index(axis) * local
+                    take = (start + jnp.arange(local, dtype=jnp.int32)) % P
+                    dec = jax.tree.map(lambda x: x[take], msgs)
+                    flat = jax.vmap(lambda t: ef_lib.flatten_q(t, spec))
+                    new_e = flat(comp) - flat(dec)
+                    g = jax.lax.all_gather(losses, axis)
+                    return msgs, g.reshape(-1)[:P], new_e
+
+                e_sel_pad = state.clients.resid[sel]
+                msgs, losses, new_e_pad = shard_map(
+                    shard_body_ef, mesh=mesh,
+                    in_specs=(rep, sh, sh, sh, sh, sh),
+                    out_specs=(rep, rep, sh),
+                    check_rep=False,
+                )(down, data[sel], labels[sel], loc_keys[pad_idx],
+                  up_keys[pad_idx], e_sel_pad)
+                new_e = new_e_pad[:P]
+                e_sel = e_sel_pad[:P]
             elif scheduled:
                 # the round-index rides replicated into the shard so the
                 # scheduled uplink resolves its phase inside shard_map
@@ -1609,6 +1857,19 @@ class RoundEngine:
                                    jnp.ones_like(nk_agg))
             else:
                 nk_agg = nk_sel
+
+            # --- residual commit (EF, replicated): same semantics as the
+            # local round — transmitters update, dropped clients keep old
+            # rows, quorum-skips still commit (core.ef docstring)
+            if ef_up:
+                if faults is not None:
+                    new_e = jnp.where(fd.transmitted[:, None], new_e,
+                                      e_sel)
+                new_clients = state.clients._replace(
+                    resid=state.clients.resid.at[idx].set(new_e)
+                )
+            else:
+                new_clients = state.clients
 
             # --- delayed-uplink history append (replicated; identical
             # math to the local round, so the contract holds under
@@ -1689,7 +1950,7 @@ class RoundEngine:
                 )
             return ServerState(new_params, new_opt,
                                (r + 1) if scheduled else (),
-                               new_scales), metrics
+                               new_scales, new_clients), metrics
 
         return round_fn
 
@@ -2000,6 +2261,6 @@ class RoundEngine:
                 )
             return ServerState(new_params, new_opt,
                                (r + 1) if scheduled else (),
-                               new_scales), metrics
+                               new_scales, state.clients), metrics
 
         return round_fn

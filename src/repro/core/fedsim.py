@@ -189,6 +189,12 @@ class FedSim:
         # price of exact partial-round accounting.
         scheduled = getattr(self.engine, "scheduled", False)
         faulty = getattr(self.engine, "faults", None) is not None
+        # a dynamic link (RansCodec leg) makes the count DATA-dependent
+        # the same way faults do: the traced wire_bytes charges true
+        # entropy-coded sizes, so the loop fetches it per round.
+        # self.bytes_per_round stays the STATIC BOUND (buffer sizing /
+        # planning), with bound >= traced asserted in tests.
+        dynamic = getattr(self.engine, "dynamic", False)
         sched_bytes: list[int] = []
         if scheduled and not faulty:
             from . import wire as wire_lib
@@ -208,6 +214,8 @@ class FedSim:
             if faulty:
                 total_bytes += int(m["wire_bytes"])
                 total_time += float(m["round_time"])
+            elif dynamic:
+                total_bytes += int(m["wire_bytes"])
             elif scheduled:
                 total_bytes += sched_bytes[r - 1]
             else:

@@ -12,6 +12,21 @@ packed formats are ``bits/8`` bytes/element, delta legs add one fresh
 FP32 clip scalar per leaf, and FP32 legs are 4 bytes/element. Both uplink
 (P clients -> server) and downlink (server -> P clients) are counted,
 matching Figure 1 of the paper.
+
+Dynamic (entropy-coded) legs — the two-lane contract
+====================================================
+Every function in this module reports the STATIC lane
+(``codec.payload_nbytes``): for a fixed-size codec that IS the exact
+wire size, for a ``rans:``-wrapped leg it is the structural worst-case
+bound (what buffers are sized to). The true entropy-coded size of a
+dynamic leg is data-dependent and only exists inside the jitted round —
+the engine charges it through the traced ``wire_bytes`` metric
+(``codec.payload_nbytes_traced``), which FedSim accumulates per round.
+Bound >= traced holds by construction (asserted in
+tests/test_entropy.py), so the static numbers here remain safe
+capacity-planning ceilings; measured communication gains for dynamic
+links must use the traced ledger (``FedHistory.cumulative_bytes``),
+which is what ``benchmarks/format_ablation.py`` reports.
 """
 from __future__ import annotations
 

@@ -54,6 +54,7 @@ import numpy as np
 from ..core import fp8
 from ..core.fp8 import E4M3, FP8Format
 from . import fp8_matmul, fp8_quant
+from . import rans as rans_kernel
 
 Array = jax.Array
 
@@ -364,6 +365,31 @@ def quant_pack_sub_amax_tiles(
         )
     codes = fp8_quant.fold_codes(_quant_codes_jnp(x2, a2, key2, fmt), fmt)
     return codes, _rowmax_jnp(x2)
+
+
+# ---------------------------------------------------------------------------
+# Entropy-coded wire (core.entropy.RansCodec): static-table rANS decode
+# ---------------------------------------------------------------------------
+
+
+def rans_decode(buf: Array, state: Array, lens: Array, n: int,
+                freq: Array, cum: Array, slot2sym: Array) -> Array:
+    """Decode an interleaved-rANS byte stream back to (n,) symbols.
+
+    Kernel backends run the fused decoder (table + coded buffer in VMEM,
+    one ``fori_loop``); the jnp fallback is a ``lax.scan`` sharing the
+    same per-row step function, so symbols are bit-identical across
+    backends by construction (asserted in tests/test_entropy.py). The
+    ENCODER has no kernel form — it runs once per uplink payload on the
+    sender and is a plain ``lax.scan`` in ``kernels.rans``.
+    """
+    use, interp = _pallas_opts()
+    if use:
+        return rans_kernel.rans_decode_pallas(
+            buf, state, lens, n, freq, cum, slot2sym, interpret=interp
+        )
+    return rans_kernel.rans_decode_jnp(buf, state, lens, n, freq, cum,
+                                       slot2sym)
 
 
 # ---------------------------------------------------------------------------

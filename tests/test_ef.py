@@ -1,0 +1,355 @@
+"""Error-feedback codec (``core.ef``) — the first persistent per-client
+engine state.
+
+Covers the semantics pinned in the ``core.ef`` docstring:
+
+* residual CONTRACTION — iterating ``up_transit`` against a fixed model
+  keeps the memory bounded, and the time-averaged decode lands far
+  closer to the model than the biased one-shot det decode (the mechanism
+  by which ``ef:fp4_e2m1_det`` recovers fp32 parity);
+* engine threading — an EF uplink materializes ``ServerState.clients``
+  (zeros at init), a round updates EXACTLY the cohort's residual rows,
+  and legacy/non-EF engines keep ``clients == ()`` so their trace is
+  untouched;
+* fault interaction — residual rows change for every TRANSMITTED client
+  (including corrupted-but-rejected ones) and only those; an all-corrupt
+  round is discarded by the server yet still commits every cohort row
+  (client-side memory cannot see the server's checksum);
+* checkpoint — ``ServerState.clients`` rides the path-flattened
+  checkpoint, and a restored state continues bit-identically;
+* executors — chunked and 1D-sharded rounds reproduce the vmap round's
+  params AND residuals exactly;
+* byte accounting — EF adds nothing to the wire (static legs charge the
+  inner codec's bytes); ``ef:rans:*`` legs stay dynamic with traced
+  ``wire_bytes`` under the static bound;
+* eager validation — downlink EF, EF-over-delta, schedule membership,
+  async engine, 2D mesh, and the stateless protocol all refuse with
+  pointed messages.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint.manager import load_checkpoint, save_checkpoint
+from repro.core import metrics, wire
+from repro.core.codec import CodecSchedule, Fp32Codec, get_codec
+from repro.core.ef import (ClientState, ErrorFeedbackCodec, add_resid,
+                           flatten_q, init_client_state)
+from repro.core.engine import (ChunkedExecutor, FedConfig, RoundEngine,
+                               VmapExecutor)
+from repro.core.faults import FaultModel
+from repro.core.qat import QATConfig, clip_value_mask, weight_decay_mask
+from repro.data import partition_iid, synthetic_classification
+from repro.models import small
+
+
+def _mini_fed(down, up, n_clients=6, **cfg_kw):
+    xall, yall = synthetic_classification(0, 600, d=16, n_classes=4)
+    cx, cy, nk = partition_iid(xall, yall, k=n_clients, seed=0)
+    init, apply = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=16, n_classes=4)
+    loss = small.make_loss(apply)
+    opt = optim.sgd(0.05, wd_mask=weight_decay_mask(params),
+                    trust_mask=clip_value_mask(params))
+    cfg = FedConfig(n_clients=n_clients, participation=0.5, local_steps=2,
+                    batch_size=8, qat=QATConfig(), comm_mode="rand",
+                    down_codec=down, up_codec=up, **cfg_kw)
+    return (params, loss, opt, cfg,
+            (jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(nk)))
+
+
+def _trees_equal(a, b, msg=""):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
+                                      err_msg=msg)
+
+
+def _changed_rows(resid0, resid1):
+    return np.flatnonzero(
+        np.any(np.asarray(resid0) != np.asarray(resid1), axis=1))
+
+
+# --------------------------------------------------------------------------
+# plane helpers: flatten_q / add_resid are exact inverse moves
+# --------------------------------------------------------------------------
+def test_flatten_add_resid_roundtrip():
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(1), d_in=16, n_classes=4)
+    spec = wire.make_wire_spec(params)
+    e = jax.random.normal(jax.random.PRNGKey(2), (spec.total,)) * 0.01
+    comp = add_resid(params, e, spec)
+    np.testing.assert_allclose(
+        np.asarray(flatten_q(comp, spec)),
+        np.asarray(flatten_q(params, spec) + e), rtol=0, atol=1e-6)
+    # non-quantized leaves are untouched (EF covers the quantized plane)
+    leaves0 = jax.tree.leaves(params)
+    leaves1 = jax.tree.leaves(comp)
+    q = set(spec.q_slots)
+    for i, (l0, l1) in enumerate(zip(leaves0, leaves1)):
+        if i not in q:
+            np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+# --------------------------------------------------------------------------
+# the EF mechanism: contraction + bias removal
+# --------------------------------------------------------------------------
+def test_residual_contraction_and_debiasing():
+    """Iterating up_transit against a FIXED model: the residual norm must
+    stay bounded (contraction), and the time-averaged decode must beat
+    the one-shot biased det decode by a wide margin — this is the whole
+    point of EF (the fp4_e2m1_det cell craters without it)."""
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(3), d_in=16, n_classes=4)
+    spec = wire.make_wire_spec(params)
+    codec = get_codec("ef:fp4_e2m1_det")
+    P = 2
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (P,) + x.shape), params)
+    target = np.asarray(flatten_q(params, spec))
+
+    e = jnp.zeros((P, spec.total), jnp.float32)
+    transit = jax.jit(
+        lambda ks, ee: codec.up_transit(stacked, spec, ks, ee)[:2])
+    norms, acc = [], np.zeros_like(target)
+    T = 24
+    for t in range(T):
+        keys = jax.random.split(jax.random.PRNGKey(100 + t), P)
+        msgs, e = transit(keys, e)
+        norms.append(float(jnp.linalg.norm(e[0])))
+        acc += np.asarray(flatten_q(
+            jax.tree.map(lambda x: x[0], msgs), spec))
+    # bounded memory: after warmup the norm never outgrows its early band
+    assert np.isfinite(norms).all()
+    assert max(norms[T // 3:]) <= 1.5 * max(norms[: T // 3])
+
+    one_shot = codec.inner.decode(
+        codec.inner.encode(params, spec, jax.random.PRNGKey(0)), spec)
+    err_one = np.linalg.norm(
+        np.asarray(flatten_q(one_shot, spec)) - target)
+    err_avg = np.linalg.norm(acc / T - target)
+    assert err_one > 0
+    assert err_avg < 0.5 * err_one, (err_avg, err_one)
+
+
+# --------------------------------------------------------------------------
+# engine threading
+# --------------------------------------------------------------------------
+def test_ef_round_updates_exactly_cohort_rows():
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "ef:fp4_e2m1_det")
+    eng = RoundEngine(loss, opt, cfg)
+    assert eng.ef_up and not eng.dynamic
+    state = eng.init(params)
+    assert isinstance(state.clients, ClientState)
+    assert state.clients.resid.shape == (cfg.n_clients,
+                                         wire.make_wire_spec(params).total)
+    assert not np.any(np.asarray(state.clients.resid))
+    s1, m = jax.jit(eng.round_fn)(state, *data, jax.random.PRNGKey(7))
+    rows = _changed_rows(state.clients.resid, s1.clients.resid)
+    assert len(rows) == eng.cohort
+    # second round touches ITS cohort; untouched rows persist verbatim
+    s2, _ = jax.jit(eng.round_fn)(s1, *data, jax.random.PRNGKey(8))
+    rows2 = _changed_rows(s1.clients.resid, s2.clients.resid)
+    assert 0 < len(rows2) <= eng.cohort
+
+
+def test_non_ef_engine_keeps_clients_empty():
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "fp4_e2m1_det")
+    eng = RoundEngine(loss, opt, cfg)
+    assert not eng.ef_up
+    state = eng.init(params)
+    assert state.clients == ()
+    s1, _ = jax.jit(eng.round_fn)(state, *data, jax.random.PRNGKey(7))
+    assert s1.clients == ()
+
+
+def test_ef_static_bytes_equal_inner():
+    """EF adds nothing to the wire: the static engine charges exactly the
+    inner codec's leg and the traced wire_bytes agrees."""
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "ef:fp4_e2m1_det")
+    _, _, _, plain_cfg, _ = _mini_fed("e4m3", "fp4_e2m1_det")
+    assert (metrics.round_bytes_for(params, cfg)
+            == metrics.round_bytes_for(params, plain_cfg))
+    eng = RoundEngine(loss, opt, cfg)
+    _, m = jax.jit(eng.round_fn)(eng.init(params), *data,
+                                 jax.random.PRNGKey(0))
+    assert int(m["wire_bytes"]) == eng.round_bytes(params)
+
+
+def test_ef_rans_traced_under_bound():
+    """The ef+rans stack keeps the two-lane contract: dynamic engine,
+    0 < traced wire_bytes <= static bound."""
+    params, loss, opt, cfg, data = _mini_fed("rans:e4m3",
+                                             "ef:rans:fp4_e2m1_det")
+    eng = RoundEngine(loss, opt, cfg)
+    assert eng.ef_up and eng.dynamic
+    bound = eng.round_bytes(params)
+    assert bound == metrics.round_bytes_for(params, cfg)
+    state = eng.init(params)
+    rf = jax.jit(eng.round_fn)
+    for r in range(2):
+        state, m = rf(state, *data, jax.random.PRNGKey(20 + r))
+        wb = float(m["wire_bytes"])
+        assert 0 < wb <= bound, (r, wb, bound)
+
+
+# --------------------------------------------------------------------------
+# faults: residual commit follows TRANSMISSION, not acceptance
+# --------------------------------------------------------------------------
+def test_ef_faults_residual_rows_match_transmitted():
+    params, loss, opt, cfg, data = _mini_fed(
+        "e4m3", "ef:fp4_e2m1_det", faults=FaultModel(dropout=0.5))
+    eng = RoundEngine(loss, opt, cfg)
+    rf = jax.jit(eng.round_fn)
+    state = eng.init(params)
+    seen = set()
+    for seed in range(8):
+        s1, m = rf(state, *data, jax.random.PRNGKey(seed))
+        n_tx = int(m["n_transmitted"])
+        rows = _changed_rows(state.clients.resid, s1.clients.resid)
+        assert len(rows) == n_tx, (seed, len(rows), n_tx)
+        seen.add(n_tx)
+    assert len(seen) > 1, "dropout=0.5 over 8 seeds should vary the count"
+
+
+def test_ef_all_corrupt_round_discarded_but_residuals_commit():
+    """corrupt=1.0: every client transmits, the server rejects every
+    payload and discards the round (params/opt untouched) — yet ALL
+    cohort residual rows commit: the memory is client-side and the
+    client cannot observe the server's checksum reject."""
+    params, loss, opt, cfg, data = _mini_fed(
+        "e4m3", "ef:fp4_e2m1_det", faults=FaultModel(corrupt=1.0))
+    eng = RoundEngine(loss, opt, cfg)
+    state = eng.init(params)
+    s1, m = jax.jit(eng.round_fn)(state, *data, jax.random.PRNGKey(5))
+    P = eng.cohort
+    assert int(m["n_transmitted"]) == P and int(m["n_alive"]) == 0
+    assert int(m["round_ok"]) == 0
+    _trees_equal(state.params, s1.params, "discarded round moved params")
+    _trees_equal(state.opt, s1.opt, "discarded round moved aggregator")
+    rows = _changed_rows(state.clients.resid, s1.clients.resid)
+    assert len(rows) == P
+
+
+# --------------------------------------------------------------------------
+# checkpoint: ServerState.clients rides the path-flattened tree
+# --------------------------------------------------------------------------
+def test_ef_state_checkpoint_roundtrip(tmp_path):
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "ef:fp4_e2m1_det")
+    eng = RoundEngine(loss, opt, cfg)
+    rf = jax.jit(eng.round_fn)
+    state = eng.init(params)
+    for r in range(2):
+        state, _ = rf(state, *data, jax.random.PRNGKey(r))
+    assert np.any(np.asarray(state.clients.resid))
+    save_checkpoint(str(tmp_path), 2, state, extra={"round": 2})
+    restored, manifest = load_checkpoint(str(tmp_path), eng.init(params))
+    assert manifest["extra"]["round"] == 2
+    _trees_equal(state, restored, "checkpoint roundtrip")
+    # the restored state continues bit-identically (residuals included)
+    sa, _ = rf(state, *data, jax.random.PRNGKey(9))
+    sb, _ = rf(restored, *data, jax.random.PRNGKey(9))
+    _trees_equal(sa, sb, "restored state diverged")
+
+
+# --------------------------------------------------------------------------
+# executor parity
+# --------------------------------------------------------------------------
+def test_ef_chunked_matches_vmap():
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "ef:fp4_e2m1_det")
+    key = jax.random.PRNGKey(17)
+    outs = []
+    for ex in (VmapExecutor(), ChunkedExecutor(2)):
+        eng = RoundEngine(loss, opt, cfg, executor=ex)
+        s, _ = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+        outs.append(s)
+    _trees_equal(outs[0].params, outs[1].params, "chunked params diverged")
+    np.testing.assert_array_equal(np.asarray(outs[0].clients.resid),
+                                  np.asarray(outs[1].clients.resid),
+                                  err_msg="chunked residuals diverged")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >=2 devices")
+def test_ef_sharded_matches_vmap():
+    from repro.launch.mesh import make_client_mesh
+
+    params, loss, opt, cfg, data = _mini_fed("e4m3", "ef:fp4_e2m1_det")
+    key = jax.random.PRNGKey(23)
+    ref_eng = RoundEngine(loss, opt, cfg, executor=VmapExecutor())
+    s_ref, m_ref = jax.jit(ref_eng.round_fn)(ref_eng.init(params), *data,
+                                             key)
+    sh_cfg = dc.replace(cfg, mesh=make_client_mesh(2))
+    eng = RoundEngine(loss, opt, sh_cfg)
+    assert eng.ef_up
+    s_sh, m_sh = jax.jit(eng.round_fn)(eng.init(params), *data, key)
+    _trees_equal(s_ref.params, s_sh.params, "sharded params diverged")
+    np.testing.assert_array_equal(np.asarray(s_ref.clients.resid),
+                                  np.asarray(s_sh.clients.resid),
+                                  err_msg="sharded residuals diverged")
+    assert int(m_ref["wire_bytes"]) == int(m_sh["wire_bytes"])
+
+
+# --------------------------------------------------------------------------
+# eager validation
+# --------------------------------------------------------------------------
+def test_registry_names_and_defaults():
+    assert get_codec("ef").tag == "ef:e4m3"
+    assert get_codec("ef:fp4_e2m1_det").tag == "ef:fp4_e2m1_det"
+    assert get_codec("ef:rans:fp4_e2m1_det").tag == "ef:rans:fp4_e2m1_det"
+
+
+def test_ef_rejects_delta_inner():
+    with pytest.raises(ValueError, match="competing"):
+        get_codec("ef:delta:e4m3")
+    with pytest.raises(ValueError, match="competing"):
+        get_codec("ef:rans:delta:e4m3")
+    with pytest.raises(ValueError, match="grid codec"):
+        ErrorFeedbackCodec(Fp32Codec())
+
+
+def test_ef_stateless_protocol_refuses():
+    init, _ = small.REGISTRY["mlp"]
+    params = init(jax.random.PRNGKey(0), d_in=16, n_classes=4)
+    spec = wire.make_wire_spec(params)
+    c = get_codec("ef:e4m3_det")
+    key = jax.random.PRNGKey(0)
+    for call in (lambda: c.encode(params, spec, key),
+                 lambda: c.decode({}, spec),
+                 lambda: c.fake_quant(params, spec, key)):
+        with pytest.raises(ValueError, match="up_transit"):
+            call()
+
+
+def test_ef_rejected_on_downlink():
+    params, loss, opt, _, _ = _mini_fed("e4m3", "e4m3")
+    with pytest.raises(ValueError, match="downlink"):
+        cfg = FedConfig(n_clients=6, participation=0.5, local_steps=2,
+                        batch_size=8, down_codec="ef:e4m3_det",
+                        up_codec="e4m3")
+        RoundEngine(loss, opt, cfg)
+
+
+def test_codec_schedule_rejects_ef():
+    with pytest.raises(ValueError, match="stateful"):
+        CodecSchedule(("e4m3", "ef:e4m3_det"), (5,))
+
+
+def test_async_engine_rejects_ef():
+    from repro.core.async_engine import AsyncConfig, BufferedAsyncEngine
+
+    params, loss, opt, cfg, _ = _mini_fed("e4m3", "ef:e4m3_det")
+    with pytest.raises(ValueError, match="ErrorFeedbackCodec"):
+        BufferedAsyncEngine(loss, opt, cfg, AsyncConfig(buffer_size=2))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs >=4 devices")
+def test_fed2d_mesh_rejects_ef():
+    from repro.launch.mesh import make_fed_mesh
+
+    params, loss, opt, cfg, _ = _mini_fed("e4m3", "ef:e4m3_det")
+    cfg = dc.replace(cfg, mesh=make_fed_mesh(2, 2), model_axis="fsdp")
+    with pytest.raises(ValueError, match="clients x fsdp"):
+        RoundEngine(loss, opt, cfg)

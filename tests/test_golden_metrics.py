@@ -95,6 +95,17 @@ VARIANTS = {
         comm_mode="rand", qat=QATConfig(),
         codec_schedule=CodecSchedule(("e5m2", "fp4"), (1,)),
     ),
+    # --- compression-research variants (ISSUE 10): EF + entropy wire ----
+    # wire_bytes of the rans variants pins the TRACED (entropy-coded)
+    # ledger — data-dependent but deterministic in the seed
+    "ef_fp4_det_mean": dict(comm_mode="rand", qat=QATConfig(),
+                            up_codec="ef:fp4_e2m1_det"),
+    "rans_delta_fp4_mean": dict(comm_mode="rand", qat=QATConfig(),
+                                down_codec="rans:fp4_e2m1",
+                                up_codec="rans:delta:fp4_e2m1"),
+    "ef_rans_fp4_det_mean": dict(comm_mode="rand", qat=QATConfig(),
+                                 down_codec="rans:fp4_e2m1",
+                                 up_codec="ef:rans:fp4_e2m1_det"),
     # --- scaling-policy variants (ISSUE 8): delayed / frozen wires ------
     "delayed_wire_mean": dict(comm_mode="rand", qat=QATConfig(),
                               down_scaling="delayed:4",
